@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` ids map to ModelConfigs here."""
+from __future__ import annotations
+
+from .base import MeshConfig, ModelConfig, RunConfig, ShapeConfig
+from .shapes import SHAPES, applicable, cells
+
+from .llama_3_2_vision_11b import CONFIG as LLAMA_3_2_VISION_11B
+from .mistral_nemo_12b import CONFIG as MISTRAL_NEMO_12B
+from .llama3_2_1b import CONFIG as LLAMA3_2_1B
+from .starcoder2_15b import CONFIG as STARCODER2_15B
+from .llama3_2_3b import CONFIG as LLAMA3_2_3B
+from .whisper_tiny import CONFIG as WHISPER_TINY
+from .mamba2_370m import CONFIG as MAMBA2_370M
+from .llama4_scout_17b_a16e import CONFIG as LLAMA4_SCOUT_17B_A16E
+from .grok_1_314b import CONFIG as GROK_1_314B
+from .hymba_1_5b import CONFIG as HYMBA_1_5B
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        LLAMA_3_2_VISION_11B,
+        MISTRAL_NEMO_12B,
+        LLAMA3_2_1B,
+        STARCODER2_15B,
+        LLAMA3_2_3B,
+        WHISPER_TINY,
+        MAMBA2_370M,
+        LLAMA4_SCOUT_17B_A16E,
+        GROK_1_314B,
+        HYMBA_1_5B,
+    )
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "MeshConfig",
+    "ModelConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "applicable",
+    "cells",
+    "get_arch",
+    "get_shape",
+]

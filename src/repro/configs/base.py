@@ -1,0 +1,273 @@
+"""Config system: frozen dataclasses for model / shape / mesh / run configs.
+
+Every assigned architecture gets one file in this package defining a
+``ModelConfig`` with the exact published numbers. Reduced ("smoke") variants
+are derived via :meth:`ModelConfig.smoke` for CPU tests; the full configs are
+exercised only through the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters.
+
+    ``family`` selects the model builder in ``models/registry.py``:
+      dense | moe | ssm | hybrid | vlm | audio
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    d_inner: int = 0
+    conv_width: int = 4
+    ssd_chunk: int = 256
+
+    # --- attention flavour ---
+    sliding_window: int = 0            # 0 = full attention
+    global_layers: tuple[int, ...] = ()  # layers that stay full-attn when SWA
+    cross_attn_layers: tuple[int, ...] = ()  # VLM image cross-attention layers
+    num_encoder_layers: int = 0        # enc-dec (audio) encoder depth
+    context_len: int = 0               # stub-frontend context length (vlm/audio)
+
+    # --- misc ---
+    mlp_act: str = "swiglu"            # swiglu | gelu
+    norm: str = "rmsnorm"              # rmsnorm | layernorm
+    pos_emb: str = "rope"              # rope | learned | none
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM / hybrid-SWA archs)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    def param_count(self) -> int:
+        """Total parameter count (closed form, matches the model builders)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        n_embed = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = self._params_per_layer()
+        enc = self.num_encoder_layers * self._params_per_layer(encoder=True)
+        return n_embed + L * per_layer + enc + d  # + final norm
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        n_embed = V * d * (1 if self.tie_embeddings else 2)
+        attn = self._attn_params()
+        ff_active = self._ff_params() * (
+            (self.top_k + (1 if self.shared_expert else 0)) / max(self.num_experts, 1)
+        ) * self.num_experts / (self.top_k + (1 if self.shared_expert else 0)) \
+            if False else self._ff_params()  # per-expert params
+        active_ff = ff_active * (self.top_k + (1 if self.shared_expert else 0))
+        router = d * self.num_experts
+        norms = 2 * d
+        return n_embed + L * (attn + active_ff + router + norms) + d
+
+    # -- internals ------------------------------------------------------
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        return q + kv + o
+
+    def _ff_params(self) -> int:
+        d = self.d_model
+        if self.d_ff == 0:
+            return 0
+        mult = 3 if self.mlp_act == "swiglu" else 2
+        return mult * d * self.d_ff
+
+    def _ssm_params(self) -> int:
+        if self.ssm_state == 0:
+            return 0
+        d, di, ns = self.d_model, self.d_inner, self.ssm_state
+        nh = self.ssm_heads
+        in_proj = d * (2 * di + 2 * ns + nh)   # x, z, B, C, dt
+        conv = (di + 2 * ns) * self.conv_width
+        out_proj = di * d
+        return in_proj + conv + out_proj + 2 * nh  # + A_log, D
+
+    def _params_per_layer(self, encoder: bool = False) -> int:
+        norms = 2 * self.d_model
+        if self.family == "ssm":
+            return self._ssm_params() + norms
+        attn = self._attn_params()
+        ff = self._ff_params()
+        if self.family == "moe" and not encoder:
+            ff = ff * self.num_experts + (self._ff_params() if self.shared_expert else 0)
+            ff += self.d_model * self.num_experts  # router
+        if self.family == "hybrid":
+            return attn + self._ssm_params() + ff + norms + self.d_model
+        if self.family == "vlm" and not encoder:
+            # cross-attn layers add one extra attention + norm
+            frac = len(self.cross_attn_layers) / max(self.num_layers, 1)
+            return int(attn + ff + norms + frac * (self._attn_params() + self.d_model))
+        if self.is_enc_dec and not encoder:
+            return 2 * attn + ff + 3 * self.d_model  # self + cross attn
+        return attn + ff + norms
+
+    # ------------------------------------------------------------------
+    def smoke(self, **overrides: Any) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        base = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            head_dim=32,
+            d_ff=0 if self.d_ff == 0 else 256,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_heads=4 if self.ssm_heads else 0,
+            ssm_head_dim=32 if self.ssm_heads else 64,
+            d_inner=128 if self.d_inner else 0,
+            ssd_chunk=32,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            global_layers=tuple(g for g in self.global_layers if g < 2),
+            cross_attn_layers=(1,) if self.cross_attn_layers else (),
+            num_encoder_layers=min(self.num_encoder_layers, 2),
+            context_len=min(self.context_len, 32) if self.context_len else 0,
+            name=self.name + "-smoke",
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Logical device mesh. Axes are ordered (pod?, data, model)."""
+
+    data: int = 16
+    model: int = 16
+    pod: int = 1
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return ("pod", "data", "model") if self.pod > 1 else ("data", "model")
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.pod, self.data, self.model) if self.pod > 1 else (self.data, self.model)
+
+    @property
+    def num_devices(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        """Axes that carry data parallelism (batch + grad reduction)."""
+        return ("pod", "data") if self.pod > 1 else ("data",)
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything the launcher needs for one run / dry-run cell."""
+
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+
+    backend: str = "floo"          # floo | xla  (collective backend)
+    use_sp: bool = True            # sequence parallelism for norms/residuals
+    microbatches: int = 1          # gradient accumulation steps
+    remat: str = "layer"           # none | layer | full
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    grad_dtype: str = "bfloat16"   # dtype for cross-replica grad reduction
+    optimizer: str = "adamw"
+    opt_state_bits: int = 32       # 32 or 8 (block-quantized m/v)
+    grad_compression: str = "none" # none | int8-pod (error-feedback int8 on pod axis)
+    wide_flit_bytes: int = 65536   # narrow/wide traffic classification threshold
+    collective_chunks: int = 1     # chunked/windowed wide transfers (NI window)
+    bidir_rings: bool = False      # use both ring directions (duplex links)
+    overlap_matmul: bool = False   # wormhole-pipelined collective matmuls
+    param_sharding: str = "fsdp"   # fsdp | replicated (over the data axis)
+    flat_dp: bool = False          # collapse TP: whole mesh is DP + FSDP
+                                   # (small archs; see EXPERIMENTS §Perf)
+
+    @property
+    def tp_size(self) -> int:
+        """Effective tensor-parallel degree (model axis role)."""
+        return 1 if self.flat_dp else self.mesh.model
+
+    @property
+    def dp_axes_eff(self) -> tuple[str, ...]:
+        """Axes carrying batch shards (includes 'model' under flat_dp)."""
+        return self.mesh.dp_axes + (("model",) if self.flat_dp else ())
+
+    @property
+    def fsdp_axes(self) -> tuple[str, ...]:
+        """Axes FSDP-sharding the parameters (dim-ordered for ring gathers)."""
+        if self.param_sharding != "fsdp":
+            return ()
+        return ("model", "data") if self.flat_dp else ("data",)
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    seed: int = 0
+
+    def replace(self, **kw: Any) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def pretty(cfg: Any) -> str:
+    if dataclasses.is_dataclass(cfg):
+        d: Mapping[str, Any] = dataclasses.asdict(cfg)
+        return "\n".join(f"  {k}: {v}" for k, v in d.items())
+    return str(cfg)

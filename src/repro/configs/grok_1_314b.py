@@ -1,0 +1,28 @@
+"""grok-1-314b [moe] — 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2.
+
+[hf:xai-org/grok-1; unverified]
+Trained/served with 8-bit optimizer states in this framework so one v5e pod
+fits the optimizer (see DESIGN.md §7).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    top_k=2,
+    capacity_factor=1.25,
+    mlp_act="swiglu",  # grok-1 uses a gated 3-matrix MLP; yields ~314B total
+    norm="rmsnorm",
+    pos_emb="rope",
+    rope_theta=10_000.0,
+    logit_softcap=30.0,
+)

@@ -1,0 +1,32 @@
+"""hymba-1.5b [hybrid] — 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16 — parallel attn+mamba heads within each block.
+
+[arXiv:2411.13676; hf]
+Sliding-window attention everywhere except 3 global layers (first/middle/last),
+making the arch sub-quadratic and eligible for long_500k.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_heads=25,
+    ssm_head_dim=64,
+    d_inner=1600,
+    conv_width=4,
+    ssd_chunk=256,
+    sliding_window=1024,
+    global_layers=(0, 15, 31),
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    pos_emb="rope",
+    rope_theta=10_000.0,
+)

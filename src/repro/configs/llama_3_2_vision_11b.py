@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+
+Cross-attn image layers every 5th layer (8 of 40).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings of shape (B, context_len, d_model).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    cross_attn_layers=(3, 8, 13, 18, 23, 28, 33, 38),
+    context_len=1024,          # stub image-patch tokens
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    pos_emb="rope",
+    rope_theta=500_000.0,
+)

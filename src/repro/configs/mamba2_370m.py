@@ -1,0 +1,28 @@
+"""mamba2-370m [ssm] — 48L d_model=1024 (attn-free) vocab=50280, ssm_state=128.
+
+SSD (state-space duality). [arXiv:2405.21060; unverified]
+d_inner = 2*d_model, 32 SSD heads of dim 64, conv width 4.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_heads=32,
+    ssm_head_dim=64,
+    d_inner=2048,
+    conv_width=4,
+    ssd_chunk=256,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    pos_emb="none",
+    tie_embeddings=True,
+)

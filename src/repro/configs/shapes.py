@@ -1,0 +1,28 @@
+"""Assigned input-shape cells (same four for every LM-family arch).
+
+``long_500k`` lowers only for sub-quadratic archs (SSM / hybrid); the pure
+full-attention archs record a documented SKIP (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from .base import ModelConfig, ShapeConfig
+
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES: dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def applicable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether a (arch, shape) cell is runnable; reason if not."""
+    if shape.name == "long_500k" and not model.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention; skipped for full-attention arch"
+    return True, ""
+
+
+def cells(model: ModelConfig) -> list[ShapeConfig]:
+    return [s for s in SHAPES.values() if applicable(model, s)[0]]

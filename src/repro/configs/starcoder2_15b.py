@@ -1,0 +1,23 @@
+"""starcoder2-15b [dense] — 40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+
+GQA, RoPE. [arXiv:2402.19173; hf]
+StarCoder2 uses LayerNorm + GELU MLP (not RMSNorm/SwiGLU).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_act="gelu",
+    norm="layernorm",
+    pos_emb="rope",
+    rope_theta=100_000.0,
+    sliding_window=4096,
+)

@@ -1,0 +1,25 @@
+"""whisper-tiny [audio] — 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+
+Encoder-decoder; conv frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, S, d_model).
+[arXiv:2212.04356; unverified]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,              # decoder layers
+    num_encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp_act="gelu",
+    norm="layernorm",
+    pos_emb="learned",
+    context_len=4096,          # stub audio-frame context (matched to shape.seq_len)
+    tie_embeddings=True,
+)

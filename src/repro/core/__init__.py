@@ -1,0 +1,2 @@
+"""FlooNoC-derived communication core (see DESIGN.md §2)."""
+from . import channels, flit, ni, routing  # noqa: F401

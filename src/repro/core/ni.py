@@ -1,0 +1,96 @@
+"""Network-interface semantics: outstanding transactions + e2e flow control.
+
+FlooNoC's NI injects a request only when the Reorder Buffer has space for the
+response (end-to-end flow control), and keeps multiple transactions in
+flight to hide latency. The SPMD analogue:
+
+* a *transaction* = one chunked collective (ring RS/AG of one bucket);
+* *multiple outstanding transactions* = several chunk collectives with no
+  data dependence, which XLA schedules concurrently (async collectives on
+  TPU) and overlaps with compute;
+* *ROB capacity / flow control* = an explicit bound on how many chunks may
+  be simultaneously un-ordered, enforced with ``lax.optimization_barrier``
+  every ``window`` chunks — chunk ``i+window`` cannot issue before chunk
+  ``i`` completed, exactly like a request stalling on ROB space.
+
+The paper's ROB bypass rule (deterministic routing => same-destination
+responses arrive in order) is what makes the static ring schedules of
+``core/routing.py`` legal with *zero* reordering logic: XLA program order is
+the deterministic route.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import routing
+
+
+@dataclass(frozen=True)
+class TransactionWindow:
+    """ROB-capacity model: at most `window` chunk transfers in flight."""
+    chunks: int = 1
+    window: int = 2
+
+    @property
+    def rob_bytes_per_flit(self) -> Callable[[int], int]:
+        return lambda total: (total // max(self.chunks, 1)) * self.window
+
+
+def windowed_transactions(
+    thunks: Sequence[Callable[[], jax.Array]],
+    window: int,
+) -> list[jax.Array]:
+    """Run transfer thunks with at most `window` outstanding (flow control).
+
+    Dependencies are injected with ``optimization_barrier``: thunk i+window
+    is data-dependent on thunk i's completion token, so the compiler cannot
+    hoist more than `window` transfers into flight — the software ROB.
+    """
+    results: list[jax.Array] = []
+    for i, thunk in enumerate(thunks):
+        if window > 0 and i >= window:
+            # gate on the (i-window)-th completion: zero-cost token dependence
+            token = results[i - window]
+            gated = lax.optimization_barrier((token,))[0]
+            # re-materialize the gated value so later uses see the barrier
+            results[i - window] = gated
+        results.append(thunk())
+    return results
+
+
+def chunked_all_reduce(
+    x: jax.Array,
+    axes: Sequence[tuple[str, int]],
+    *,
+    chunks: int = 4,
+    window: int = 2,
+    bidir: bool = False,
+) -> jax.Array:
+    """All-reduce a flat buffer as `chunks` outstanding ring transactions.
+
+    Chunking bounds the ROB (working buffer) to window*chunk bytes while
+    still keeping the links busy — the NI's sustained-dataflow sizing rule
+    (the paper sizes the wide ROB to 2 outstanding max-burst transactions).
+    """
+    total = 1
+    for _, s in axes:
+        total *= s
+    if total == 1 or chunks <= 1:
+        return routing.dim_ordered_all_reduce(x, axes, dim=0, bidir=bidir)
+    n = x.shape[0]
+    per = -(-n // chunks)
+    per += (-per) % (total * (2 if bidir else 1))   # flit-align each chunk
+    pads = chunks * per - n
+    xp = jnp.pad(x, (0, pads)) if pads else x
+    parts = [lax.dynamic_slice_in_dim(xp, i * per, per) for i in range(chunks)]
+    thunks = [
+        (lambda p=p: routing.dim_ordered_all_reduce(p, axes, dim=0, bidir=bidir))
+        for p in parts
+    ]
+    outs = windowed_transactions(thunks, window)
+    return jnp.concatenate(outs)[:n]

@@ -1,0 +1,4 @@
+from .energy import PAPER, PAPER_CLAIMS, FlooNoCModel  # noqa: F401
+from .mesh_sim import SimConfig, run_sim  # noqa: F401
+from .router import NetState, init_state, network_step, xy_route  # noqa: F401
+from .traffic import fig5_traffic, uniform_random  # noqa: F401

@@ -1,0 +1,78 @@
+"""Analytic area / energy / bandwidth model, parameterized by the paper.
+
+All published quantities (§V, §VI, Table I/II, Fig. 6):
+  * 12nm FinFET, 1.23 GHz typical corner, 70 FO4 delay
+  * links: narrow_req 119b, narrow_rsp 103b, wide 603b (duplex channel
+    ~1600 wires + ~100%-utilized two metal layers -> 120 um channel slice)
+  * wide link peak: 512b payload x 1.23 GHz = 629 Gbps (1.26 Tbps duplex)
+  * energy: 0.19 pJ/B/hop (198 pJ to move 1 kB across one tile)
+  * area: NoC ~500 kGE of a ~5 MGE tile (10%); tile power 139 mW during a
+    1 kB DMA, NoC share 7%
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FlooNoCModel:
+    freq_ghz: float = 1.23
+    wide_payload_bits: int = 512
+    narrow_payload_bits: int = 64
+    link_bits_narrow_req: int = 119
+    link_bits_narrow_rsp: int = 103
+    link_bits_wide: int = 603
+    pj_per_byte_hop: float = 0.19
+    tile_area_mge: float = 5.0
+    noc_area_kge: float = 500.0
+    tile_power_mw: float = 139.0
+    noc_power_frac: float = 0.07
+    tile_mm: float = 1.0
+
+    # -- bandwidth ----------------------------------------------------------
+    def wide_link_gbps(self) -> float:
+        """Peak payload bandwidth of one wide link direction."""
+        return self.wide_payload_bits * self.freq_ghz           # Gbps
+
+    def wide_link_duplex_tbps(self) -> float:
+        return 2 * self.wide_link_gbps() / 1e3
+
+    def mesh_boundary_bandwidth_tbs(self, nx: int, ny: int) -> float:
+        """Aggregate duplex payload bandwidth crossing the mesh boundary
+        (memory controllers on all four sides, as in Fig. 4a)."""
+        edge_links = 2 * (nx + ny)
+        bytes_per_s = edge_links * 2 * self.wide_link_gbps() / 8  # GB/s
+        return bytes_per_s / 1e3                                  # TB/s
+
+    # -- energy ---------------------------------------------------------------
+    def energy_pj(self, n_bytes: int, hops: int) -> float:
+        return self.pj_per_byte_hop * n_bytes * hops
+
+    # -- area -----------------------------------------------------------------
+    def noc_area_fraction(self) -> float:
+        return self.noc_area_kge / (self.tile_area_mge * 1000.0)
+
+    def duplex_channel_wires(self) -> int:
+        return 2 * (self.link_bits_narrow_req + self.link_bits_narrow_rsp
+                    + self.link_bits_wide)
+
+    def routing_channel_um(self, wire_pitch_um: float = 0.15,
+                           layers: int = 2, margin: float = 1.25) -> float:
+        """Width of the physical routing channel slice (paper: ~120 um)."""
+        wires = self.duplex_channel_wires()
+        return wires * wire_pitch_um / layers * margin
+
+
+PAPER = FlooNoCModel()
+
+PAPER_CLAIMS = {
+    "wide_link_gbps": 629.0,
+    "wide_link_duplex_tbps": 1.26,
+    "mesh7x7_boundary_tbs": 4.4,
+    "pj_per_byte_hop": 0.19,
+    "zero_load_round_trip_cycles": 18,
+    "noc_area_fraction": 0.10,
+    "noc_power_fraction": 0.07,
+    "eff_bandwidth_utilization": 0.85,
+    "wide_only_latency_degradation_x": 5.0,
+}

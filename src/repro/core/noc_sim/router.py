@@ -1,0 +1,201 @@
+"""Vectorized cycle-level model of one FlooNoC physical network.
+
+Faithful to §III-C / §V of the paper:
+* input-buffered routers (depth-2 FIFO, registered ready/valid backpressure,
+  full throughput),
+* **two-cycle router**: an output elastic buffer (register) per port — the
+  configuration the paper uses to close timing on the long physical routing
+  channels (zero-load: 4 traversals x 2 cycles = 8 router cycles per
+  round trip),
+* XY dimension-ordered routing on a (non-torus) mesh,
+* round-robin output arbitration,
+* no virtual channels — each physical link (narrow_req / narrow_rsp / wide)
+  is its own complete network instance,
+* single-flit packets (header bits travel on parallel lines, no
+  header/tail flits).
+
+State layout (R = nx*ny routers, P = 5 ports [N,E,S,W,Local], D fifo depth,
+F flit fields):
+  fifo    : (R, P, D, F) int32   input FIFOs, slot 0 = head
+  count   : (R, P)       int32   input occupancy
+  rr_ptr  : (R, P)       int32   round-robin pointer per OUT port
+  oreg    : (R, P, F)    int32   output elastic buffer
+  oreg_v  : (R, P)       bool
+
+Flit fields: [dest_router, src_router, inject_time, kind, txn_id, beat]
+The per-cycle update (`network_step`) is the hot loop — mirrored by the
+Pallas kernel in ``kernels/noc_router.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_PORTS = 5
+PORT_N, PORT_E, PORT_S, PORT_W, PORT_L = range(5)
+F_DEST, F_SRC, F_TIME, F_KIND, F_TXN, F_BEAT = range(6)
+N_FIELDS = 6
+NO_PORT = 9
+
+
+class NetState(NamedTuple):
+    fifo: jax.Array     # (R, P, D, F)
+    count: jax.Array    # (R, P)
+    rr_ptr: jax.Array   # (R, P)
+    oreg: jax.Array     # (R, P, F)
+    oreg_v: jax.Array   # (R, P)
+    lock_in: jax.Array  # (R, P) wormhole: input port holding each output (-1)
+
+
+def init_state(nx: int, ny: int, depth: int = 2) -> NetState:
+    R = nx * ny
+    return NetState(
+        fifo=jnp.zeros((R, N_PORTS, depth, N_FIELDS), jnp.int32),
+        count=jnp.zeros((R, N_PORTS), jnp.int32),
+        rr_ptr=jnp.zeros((R, N_PORTS), jnp.int32),
+        oreg=jnp.zeros((R, N_PORTS, N_FIELDS), jnp.int32),
+        oreg_v=jnp.zeros((R, N_PORTS), jnp.bool_),
+        lock_in=jnp.full((R, N_PORTS), -1, jnp.int32),
+    )
+
+
+def _geometry(nx: int, ny: int):
+    """Static neighbor tables: nbr[r, out_port] = neighbor router (or -1),
+    opp[out_port] = neighbor's input port."""
+    R = nx * ny
+    nbr = np.full((R, N_PORTS), -1, np.int64)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        if y > 0:
+            nbr[r, PORT_N] = r - nx
+        if x < nx - 1:
+            nbr[r, PORT_E] = r + 1
+        if y < ny - 1:
+            nbr[r, PORT_S] = r + nx
+        if x > 0:
+            nbr[r, PORT_W] = r - 1
+    opp = np.array([PORT_S, PORT_W, PORT_N, PORT_E, PORT_L])
+    return nbr, opp
+
+
+def xy_route(dest: jax.Array, r_idx: jax.Array, nx: int) -> jax.Array:
+    """XY dimension-ordered output port for a flit at router r_idx."""
+    x, y = r_idx % nx, r_idx // nx
+    dx, dy = dest % nx, dest // nx
+    return jnp.where(
+        dx > x, PORT_E,
+        jnp.where(dx < x, PORT_W,
+                  jnp.where(dy > y, PORT_S,
+                            jnp.where(dy < y, PORT_N, PORT_L))))
+
+
+def network_step(state: NetState, inject_valid: jax.Array,
+                 inject_flit: jax.Array, nx: int, ny: int):
+    """One cycle of one network (two-cycle router: input FIFO -> output
+    register -> link).
+
+    inject_valid: (R,) bool — NI wants to push a flit into its Local port.
+    inject_flit:  (R, F) int32.
+    Returns (new_state, inject_ok (R,), deliver_valid (R,),
+             deliver_flit (R, F), link_moves scalar).
+    """
+    R = nx * ny
+    D = state.fifo.shape[2]
+    nbr_np, opp_np = _geometry(nx, ny)
+    nbr = jnp.asarray(nbr_np)
+
+    heads = state.fifo[:, :, 0, :]                    # (R, P, F)
+    head_valid = state.count > 0                      # (R, P)
+    r_idx = jnp.arange(R)
+
+    # ---------------- phase A: drain output registers -----------------------
+    # downstream input-FIFO occupancy (registered, cycle start)
+    nbr_count = state.count[jnp.clip(nbr, 0, R - 1)]              # (R,P,P_in)
+    ds_count = jnp.stack(
+        [nbr_count[:, o, opp_np[o]] for o in range(N_PORTS)], axis=1)
+    can_drain = jnp.where(jnp.arange(N_PORTS)[None, :] == PORT_L,
+                          True,                     # Local: NI always sinks
+                          (nbr >= 0) & (ds_count < D))            # (R, P)
+    drain = state.oreg_v & can_drain
+
+    deliver_valid = drain[:, PORT_L]
+    deliver_flit = state.oreg[:, PORT_L, :]
+
+    # pushes into neighbor input FIFOs (one per input port max — one link)
+    recv_valid = jnp.zeros((R, N_PORTS), jnp.bool_)
+    recv_flit = jnp.zeros((R, N_PORTS, N_FIELDS), jnp.int32)
+    tgt_r = jnp.where(nbr >= 0, nbr, 0)
+    for o in range(N_PORTS - 1):   # N,E,S,W
+        v = drain[:, o]
+        recv_valid = recv_valid.at[tgt_r[:, o], opp_np[o]].max(v)
+        recv_flit = recv_flit.at[tgt_r[:, o], opp_np[o]].add(
+            jnp.where(v[:, None], state.oreg[:, o, :], 0))
+
+    # NI injection into Local input port (cycle-start occupancy)
+    local_ready = state.count[:, PORT_L] < D
+    inj_ok = inject_valid & local_ready
+    recv_valid = recv_valid.at[:, PORT_L].set(inj_ok)
+    recv_flit = recv_flit.at[:, PORT_L].set(
+        jnp.where(inj_ok[:, None], inject_flit, 0))
+
+    # ---------------- phase B: arbitration into freed oregs -----------------
+    # Wormhole: a multi-flit packet (burst) locks its output port from the
+    # first beat until the tail beat (F_BEAT <= 1) has passed, so burst
+    # beats are never interleaved — exactly the paper's burst semantics.
+    oreg_free = (~state.oreg_v) | drain                           # (R, P)
+    out_port = xy_route(heads[:, :, F_DEST], r_idx[:, None], nx)  # (R, P_in)
+    out_port = jnp.where(head_valid, out_port, NO_PORT)
+    req = (out_port[:, :, None] == jnp.arange(N_PORTS)[None, None, :])
+    req = req & oreg_free[:, None, :]
+
+    locked = state.lock_in >= 0                                   # (R, P_out)
+    lock_hot = jax.nn.one_hot(jnp.clip(state.lock_in, 0, N_PORTS - 1),
+                              N_PORTS, axis=1, dtype=jnp.bool_)   # (R,Pi,Po)
+    # when locked: only the locked input may win; others masked off
+    req = req & (~locked[:, None, :] | lock_hot)
+
+    in_idx = jnp.arange(N_PORTS)
+    prio = (in_idx[None, :, None] - state.rr_ptr[:, None, :]) % N_PORTS
+    score = jnp.where(req, prio, 99)
+    winner = jnp.argmin(score, axis=1)                            # (R, P_out)
+    any_grant = jnp.min(score, axis=1) < 99
+    grant = (jax.nn.one_hot(winner, N_PORTS, axis=1, dtype=jnp.bool_)
+             & any_grant[:, None, :])                             # (R,Pi,Po)
+    new_ptr = jnp.where(any_grant & ~locked, (winner + 1) % N_PORTS,
+                        state.rr_ptr)
+
+    pop = jnp.any(grant, axis=2)                                  # (R, P_in)
+    flit_to_oreg = jnp.einsum("rio,rif->rof", grant.astype(jnp.int32), heads)
+
+    # lock update: granted non-tail flit locks; granted tail releases
+    granted_beat = flit_to_oreg[:, :, F_BEAT]                     # (R, P_out)
+    is_tail = granted_beat <= 1
+    new_lock = jnp.where(any_grant & ~is_tail, winner,
+                         jnp.where(any_grant & is_tail, -1, state.lock_in))
+
+    new_oreg_v = (state.oreg_v & ~drain) | any_grant
+    new_oreg = jnp.where(any_grant[:, :, None], flit_to_oreg, state.oreg)
+
+    # ---------------- input FIFO update: pop then push ----------------------
+    shifted = jnp.concatenate(
+        [state.fifo[:, :, 1:, :], jnp.zeros_like(state.fifo[:, :, :1, :])],
+        axis=2)
+    fifo = jnp.where(pop[:, :, None, None], shifted, state.fifo)
+    count = state.count - pop.astype(jnp.int32)
+
+    slot = jnp.clip(count, 0, D - 1)
+    write = recv_valid & (count < D)
+    onehot_slot = jax.nn.one_hot(slot, D, dtype=jnp.bool_)        # (R,P,D)
+    sel = write[:, :, None] & onehot_slot
+    fifo = jnp.where(sel[..., None], recv_flit[:, :, None, :], fifo)
+    count = count + write.astype(jnp.int32)
+
+    new_state = NetState(fifo=fifo, count=count, rr_ptr=new_ptr,
+                         oreg=new_oreg, oreg_v=new_oreg_v, lock_in=new_lock)
+    link_moves = jnp.sum(drain.astype(jnp.int32)
+                         * (jnp.arange(N_PORTS)[None, :] != PORT_L))
+    return new_state, inj_ok, deliver_valid, deliver_flit, link_moves

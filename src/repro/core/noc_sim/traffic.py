@@ -1,0 +1,84 @@
+"""Traffic schedule generators for the NoC simulator (paper Fig. 5 setups).
+
+Schedules are dense (R, T) int32 arrays of desired inject times (sorted per
+NI; an entry beyond the horizon disables the slot) plus destinations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _empty(R: int):
+    return {"nar_time": np.full((R, 1), 1 << 30, np.int32),
+            "nar_dest": np.zeros((R, 1), np.int32),
+            "wide_time": np.full((R, 1), 1 << 30, np.int32),
+            "wide_dest": np.zeros((R, 1), np.int32)}
+
+
+def fig5_traffic(cfg, *, num_narrow: int = 100, num_wide: int = 16,
+                 wide_rate: float = 1.0, narrow_rate: float = 0.05,
+                 src: int | None = None, dst: int | None = None,
+                 bidir: bool = False, seed: int = 0):
+    """Cluster-to-cluster accesses between two tiles (paper Fig. 5).
+
+    src tile issues `num_narrow` narrow reads at `narrow_rate` (flits/cycle)
+    and wide burst reads at `wide_rate` (bursts are back-to-back when the
+    rate is 1.0). `bidir` mirrors the same traffic from dst to src.
+    wide_rate/narrow_rate scale the injection gap (0 disables).
+    """
+    R = cfg.n_routers
+    if src is None:
+        src = 0
+    if dst is None:
+        dst = R - 1
+    out = _empty(R)
+
+    def sched(rate: float, count: int, stretch: int = 1):
+        if rate <= 0 or count <= 0:
+            return np.full((1,), 1 << 30, np.int32)
+        gap = max(1, int(round(stretch / rate)))
+        return (10 + np.arange(count) * gap).astype(np.int32)
+
+    def add(kind: str, s: int, d: int, times: np.ndarray):
+        tkey, dkey = f"{kind}_time", f"{kind}_dest"
+        T = max(out[tkey].shape[1], times.shape[0])
+        for key, fill in ((tkey, 1 << 30), (dkey, 0)):
+            cur = out[key]
+            if cur.shape[1] < T:
+                pad = np.full((R, T - cur.shape[1]), fill, np.int32)
+                out[key] = np.concatenate([cur, pad], axis=1)
+        out[tkey][s, :times.shape[0]] = times
+        out[dkey][s, :times.shape[0]] = d
+
+    add("nar", src, dst, sched(narrow_rate, num_narrow))
+    # wide bursts: one AR per burstlen beats; rate= beats/cycle target =>
+    # AR gap = burstlen / rate
+    add("wide", src, dst, sched(wide_rate, num_wide, stretch=cfg.burstlen))
+    if bidir:
+        add("nar", dst, src, sched(narrow_rate, num_narrow))
+        add("wide", dst, src, sched(wide_rate, num_wide, stretch=cfg.burstlen))
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def uniform_random(cfg, *, narrow_per_ni: int = 0, wide_per_ni: int = 0,
+                   narrow_rate: float = 0.05, wide_rate: float = 0.25,
+                   seed: int = 0):
+    """Uniform-random background traffic (all NIs, random destinations)."""
+    R = cfg.n_routers
+    rng = np.random.default_rng(seed)
+    out = _empty(R)
+
+    def fill(kind, count, rate, stretch=1):
+        if count <= 0 or rate <= 0:
+            return
+        gap = max(1, int(round(stretch / rate)))
+        times = 10 + np.cumsum(rng.integers(1, 2 * gap, size=(R, count)),
+                               axis=1).astype(np.int32)
+        dests = rng.integers(0, R, size=(R, count)).astype(np.int32)
+        dests = (dests + 1 + np.arange(R)[:, None]) % R  # never self
+        out[f"{kind}_time"] = times
+        out[f"{kind}_dest"] = dests
+
+    fill("nar", narrow_per_ni, narrow_rate)
+    fill("wide", wide_per_ni, wide_rate, stretch=cfg.burstlen)
+    return {k: np.asarray(v) for k, v in out.items()}

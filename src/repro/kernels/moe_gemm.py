@@ -1,0 +1,48 @@
+"""Pallas TPU grouped (per-expert) GEMM for MoE capacity buffers.
+
+Computes y[e] = x[e] @ w[e] for the (E, C, d) dispatch buffer against
+(E, d, f) expert weights — the batched GEMM at the heart of both the EP and
+TP-MoE paths. Grid = (E, C-tiles, f-tiles) with (d)-full VMEM tiles; each
+(bc x d) x (d x bf) product is MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    o_ref[0] = jax.lax.dot(x, w).astype(o_ref.dtype)
+
+
+def expert_gemm_pallas(x, w, *, block_c: int = 128, block_f: int = 256,
+                       interpret: bool = False):
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    E, C, d = x.shape
+    _, _, f = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    grid = (E, pl.cdiv(C, block_c), pl.cdiv(f, block_f))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, ic, jf: (e, ic, 0)),
+            pl.BlockSpec((1, d, block_f), lambda e, ic, jf: (e, 0, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ic, jf: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def expert_gemm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,84 @@
+"""Public kernel entry points.
+
+On TPU these dispatch to the Pallas kernels (BlockSpec/VMEM-tiled); on CPU
+they fall back to the pure-jnp oracles in ``ref.py`` (same math, chunked, so
+the dry-run lowers equivalent FLOPs/memory without O(S^2) intermediates).
+Set ``REPRO_FORCE_PALLAS_INTERPRET=1`` to run the Pallas kernels in
+interpret mode on CPU (used by the kernel test suite).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from . import ref
+
+_FORCE_INTERPRET = "REPRO_FORCE_PALLAS_INTERPRET"
+
+
+def _use_pallas() -> bool:
+    if os.environ.get(_FORCE_INTERPRET) == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0, k_offset=0,
+                    kv_len=None, softcap=0.0, return_stats=False):
+    if _use_pallas() and not return_stats and kv_len is None and q.shape[1] >= 128:
+        from .flash_attention import flash_attention_pallas
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            softcap=softcap, interpret=_interpret())
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        k_offset=k_offset, kv_len=kv_len, softcap=softcap,
+        return_stats=return_stats)
+
+
+def rmsnorm(x, weight, eps=1e-5):
+    if _use_pallas() and x.shape[-1] % 128 == 0:
+        from .rmsnorm import rmsnorm_pallas
+        return rmsnorm_pallas(x, weight, eps=eps, interpret=_interpret())
+    return ref.rmsnorm_ref(x, weight, eps)
+
+
+def layernorm(x, weight, bias, eps=1e-5):
+    return ref.layernorm_ref(x, weight, bias, eps)
+
+
+def ssd(x, dt, A_log, Bmat, Cmat, D, *, chunk=256, h0=None, return_final_state=False):
+    if _use_pallas() and x.shape[1] % chunk == 0 and x.shape[1] >= chunk:
+        from .ssd_scan import ssd_pallas
+        return ssd_pallas(x, dt, A_log, Bmat, Cmat, D, chunk=chunk, h0=h0,
+                          return_final_state=return_final_state,
+                          interpret=_interpret())
+    return ref.ssd_ref(x, dt, A_log, Bmat, Cmat, D, chunk=chunk, h0=h0,
+                       return_final_state=return_final_state)
+
+
+def ssd_decode(h, x, dt, A_log, Bv, Cv, D):
+    return ref.ssd_decode_ref(h, x, dt, A_log, Bv, Cv, D)
+
+
+def causal_conv1d(x, w, state=None):
+    return ref.causal_conv1d_ref(x, w, state)
+
+
+def causal_conv1d_step(x, w, state):
+    return ref.causal_conv1d_step_ref(x, w, state)
+
+
+def grouped_matmul(x, w, expert_of):
+    if _use_pallas():
+        from .moe_gemm import grouped_matmul_pallas
+        return grouped_matmul_pallas(x, w, expert_of, interpret=_interpret())
+    return ref.grouped_matmul_ref(x, w, expert_of)
+
+
+combine_attention_shards = ref.combine_attention_shards

@@ -1,0 +1,327 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+These are written memory-consciously (chunked online-softmax attention,
+chunked SSD) so that the CPU dry-run lowers the same asymptotic math as the
+TPU kernels without materializing O(S^2) intermediates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_ref(x: jax.Array, weight: jax.Array, bias: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online softmax; GQA; causal / sliding window;
+# optional logit soft-capping; optional partial-softmax stats for split-KV)
+# ---------------------------------------------------------------------------
+def _apply_mask(scores: jax.Array, qpos: jax.Array, kpos: jax.Array,
+                causal: bool, window: int) -> jax.Array:
+    # scores: (B, Hkv, G, Sq, Ck); qpos (Sq,), kpos (Ck,)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(mask[None, None, None], scores, NEG_INF)
+
+
+def _attn_inner(qg, k, v, *, q_lo, kv_lo, kv_hi, chunk, causal, window,
+                q_offset, k_offset, kv_len, softcap, Sk_valid):
+    """Online-softmax scan over kv chunks [kv_lo, kv_hi) for one q block.
+
+    qg: (B, Hkv, G, Sq_blk, D) pre-scaled fp32. Returns (m, l, acc).
+    """
+    B, Hkv, G, Sq, D = qg.shape
+    n_chunks = (kv_hi - kv_lo + chunk - 1) // chunk
+    qpos = q_offset + q_lo + jnp.arange(Sq)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        start = kv_lo + idx * chunk
+        kb = jax.lax.dynamic_slice_in_dim(k, start, chunk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, chunk, axis=1)
+        kb = jnp.moveaxis(kb, 1, 2)                         # (B,Hkv,C,D)
+        vb = jnp.moveaxis(vb, 1, 2)
+        kpos = k_offset + start + jnp.arange(chunk)
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qg, kb.astype(jnp.float32))
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = _apply_mask(s, qpos, kpos, causal, window)
+        valid = kpos < (k_offset + Sk_valid if kv_len is None else kv_len)
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    if n_chunks == 1:
+        return body((m0, l0, acc0), 0)[0]
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
+    return m, l, acc
+
+
+def flash_attention_ref(
+    q: jax.Array,                      # (B, Sq, Hq, D)
+    k: jax.Array,                      # (B, Sk, Hkv, D)
+    v: jax.Array,                      # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,                   # 0 = unlimited
+    q_offset=0,                        # absolute position of q[0] (int or traced)
+    k_offset=0,                        # absolute position of k[0]
+    kv_len: Optional[jax.Array] = None,  # GLOBAL valid kv length (caches)
+    softcap: float = 0.0,
+    chunk: int = 1024,
+    q_chunk: int = 2048,
+    return_stats: bool = False,
+):
+    """Blocked attention with static causal/window kv-range skipping.
+
+    q is processed in static blocks; for each block the kv range that can
+    possibly be unmasked is computed statically (when q_offset is a Python
+    int), so sliding-window and causal masking skip FLOPs instead of just
+    masking them — matching what the TPU kernel does and keeping the
+    dry-run roofline honest.
+
+    Returns out (B, Sq, Hq, D) [, (m, l, num) stats for split-KV combine].
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    static_q = isinstance(q_offset, int) and isinstance(k_offset, int)
+    chunk = min(chunk, Sk)
+    Sk_valid = Sk
+    if Sk % chunk:
+        pad = -Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sk = k.shape[1]
+    if Sq <= q_chunk or Sq % q_chunk != 0 or not static_q:
+        q_blocks = [(0, Sq)]
+    else:
+        q_blocks = [(i * q_chunk, q_chunk) for i in range(Sq // q_chunk)]
+
+    outs, ms, ls, nums = [], [], [], []
+    for q_lo, q_len in q_blocks:
+        qb = q[:, q_lo:q_lo + q_len]
+        qg = qb.reshape(B, q_len, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+        qg = (qg * scale).astype(jnp.float32)
+        kv_lo, kv_hi = 0, Sk
+        if static_q:
+            first_q = q_offset + q_lo
+            last_q = q_offset + q_lo + q_len - 1
+            if causal:
+                kv_hi = min(Sk, max(0, last_q - k_offset + 1))
+            if window > 0:
+                kv_lo = max(0, first_q - window + 1 - k_offset)
+            kv_lo = (kv_lo // chunk) * chunk
+            kv_hi = min(Sk, -(-kv_hi // chunk) * chunk)
+            if kv_hi <= kv_lo:
+                kv_lo, kv_hi = 0, chunk
+        m, l, acc = _attn_inner(
+            qg, k, v, q_lo=q_lo, kv_lo=kv_lo, kv_hi=kv_hi, chunk=chunk,
+            causal=causal, window=window, q_offset=q_offset,
+            k_offset=k_offset, kv_len=kv_len, softcap=softcap,
+            Sk_valid=Sk_valid)
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(B, q_len, Hq, D))
+        if return_stats:
+            ms.append(m.transpose(0, 3, 1, 2).reshape(B, q_len, Hq))
+            ls.append(l.transpose(0, 3, 1, 2).reshape(B, q_len, Hq))
+            nums.append(acc.transpose(0, 3, 1, 2, 4).reshape(B, q_len, Hq, D))
+
+    out = (outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)).astype(q.dtype)
+    if return_stats:
+        cat = lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=1)
+        return out, (cat(ms), cat(ls), cat(nums))
+    return out
+
+
+def combine_attention_shards(m, l, num, psum, pmax):
+    """Combine split-KV partial attention across an axis.
+
+    m, l, num: per-shard stats from ``flash_attention_ref(..., return_stats=True)``.
+    psum/pmax: callables reducing over the shard axis.
+    """
+    M = pmax(m)
+    scale = jnp.exp(m - M)
+    l_tot = psum(l * scale)
+    num_tot = psum(num * scale[..., None])
+    return (num_tot / jnp.maximum(l_tot, 1e-37)[..., None]).astype(num.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) — chunked scan
+# ---------------------------------------------------------------------------
+def _segsum(z: jax.Array) -> jax.Array:
+    """z: (..., Q) -> (..., Q, Q) with S[i, j] = sum_{k=j+1..i} z_k (i>=j)."""
+    cs = jnp.cumsum(z, axis=-1)
+    S = cs[..., :, None] - cs[..., None, :]
+    Q = z.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, S, NEG_INF)
+
+
+def ssd_ref(
+    x: jax.Array,        # (B, S, H, P)  — already includes dt scaling? NO: raw
+    dt: jax.Array,       # (B, S, H)     — positive (softplus applied upstream)
+    A_log: jax.Array,    # (H,)
+    Bmat: jax.Array,     # (B, S, G, N)
+    Cmat: jax.Array,     # (B, S, G, N)
+    D: jax.Array,        # (H,)
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,   # (B, H, P, N) initial state
+    return_final_state: bool = False,
+):
+    """Chunked SSD forward. y = SSM(A, B, C)(x*dt) + D*x  (groups broadcast
+    over heads: H % G == 0)."""
+    Bsz, S, H, P = x.shape
+    _, _, G, N = Bmat.shape
+    assert H % G == 0
+    dtype = x.dtype
+
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    a = -jnp.exp(A_log.astype(jnp.float32))           # (H,)
+    dA = dt.astype(jnp.float32) * a                   # (B,S,H) decay exponents
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+
+    # reshape into chunks
+    xc = xdt.reshape(Bsz, nc, Q, H, P)
+    dAc = dA.reshape(Bsz, nc, Q, H)
+    rep = H // G
+    Bc = jnp.repeat(Bmat.astype(jnp.float32), rep, axis=2).reshape(Bsz, nc, Q, H, N)
+    Cc = jnp.repeat(Cmat.astype(jnp.float32), rep, axis=2).reshape(Bsz, nc, Q, H, N)
+
+    cs = jnp.cumsum(dAc, axis=2)                      # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))   # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cc, Bc) * L.clip(0.0, None)
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", scores, xc)
+
+    # --- chunk end-states ---
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)     # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xc)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cs[:, :, -1, :])            # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    hinit = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn, hinit,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,N) state before chunk
+
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Cc * jnp.exp(cs)[..., None], h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(dtype)
+    if return_final_state:
+        return y, h_last
+    return y
+
+
+def ssd_decode_ref(h, x, dt, A_log, Bv, Cv, D):
+    """Single-token SSD state update.
+
+    h: (B, H, P, N); x: (B, H, P); dt: (B, H); Bv/Cv: (B, G, N); D: (H,)
+    returns (y (B,H,P), h_new).
+    """
+    B_, H, P, N = h.shape
+    G = Bv.shape[1]
+    rep = H // G
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32) * a)               # (B,H)
+    Bh = jnp.repeat(Bv.astype(jnp.float32), rep, axis=1)   # (B,H,N)
+    Ch = jnp.repeat(Cv.astype(jnp.float32), rep, axis=1)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    h_new = h * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch) + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba front conv) + single-step update
+# ---------------------------------------------------------------------------
+def causal_conv1d_ref(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (C, W) depthwise causal; state: (B, W-1, C) history."""
+    B, S, C = x.shape
+    _, W = w.shape
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+W-1, C)
+    idx = jnp.arange(S)[:, None] + jnp.arange(W)[None, :]
+    windows = xp[:, idx, :]                             # (B, S, W, C)
+    y = jnp.einsum("bswc,cw->bsc", windows.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, S:, :] if W > 1 else state
+    return y, new_state
+
+
+def causal_conv1d_step_ref(x: jax.Array, w: jax.Array, state: jax.Array):
+    """x: (B, C); state: (B, W-1, C) -> (y (B, C), new_state)."""
+    W = w.shape[1]
+    xp = jnp.concatenate([state, x[:, None, :]], axis=1)   # (B, W, C)
+    y = jnp.einsum("bwc,cw->bc", xp.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)
+    return y, xp[:, 1:, :] if W > 1 else state
+
+
+# ---------------------------------------------------------------------------
+# Grouped (per-expert segment) matmul for MoE
+# ---------------------------------------------------------------------------
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, expert_of: jax.Array) -> jax.Array:
+    """x: (T, d_in); w: (E, d_in, d_out); expert_of: (T,) int -> (T, d_out).
+
+    Oracle: per-token weight gather contracted densely (memory-fine at test
+    scale; the Pallas kernel tiles tokens grouped by expert).
+    """
+    E = w.shape[0]
+    onehot = jax.nn.one_hot(expert_of, E, dtype=x.dtype)        # (T, E)
+    # (T,E) x (E,di,do) with (T,di): contract per expert without gathering
+    return jnp.einsum("te,ti,eio->to", onehot, x, w)

@@ -1,0 +1,103 @@
+"""Closed-form FLOP / byte models per (arch, shape, mode).
+
+Primary roofline numbers come from the trip-count-aware HLO parse
+(roofline.py); these analytic forms serve as (a) the MODEL_FLOPS
+definition from the assignment (6·N·D dense / 6·N_active·D MoE for
+training; 2·N·D for inference lowers), (b) an attention-aware cross-check,
+and (c) the HBM-traffic model for the memory term (parameter + optimizer +
+activation + KV traffic), which the CPU HLO cannot give faithfully for a
+TPU memory hierarchy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+
+
+def model_flops_global(mcfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Assignment definition: 6·N·D train, 2·N·D inference (fwd only)."""
+    n = mcfg.active_param_count()
+    tokens = shape.tokens if shape.kind == "train" else (
+        shape.tokens if shape.kind == "prefill" else shape.global_batch)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def attention_flops_global(mcfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Extra attention score/value FLOPs (not in 6·N·D)."""
+    if mcfg.num_heads == 0:
+        return 0.0
+    H, hd, L = mcfg.num_heads, mcfg.head_dim, mcfg.num_layers
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        ctx = S
+        fwd = 4.0 * H * hd * ctx * B * L          # one token vs full cache
+        return fwd
+    # causal average context S/2; sliding window caps it
+    ctx = S / 2 if mcfg.sliding_window == 0 else min(mcfg.sliding_window, S / 2)
+    fwd = 4.0 * H * hd * ctx * B * S * L
+    return (3.0 if shape.kind == "train" else 1.0) * fwd
+
+
+def hbm_bytes_per_chip(mcfg: ModelConfig, shape: ShapeConfig,
+                       cfg: RunConfig) -> float:
+    """Per-chip, per-step HBM traffic estimate (TPU target).
+
+    train : 3 weight passes (fwd, remat-fwd, bwd) in bf16 + optimizer
+            read/write in fp32 (m, v, master) + ~12 activation tensors of
+            (tokens_loc x d) per layer read+written.
+    prefill: 1 weight pass + activations.
+    decode : 1 weight pass (the classic decode bottleneck) + KV cache read
+             + small state.
+    """
+    chips = cfg.mesh.num_devices
+    p_total = mcfg.param_count()
+    p_bytes_bf16 = 2.0 * p_total / chips
+    tokens_loc = shape.tokens / chips
+    d = mcfg.d_model
+    L = mcfg.num_layers + mcfg.num_encoder_layers
+
+    if shape.kind == "train":
+        w = 3.0 * p_bytes_bf16
+        opt = (4.0 + 4.0) * 2.0 * (p_total / chips) if cfg.opt_state_bits == 32 \
+            else (1.0 + 1.0) * 2.0 * (p_total / chips) + 8.0 * p_total / chips / 64
+        master = 2.0 * 4.0 * p_total / chips
+        acts = 12.0 * 2.0 * tokens_loc * d * L * 2.0   # read+write bf16
+        return w + opt + master + acts
+    if shape.kind == "prefill":
+        return p_bytes_bf16 + 8.0 * 2.0 * tokens_loc * d * L
+    # decode
+    kv = 0.0
+    if mcfg.num_heads:
+        n_kv_stored = max(1, mcfg.num_kv_heads)
+        ctx = shape.seq_len if mcfg.sliding_window == 0 else mcfg.sliding_window
+        if mcfg.family == "hybrid":
+            glob = len(mcfg.global_layers)
+            kv_tok = (glob * shape.seq_len
+                      + (mcfg.num_layers - glob) * min(mcfg.sliding_window,
+                                                       shape.seq_len))
+        else:
+            kv_tok = mcfg.num_layers * ctx
+        kv = 2.0 * n_kv_stored * mcfg.head_dim * kv_tok * 2.0 \
+            * shape.global_batch / chips
+    ssm = 0.0
+    if mcfg.ssm_state:
+        ssm = (mcfg.ssm_heads * mcfg.ssm_head_dim * mcfg.ssm_state * 4.0 * 2.0
+               * mcfg.num_layers * shape.global_batch / chips)
+    return p_bytes_bf16 + kv + ssm
+
+
+def describe(mcfg: ModelConfig, shape: ShapeConfig, cfg: RunConfig) -> dict:
+    chips = cfg.mesh.num_devices
+    mf = model_flops_global(mcfg, shape)
+    af = attention_flops_global(mcfg, shape)
+    return {
+        "model_flops_global": mf,
+        "attention_flops_global": af,
+        "model_flops_per_chip": mf / chips,
+        "analytic_flops_per_chip": (mf + af) / chips,
+        "hbm_bytes_per_chip": hbm_bytes_per_chip(mcfg, shape, cfg),
+        "params_total": mcfg.param_count(),
+        "params_active": mcfg.active_param_count(),
+    }

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. builds the step for the shape's kind (train_step / prefill / decode),
+  3. ``.lower()`` with sharded ShapeDtypeStructs (zero allocation),
+  4. ``.compile()`` — proving the distribution config is coherent,
+  5. records memory_analysis / cost_analysis / the trip-count-aware HLO
+     parse / the collective ledger into experiments/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+  python -m repro.launch.dryrun --arch X --shape Y --multipod --backend xla
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, applicable, get_arch, get_shape
+from ..configs.base import MeshConfig, RunConfig
+from . import analytic, roofline
+from .mesh import make_mesh_from_config, production_mesh_config
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def default_run_overrides(arch: str, shape_name: str) -> dict:
+    """Per-arch config tweaks needed at production scale."""
+    o: dict = {}
+    if arch == "grok-1-314b":
+        o["opt_state_bits"] = 8          # optimizer fits one pod (DESIGN §7)
+        o["microbatches"] = 4
+    if arch in ("llama4-scout-17b-a16e",):
+        o["microbatches"] = 2
+    return o
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool, backend: str,
+            tag: str = "") -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh}__{backend}{suffix}"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             backend: str = "floo", overrides: dict | None = None,
+             tag: str = "", verbose: bool = True) -> dict:
+    from ..dist import step as step_lib
+    from ..models import build_model
+
+    mcfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, why = applicable(mcfg, shape)
+    if not ok:
+        return {"cell": cell_id(arch, shape_name, multi_pod, backend, tag),
+                "status": "skip", "reason": why}
+
+    mesh_cfg = production_mesh_config(multi_pod=multi_pod)
+    kw = default_run_overrides(arch, shape_name)
+    kw.update(overrides or {})
+    cfg = RunConfig(model=mcfg, shape=shape, mesh=mesh_cfg, backend=backend,
+                    **kw)
+    mesh = make_mesh_from_config(mesh_cfg)
+    model = build_model(mcfg, cfg)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        art = step_lib.build_train_step(model, shape, mesh)
+    elif shape.kind == "prefill":
+        art = step_lib.build_prefill_step(model, shape, mesh)
+    else:
+        art = step_lib.build_decode_step(model, shape, mesh)
+
+    lowered = art.fn.lower(*art.in_sds)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # ---- analyses -----------------------------------------------------------
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_d[k] = getattr(mem, k, None)
+    try:
+        ca = compiled.cost_analysis() or {}
+        cost_d = {k: float(v) for k, v in ca.items()
+                  if isinstance(v, (int, float)) and k in
+                  ("flops", "bytes accessed", "transcendentals")}
+    except Exception:
+        cost_d = {}
+
+    t0 = time.time()
+    hlo_text = compiled.as_text()
+    costs = roofline.analyze_hlo_text(hlo_text)
+    t_parse = time.time() - t0
+
+    ana = analytic.describe(mcfg, shape, cfg)
+    link_par = 2.0 if (cfg.bidir_rings and backend == "floo") else 1.0
+    rl = roofline.roofline_from_costs(
+        costs, ana["model_flops_per_chip"],
+        analytic_bytes_per_chip=ana["hbm_bytes_per_chip"],
+        link_parallelism=link_par)
+
+    result = {
+        "cell": cell_id(arch, shape_name, multi_pod, backend, tag),
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh_cfg.shape), "backend": backend,
+        "overrides": kw,
+        "timings_s": {"lower": t_lower, "compile": t_compile,
+                      "hlo_parse": t_parse},
+        "memory_analysis": mem_d,
+        "cost_analysis_raw": cost_d,
+        "hlo": {
+            "dot_flops_per_chip": costs.dot_flops,
+            "collective_bytes_by_kind": dict(costs.collective_bytes),
+            "collective_counts": dict(costs.collective_count),
+            "memory_bytes_proxy": costs.memory_bytes,
+            "while_trip_counts": costs.while_trips,
+            "hlo_chars": len(hlo_text),
+        },
+        "analytic": ana,
+        "roofline": rl.to_dict(),
+        "ledger": art.backend.ledger.summary(),
+    }
+    if verbose:
+        bl = rl.bottleneck
+        print(f"[{result['cell']}] OK compile={t_compile:.1f}s "
+              f"temp={(mem_d['temp_size_in_bytes'] or 0)/2**30:.2f}GiB "
+              f"compute={rl.compute_s*1e3:.2f}ms mem={rl.memory_s*1e3:.2f}ms "
+              f"coll={rl.collective_s*1e3:.2f}ms bottleneck={bl} "
+              f"useful={rl.useful_ratio:.2f}", flush=True)
+    return result
+
+
+def save(result: dict) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUT_DIR / f"{result['cell']}.json"
+    p.write_text(json.dumps(result, indent=1, default=str))
+    return p
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--backend", default="floo", choices=["floo", "xla"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--singlepod-only", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="RunConfig override key=value (repeatable)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        pods = [False, True]
+        if args.singlepod_only:
+            pods = [False]
+        if args.multipod_only:
+            pods = [True]
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in pods:
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape, args.multipod))
+
+    n_ok = n_skip = n_fail = n_cached = 0
+    for arch, shape, mp in cells:
+        cid = cell_id(arch, shape, mp, args.backend, args.tag)
+        out = OUT_DIR / f"{cid}.json"
+        if out.exists() and not args.force:
+            prev = json.loads(out.read_text())
+            if prev.get("status") in ("ok", "skip"):
+                n_cached += 1
+                continue
+        try:
+            res = run_cell(arch, shape, multi_pod=mp, backend=args.backend,
+                           overrides=overrides, tag=args.tag)
+            save(res)
+            if res["status"] == "ok":
+                n_ok += 1
+            else:
+                n_skip += 1
+                print(f"[{cid}] SKIP: {res['reason']}", flush=True)
+        except Exception as e:
+            n_fail += 1
+            save({"cell": cid, "status": "fail", "arch": arch,
+                  "shape": shape, "error": str(e)[:2000],
+                  "traceback": traceback.format_exc()[-4000:]})
+            print(f"[{cid}] FAIL: {str(e)[:300]}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail} cached={n_cached}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

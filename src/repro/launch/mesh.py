@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (NOT a module-level constant) so importing never touches jax
+device state. Axis semantics: `pod` = slow inter-pod links (DP or PP),
+`data` = intra-pod DP + FSDP/ZeRO sharding, `model` = TP/SP/EP.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(data=16, model=16, pod=2 if multi_pod else 1)
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.shape))

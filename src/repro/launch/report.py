@@ -1,0 +1,79 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .dryrun import OUT_DIR
+
+
+def load_cells(backend: str = "floo", tag: str = "") -> list[dict]:
+    cells = []
+    for p in sorted(OUT_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("backend", "floo") != backend and d.get("status") == "ok":
+            continue
+        if tag and not p.stem.endswith(f"__{tag}"):
+            continue
+        if not tag and d.get("status") == "ok" and len(p.stem.split("__")) > 4:
+            continue
+        cells.append(d)
+    return cells
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:8.2f}"
+
+
+def roofline_table(cells: list[dict], mesh_filter: str = "pod16x16") -> str:
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | "
+            "bottleneck | MODEL_FLOPS/HLO | temp GiB | status |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        cid = d["cell"]
+        if mesh_filter not in cid:
+            continue
+        if d["status"] == "skip":
+            arch, shape = cid.split("__")[:2]
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                        f"SKIP ({d['reason'][:40]}…) |")
+            continue
+        if d["status"] != "ok":
+            rows.append(f"| {cid} | | | | | | | | FAIL |")
+            continue
+        r = d["roofline"]
+        temp = (d["memory_analysis"].get("temp_size_in_bytes") or 0) / 2**30
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_ms(r['compute_s'])} | "
+            f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | {temp:.1f} | ok |")
+    return "\n".join(rows)
+
+
+def summary_stats(cells: list[dict]) -> dict:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    fail = [c for c in cells if c["status"] not in ("ok", "skip")]
+    bcounts: dict[str, int] = {}
+    for c in ok:
+        b = c["roofline"]["bottleneck"]
+        bcounts[b] = bcounts.get(b, 0) + 1
+    return {"ok": len(ok), "skip": len(skip), "fail": len(fail),
+            "bottlenecks": bcounts}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--backend", default="floo")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    cells = load_cells(args.backend, args.tag)
+    print(roofline_table(cells, args.mesh))
+    print()
+    print(json.dumps(summary_stats(cells), indent=1))
+
+
+if __name__ == "__main__":
+    main()

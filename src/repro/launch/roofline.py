@@ -1,0 +1,331 @@
+"""Roofline analysis from compiled HLO (post-optimization, trip-count aware).
+
+``compiled.cost_analysis()`` on the CPU backend does NOT scale loop bodies by
+their trip counts (verified: a scan of L matmuls reports 1/L of the analytic
+FLOPs), so we parse ``compiled.as_text()`` ourselves:
+
+  * computations are mapped to multipliers: a ``while`` op's
+    ``backend_config.known_trip_count`` multiplies its body (nested whiles
+    compose),
+  * collective bytes: operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute x multiplier. For the
+    floo backend (rings lowered to collective-permutes) this is exactly the
+    per-device link traffic,
+  * dot FLOPs: 2 x prod(result dims) x prod(contracting dims), resolved
+    through a per-computation symbol table,
+  * HBM-traffic proxy: operand+result bytes of fusion/dot/collective ops
+    (inputs/outputs of fused regions ~ off-chip traffic once buffers exceed
+    on-chip capacity — an upper bound; on TPU, VMEM reuse lowers it).
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*"
+                    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_V2_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _link_bytes(kind: str, operand_bytes: float, rest: str) -> float:
+    """Per-device ICI link traffic for one collective op.
+
+    collective-permute: operand bytes are exactly what the device sends.
+    Fused ops: ring-algorithm equivalents —
+      all-gather      operand is the local shard -> (g-1) x shard
+      reduce-scatter  operand is the full partial -> (g-1)/g x operand
+      all-reduce      RS + AG -> 2 (g-1)/g x operand
+      all-to-all      (g-1)/g of the buffer leaves the device
+    """
+    if kind == "collective-permute":
+        return operand_bytes
+    g = max(_group_size(rest), 2)
+    if kind == "all-gather":
+        return operand_bytes * (g - 1)
+    if kind == "reduce-scatter":
+        return operand_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return operand_bytes * 2 * (g - 1) / g
+    if kind == "all-to-all":
+        return operand_bytes * (g - 1) / g
+    return operand_bytes
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dims, m.group(1)
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    rest: str
+    operands: list[str]
+
+
+@dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    collective_count: dict = field(default_factory=lambda: defaultdict(int))
+    memory_bytes: float = 0.0
+    while_trips: dict = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def parse_computations(text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = comps.setdefault(m.group(1), [])
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, rtype, kind, rest = m.groups()
+        # operand names: up to attrs — take up to first "),"-ish boundary
+        paren = rest.split(")", 1)[0]
+        operands = _OPERANDS_RE.findall(paren)
+        cur.append(Op(name, kind, rtype, rest, operands))
+    return comps
+
+
+def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
+    rd = _shape_dims(op.result_type)
+    if rd is None:
+        return 0.0
+    result_elems = 1
+    for d in rd[0]:
+        result_elems *= d
+    # contracting dims from lhs
+    mC = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if not mC or not op.operands:
+        return 2.0 * result_elems  # fallback
+    lhs_type = symtab.get(op.operands[0], "")
+    ld = _shape_dims(lhs_type)
+    if ld is None:
+        return 2.0 * result_elems
+    k = 1
+    for idx in (int(i) for i in mC.group(1).split(",") if i):
+        if idx < len(ld[0]):
+            k *= ld[0][idx]
+    return 2.0 * result_elems * k
+
+
+def _custom_call_flops(op: Op, symtab: dict[str, str]) -> float:
+    if "matmul" not in op.rest and "dot" not in op.rest.lower():
+        return 0.0
+    rd = _shape_dims(op.result_type)
+    if rd is None or not op.operands:
+        return 0.0
+    result_elems = 1
+    for d in rd[0]:
+        result_elems *= d
+    lhs = _shape_dims(symtab.get(op.operands[0], ""))
+    k = lhs[0][-1] if lhs and lhs[0] else 1
+    return 2.0 * result_elems * k
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    comps = parse_computations(text)
+
+    # build call graph with trip multipliers
+    # find entry: computation not referenced by others
+    referenced = set()
+    calls: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    trip_of_body: dict[str, int] = {}
+    for cname, ops in comps.items():
+        for op in ops:
+            for callee in _CALLS_RE.findall(op.rest):
+                if callee in comps:
+                    referenced.add(callee)
+                    mult = 1.0
+                    if op.kind == "while":
+                        mt = _TRIP_RE.search(op.rest)
+                        bm = _BODY_RE.search(op.rest)
+                        trips = int(mt.group(1)) if mt else 1
+                        if bm and callee == bm.group(1):
+                            mult = float(trips)
+                            trip_of_body[callee] = trips
+                    calls[cname].append((callee, mult))
+    entries = [c for c in comps if c not in referenced]
+
+    # propagate multipliers (DAG; cycles impossible in HLO)
+    mult: dict[str, float] = defaultdict(float)
+    for e in entries:
+        mult[e] = max(mult[e], 1.0)
+    order = list(comps.keys())
+    # simple fixed-point (few computations)
+    for _ in range(len(comps)):
+        changed = False
+        for cname in order:
+            if mult[cname] <= 0:
+                continue
+            for callee, m in calls[cname]:
+                nm = mult[cname] * m
+                if nm > mult[callee]:
+                    mult[callee] = nm
+                    changed = True
+        if not changed:
+            break
+
+    costs = HloCosts(while_trips=trip_of_body)
+    for cname, ops in comps.items():
+        f = mult[cname] if mult[cname] > 0 else 0.0
+        if f <= 0:
+            continue
+        symtab = {op.name: op.result_type for op in ops}
+        for op in ops:
+            if op.kind in COLLECTIVES:
+                in_bytes = sum(_type_bytes(symtab.get(o, ""))
+                               for o in op.operands if o in symtab)
+                if in_bytes == 0:
+                    in_bytes = _type_bytes(op.result_type)
+                costs.collective_bytes[op.kind] += \
+                    f * _link_bytes(op.kind, in_bytes, op.rest)
+                costs.collective_count[op.kind] += int(f)
+                costs.memory_bytes += f * (in_bytes + _type_bytes(op.result_type))
+            elif op.kind in ("dot", "dot-general"):
+                fl = _dot_flops(op, symtab)
+                costs.dot_flops += f * fl
+                opb = sum(_type_bytes(symtab.get(o, "")) for o in op.operands
+                          if o in symtab)
+                costs.memory_bytes += f * (opb + _type_bytes(op.result_type))
+            elif op.kind == "custom-call":
+                fl = _custom_call_flops(op, symtab)
+                costs.dot_flops += f * fl
+                if fl:
+                    opb = sum(_type_bytes(symtab.get(o, ""))
+                              for o in op.operands if o in symtab)
+                    costs.memory_bytes += f * (opb + _type_bytes(op.result_type))
+            elif op.kind == "fusion":
+                opb = sum(_type_bytes(symtab.get(o, "")) for o in op.operands
+                          if o in symtab)
+                costs.memory_bytes += f * (opb + _type_bytes(op.result_type))
+    return costs
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_by_kind: dict
+    model_flops_per_chip: float
+    useful_ratio: float
+    bottleneck: str
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "useful_ratio": self.useful_ratio,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_from_costs(costs: HloCosts, model_flops_per_chip: float,
+                        analytic_bytes_per_chip: float | None = None,
+                        link_parallelism: float = 1.0) -> Roofline:
+    """All quantities per chip (the HLO is the per-device SPMD program).
+
+    link_parallelism: concurrent ICI links carrying the schedule — 2 for
+    bidirectional rings (the paper's duplex channels: each direction is a
+    separate physical link).
+    """
+    compute_s = costs.dot_flops / PEAK_FLOPS
+    mem_bytes = analytic_bytes_per_chip if analytic_bytes_per_chip \
+        else costs.memory_bytes
+    memory_s = mem_bytes / HBM_BW
+    collective_s = costs.total_collective_bytes / (ICI_BW * link_parallelism)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        hlo_flops=costs.dot_flops, hlo_bytes=mem_bytes,
+        collective_bytes=costs.total_collective_bytes,
+        collective_by_kind=dict(costs.collective_bytes),
+        model_flops_per_chip=model_flops_per_chip,
+        useful_ratio=(model_flops_per_chip / costs.dot_flops
+                      if costs.dot_flops else 0.0),
+        bottleneck=bottleneck,
+    )

@@ -1,0 +1,2 @@
+from .registry import build_model  # noqa: F401
+from .transformer import Model, Segment, build_plan  # noqa: F401

@@ -1,0 +1,371 @@
+"""Sharded model building blocks.
+
+All functions here run INSIDE ``jax.shard_map`` over the production mesh and
+see *local* parameter/activation shards. Sharding contract (DESIGN.md §4):
+
+* activations between blocks are sequence-sharded over `model` (SP);
+* attention q/o projections are head-sharded over `model` (heads padded to a
+  multiple of the axis size, padded heads exactly masked to zero);
+* k/v projections are sharded over the head_dim and all-gathered (cheap),
+  then each rank keeps only the deduplicated kv heads its local q heads
+  need — the decode KV cache stores exactly that slice;
+* parameters are additionally FSDP-sharded over `data` (dim 0 of each leaf
+  after the layer-stacking axis) and gathered per layer via the backend.
+
+Traffic classes: seq AG/RS and param AG are wide; all psums here are narrow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig
+from ..dist.backend import Backend
+from ..dist.params import ParamSpec
+from ..kernels import ops
+
+
+def pad_mult(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def cdtype(cfg: RunConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Head plan: padding + kv dedup gather (static)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HeadPlan:
+    hq: int                 # real q heads
+    hkv: int                # real kv heads
+    hd: int
+    model: int
+    hq_pad: int
+    hq_loc: int
+    group: int              # real q-heads per kv head
+    n_kv_loc: int           # deduped kv heads gathered/stored per rank
+    hd_shard: bool          # kv projection sharded over head_dim?
+
+    @staticmethod
+    def build(hq: int, hkv: int, hd: int, model: int) -> "HeadPlan":
+        hq_pad = pad_mult(hq, model)
+        hq_loc = hq_pad // model
+        group = max(1, hq // max(hkv, 1))
+        kv_of = lambda h: min(h, hq - 1) // group
+        n_kv = 1
+        for r in range(model):
+            lo, hi = kv_of(r * hq_loc), kv_of((r + 1) * hq_loc - 1)
+            n_kv = max(n_kv, hi - lo + 1)
+        return HeadPlan(hq, hkv, hd, model, hq_pad, hq_loc, group,
+                        min(n_kv, hkv), hd % model == 0)
+
+    # traced helpers --------------------------------------------------------
+    def local_q_ids(self, ridx):
+        return ridx * self.hq_loc + jnp.arange(self.hq_loc)
+
+    def kv_of_q(self, q_ids):
+        return jnp.minimum(q_ids, self.hq - 1) // self.group
+
+    def first_kv(self, ridx):
+        f = self.kv_of_q(ridx * self.hq_loc)
+        return jnp.minimum(f, self.hkv - self.n_kv_loc)
+
+    def local_kv_ids(self, ridx):
+        return jnp.clip(self.first_kv(ridx) + jnp.arange(self.n_kv_loc),
+                        0, self.hkv - 1)
+
+    def q_to_local_kv(self, ridx):
+        return self.kv_of_q(self.local_q_ids(ridx)) - self.first_kv(ridx)
+
+    def q_mask(self, ridx):
+        """1.0 for real heads, 0.0 for padded heads (exact zero masking)."""
+        return (self.local_q_ids(ridx) < self.hq).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Param spec helpers
+# ---------------------------------------------------------------------------
+def wspec(shape: tuple[int, ...], cfg: RunConfig, *, model_dim: int | None,
+          data_dim: int | None, init: str = "scaled",
+          fan_in_axes: tuple[int, ...] = (), stack: int | None = None) -> ParamSpec:
+    """Weight spec with optional stacking axis prepended.
+
+    Under flat_dp the model axis carries no weight sharding; the FSDP dim is
+    sharded over ('model','data') jointly.
+    """
+    fsdp_axes = cfg.fsdp_axes
+    ax: list[Any] = [None] * len(shape)
+    if model_dim is not None and not cfg.flat_dp:
+        ax[model_dim] = "model"
+    if fsdp_axes and data_dim is not None and ax[data_dim] is None:
+        ax[data_dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    if stack is not None:
+        shape = (stack,) + shape
+        ax = [None] + ax
+        fan_in_axes = tuple(a + 1 for a in fan_in_axes)
+    return ParamSpec(tuple(shape), jnp.dtype(cfg.param_dtype), P(*ax),
+                     init=init, fan_in_axes=fan_in_axes)
+
+
+def nspec(d: int, cfg: RunConfig, stack: int | None = None,
+          init: str = "ones") -> ParamSpec:
+    shape = (d,) if stack is None else (stack, d)
+    return ParamSpec(shape, jnp.dtype(cfg.param_dtype), P(), init=init)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_specs(cfg: RunConfig, mcfg: ModelConfig, stack: int | None = None):
+    if mcfg.norm == "layernorm":
+        return {"w": nspec(mcfg.d_model, cfg, stack, "ones"),
+                "b": nspec(mcfg.d_model, cfg, stack, "zeros")}
+    return {"w": nspec(mcfg.d_model, cfg, stack, "ones")}
+
+
+def apply_norm(p, x, mcfg: ModelConfig):
+    if mcfg.norm == "layernorm":
+        return ops.layernorm(x, p["w"], p["b"], mcfg.norm_eps)
+    return ops.rmsnorm(x, p["w"], mcfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / positions
+# ---------------------------------------------------------------------------
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); pos: (S,) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]          # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_pos(pos: jax.Array, d: int, dtype) -> jax.Array:
+    half = d // 2
+    freqs = 1.0 / (10_000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self / cross) with SP, head padding, dedup KV
+# ---------------------------------------------------------------------------
+def attention_specs(cfg: RunConfig, mcfg: ModelConfig, stack: int | None = None,
+                    d_kv_src: int | None = None) -> dict:
+    """q/o head-sharded; k/v sharded over head_dim (gathered at use)."""
+    d = mcfg.d_model
+    dsrc = d_kv_src if d_kv_src is not None else d
+    plan = HeadPlan.build(mcfg.num_heads, mcfg.num_kv_heads, mcfg.head_dim,
+                          cfg.tp_size)
+    hd = mcfg.head_dim
+    kv_model_dim = 2 if plan.hd_shard else None
+    return {
+        "wq": wspec((d, plan.hq_pad, hd), cfg, model_dim=1, data_dim=0,
+                    fan_in_axes=(0,), stack=stack),
+        "wk": wspec((dsrc, mcfg.num_kv_heads, hd), cfg, model_dim=kv_model_dim,
+                    data_dim=0, fan_in_axes=(0,), stack=stack),
+        "wv": wspec((dsrc, mcfg.num_kv_heads, hd), cfg, model_dim=kv_model_dim,
+                    data_dim=0, fan_in_axes=(0,), stack=stack),
+        "wo": wspec((plan.hq_pad, hd, d), cfg, model_dim=0, data_dim=2,
+                    fan_in_axes=(0, 1), stack=stack),
+    }
+
+
+def compute_kv(p, src_full: jax.Array, bk: Backend, plan: HeadPlan,
+               *, rope_pos=None, theta: float = 0.0):
+    """src_full: (B, S, dsrc) -> deduped local kv (B, S, n_kv_loc, hd) x2.
+
+    kv projection is computed sharded over head_dim (when divisible) and
+    all-gathered over `model` — same bytes as the activations, far cheaper
+    than replicating the projection compute.
+    """
+    k = jnp.einsum("bsd,dhe->bshe", src_full, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", src_full, p["wv"])
+    if plan.hd_shard and bk.model > 1:
+        k = bk.seq_ag(k, dim=3)     # gather head_dim shards
+        v = bk.seq_ag(v, dim=3)
+    if rope_pos is not None:
+        k = apply_rope(k, rope_pos, theta)
+    ridx = bk.axis_index("model")
+    kv_ids = plan.local_kv_ids(ridx)
+    k_sel = jnp.take(k, kv_ids, axis=2)
+    v_sel = jnp.take(v, kv_ids, axis=2)
+    return k_sel, v_sel
+
+
+def attention_core(p, x_full: jax.Array, k_sel: jax.Array, v_sel: jax.Array,
+                   bk: Backend, plan: HeadPlan, *, causal: bool, window: int,
+                   rope_pos=None, theta: float = 0.0, q_offset=0, k_offset=0,
+                   kv_len=None, softcap: float = 0.0, split_kv: bool = False):
+    """q projection + attention + out projection (partial over model).
+
+    x_full: (B, Sq, d). Returns partial out (B, Sq, d) — caller reduces
+    (seq_rs for SP train, psum_model for decode).
+    """
+    B, Sq, _ = x_full.shape
+    ridx = bk.axis_index("model")
+    q = jnp.einsum("bsd,dhe->bshe", x_full, p["wq"])      # (B,Sq,hq_loc,hd)
+    if rope_pos is not None:
+        q = apply_rope(q, rope_pos, theta)
+    # expand deduped kv to per-local-q-head
+    q2kv = plan.q_to_local_kv(ridx)
+    k_q = jnp.take(k_sel, q2kv, axis=2)                   # (B,Sk,hq_loc,hd)
+    v_q = jnp.take(v_sel, q2kv, axis=2)
+    if split_kv:
+        _, (m, l, num) = ops.flash_attention(
+            q, k_q, v_q, causal=causal, window=window, q_offset=q_offset,
+            k_offset=k_offset, kv_len=kv_len, softcap=softcap,
+            return_stats=True)
+        out = ops.combine_attention_shards(m, l, num, bk.psum_data, bk.pmax_data)
+    else:
+        out = ops.flash_attention(
+            q, k_q, v_q, causal=causal, window=window, q_offset=q_offset,
+            k_offset=k_offset, kv_len=kv_len, softcap=softcap)
+    out = out * plan.q_mask(ridx)[None, None, :, None].astype(out.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])      # partial over model
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU), column->row parallel over `model`
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: RunConfig, mcfg: ModelConfig, stack: int | None = None) -> dict:
+    d, ff = mcfg.d_model, mcfg.d_ff
+    out = {
+        "wi": wspec((d, ff), cfg, model_dim=1, data_dim=0, fan_in_axes=(0,),
+                    stack=stack),
+        "wd": wspec((ff, d), cfg, model_dim=0, data_dim=1, fan_in_axes=(0,),
+                    stack=stack),
+    }
+    if mcfg.mlp_act == "swiglu":
+        out["wg"] = wspec((d, ff), cfg, model_dim=1, data_dim=0,
+                          fan_in_axes=(0,), stack=stack)
+    return out
+
+
+def apply_mlp(p, x_full: jax.Array, mcfg: ModelConfig) -> jax.Array:
+    """x_full (B,S,d) -> partial (B,S,d) (caller reduces over model)."""
+    h = x_full @ p["wi"]
+    if mcfg.mlp_act == "swiglu":
+        h = jax.nn.silu(h) * (x_full @ p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + sharded cross-entropy (vocab over `model`)
+# ---------------------------------------------------------------------------
+def embed_specs(cfg: RunConfig, mcfg: ModelConfig) -> dict:
+    v_pad = pad_mult(mcfg.vocab_size, cfg.tp_size)
+    out = {"table": wspec((v_pad, mcfg.d_model), cfg, model_dim=0, data_dim=1,
+                          init="normal")}
+    if not mcfg.tie_embeddings:
+        out["head"] = wspec((mcfg.d_model, v_pad), cfg, model_dim=1, data_dim=0,
+                            fan_in_axes=(0,), init="normal")
+    return out
+
+
+def embed_lookup(p, ids: jax.Array, bk: Backend, cfg: RunConfig,
+                 mcfg: ModelConfig, *, sp: bool = True) -> jax.Array:
+    """ids: (B, S) full -> x_sp (B, S/model, d) sequence-sharded (SP).
+
+    With ``sp=False`` (decode) the partial embeddings are psum'd instead
+    (narrow: a single token row).
+    """
+    table = bk.param_ag(p["table"], dim=1).astype(cdtype(cfg))
+    v_loc = table.shape[0]
+    off = bk.axis_index("model") * v_loc
+    local = jnp.clip(ids - off, 0, v_loc - 1)
+    hit = ((ids >= off) & (ids < off + v_loc))[..., None]
+    emb = jnp.where(hit, jnp.take(table, local, axis=0), 0).astype(cdtype(cfg))
+    if bk.model == 1:
+        return emb
+    return bk.seq_rs(emb, dim=1) if sp else bk.psum_model(emb)
+
+
+def lm_logits(p, x_full: jax.Array, bk: Backend, cfg: RunConfig,
+              mcfg: ModelConfig) -> jax.Array:
+    """x_full (B, S, d) -> logits (B, S, V_loc) (vocab-sharded)."""
+    if mcfg.tie_embeddings:
+        table = bk.param_ag(p["table"], dim=1).astype(cdtype(cfg))
+        return jnp.einsum("bsd,vd->bsv", x_full, table)
+    head = bk.param_ag(p["head"], dim=0).astype(cdtype(cfg))
+    return x_full @ head
+
+
+def sharded_xent(logits: jax.Array, labels: jax.Array, bk: Backend,
+                 mcfg: ModelConfig, *, z_loss: float = 0.0):
+    """logits (B,S,V_loc) vocab-sharded; labels (B,S) global ids.
+
+    Returns (per-token loss (B,S) fp32, aux metrics). Uses narrow-channel
+    pmax/psum for the softmax stats — the textbook latency-critical smalls.
+    """
+    v_loc = logits.shape[-1]
+    off = bk.axis_index("model") * v_loc
+    gid = off + jnp.arange(v_loc)
+    logits = jnp.where((gid < mcfg.vocab_size)[None, None, :],
+                       logits.astype(jnp.float32), -1e30)
+    m = jax.lax.stop_gradient(bk.pmax_model(jnp.max(logits, axis=-1)))
+    se = bk.psum_model(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    lse = jnp.log(se) + m
+    lab_local = jnp.clip(labels - off, 0, v_loc - 1)
+    hit = (labels >= off) & (labels < off + v_loc)
+    lab_logit = bk.psum_model(
+        jnp.where(hit, jnp.take_along_axis(logits, lab_local[..., None],
+                                           axis=-1)[..., 0], 0.0))
+    loss = lse - lab_logit
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss
+
+
+def chunked_xent(embed_params, x_full: jax.Array, labels: jax.Array,
+                 mask: jax.Array, bk: Backend, cfg: RunConfig,
+                 mcfg: ModelConfig, *, z_loss: float = 0.0,
+                 chunk: int = 512):
+    """Fused LM-head + cross-entropy over sequence chunks.
+
+    The (B, S, V_loc) logits are never materialized: each chunk's logits are
+    computed, reduced to (loss_sum, count), and **rematerialized in the
+    backward pass** (jax.checkpoint), bounding the peak buffer to
+    (B, chunk, V_loc). This is what lets the big-vocab archs
+    (llama*: 128k, scout: 202k) fit the per-device memory budget.
+    """
+    B, S, d = x_full.shape
+    if mcfg.tie_embeddings:
+        head = bk.param_ag(embed_params["table"], dim=1).astype(cdtype(cfg)).T
+    else:
+        head = bk.param_ag(embed_params["head"], dim=0).astype(cdtype(cfg))
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+    xc = jnp.moveaxis(x_full.reshape(B, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        x_i, l_i, m_i = inp
+        logits = x_i @ head
+        loss_tok = sharded_xent(logits, l_i, bk, mcfg, z_loss=z_loss)
+        ls, cnt = carry
+        return (ls + jnp.sum(loss_tok * m_i), cnt + jnp.sum(m_i)), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc, mc))
+    return loss_sum, count

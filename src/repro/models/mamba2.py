@@ -1,0 +1,164 @@
+"""Mamba-2 (SSD) mixer block, tensor-parallel over SSD heads.
+
+Sharding: d_inner channels (== heads*head_dim) column-parallel over `model`;
+B/C/dt projections replicated (n_groups=1, as in the published config —
+matching the official Mamba-2 TP scheme where groups don't split); out
+projection row-parallel with seq reduce-scatter. The sequence dim stays
+local (chunked SSD scan is sequence-recurrent, no ring needed).
+
+State caches for decode: conv state (B, W-1, conv_ch_loc) + SSD state
+(B, H_loc, P, N).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig
+from ..dist.backend import Backend
+from ..dist.params import ParamSpec
+from ..kernels import ops
+from .layers import cdtype, pad_mult, wspec
+
+
+def ssm_dims(cfg: RunConfig, mcfg: ModelConfig):
+    model = cfg.tp_size
+    h_pad = pad_mult(mcfg.ssm_heads, model)
+    h_loc = h_pad // model
+    p_dim = mcfg.ssm_head_dim
+    di_pad = h_pad * p_dim
+    return h_pad, h_loc, p_dim, di_pad
+
+
+def ssm_specs(cfg: RunConfig, mcfg: ModelConfig, stack: int | None = None) -> dict:
+    d = mcfg.d_model
+    N = mcfg.ssm_state
+    h_pad, _, p_dim, di_pad = ssm_dims(cfg, mcfg)
+    W = mcfg.conv_width
+    return {
+        # x and z (gate) projections: column-parallel over heads
+        "wx": wspec((d, h_pad, p_dim), cfg, model_dim=1, data_dim=0,
+                    fan_in_axes=(0,), stack=stack),
+        "wz": wspec((d, h_pad, p_dim), cfg, model_dim=1, data_dim=0,
+                    fan_in_axes=(0,), stack=stack),
+        # B, C projections: replicated over model (n_groups=1)
+        "wB": wspec((d, N), cfg, model_dim=None, data_dim=0,
+                    fan_in_axes=(0,), stack=stack),
+        "wC": wspec((d, N), cfg, model_dim=None, data_dim=0,
+                    fan_in_axes=(0,), stack=stack),
+        "wdt": wspec((d, h_pad), cfg, model_dim=1, data_dim=0,
+                     fan_in_axes=(0,), stack=stack),
+        "dt_bias": wspec((h_pad,), cfg, model_dim=0, data_dim=None,
+                         init="zeros", stack=stack),
+        "A_log": wspec((h_pad,), cfg, model_dim=0, data_dim=None,
+                       init="zeros", stack=stack),
+        "D": wspec((h_pad,), cfg, model_dim=0, data_dim=None,
+                   init="ones", stack=stack),
+        # depthwise causal conv over x channels (local) — B/C conv replicated
+        "conv_x": wspec((h_pad * p_dim, W), cfg, model_dim=0, data_dim=None,
+                        init="scaled", fan_in_axes=(1,), stack=stack),
+        "conv_bc": wspec((2 * N, W), cfg, model_dim=None, data_dim=None,
+                         init="scaled", fan_in_axes=(1,), stack=stack),
+        "wo": wspec((h_pad, p_dim, d), cfg, model_dim=0, data_dim=2,
+                    fan_in_axes=(0, 1), stack=stack),
+    }
+
+
+def _head_mask(bk: Backend, mcfg: ModelConfig, h_loc: int):
+    ridx = bk.axis_index("model")
+    gids = ridx * h_loc + jnp.arange(h_loc)
+    return (gids < mcfg.ssm_heads).astype(jnp.float32)
+
+
+def apply_ssm(p, x_sp: jax.Array, x_full: jax.Array, bk: Backend,
+              cfg: RunConfig, mcfg: ModelConfig, *, cache=None,
+              mode: str = "train"):
+    """x_sp: (B, S_loc, d) sequence-sharded; x_full: (B, S, d) gathered.
+
+    Head-sharded projections (x/z/dt) consume x_full; the model-replicated
+    B/C projections + conv consume x_sp (local-chunk gradients) with a
+    ppermute halo for the causal conv across chunk boundaries, and their
+    tiny outputs ride a seq all-gather (replicated-weight rule, DESIGN §4).
+
+    Train/prefill: returns (partial_out (B,S,d), new_cache|None).
+    Decode (S==1): single-step state update.
+    """
+    decode = mode == "decode"
+    B, S, d = x_full.shape
+    N = mcfg.ssm_state
+    W = mcfg.conv_width
+    h_loc = p["A_log"].shape[0]
+    p_dim = mcfg.ssm_head_dim
+    mask = _head_mask(bk, mcfg, h_loc)
+    wbc = jnp.concatenate([p["wB"], p["wC"]], axis=1)
+
+    xz = jnp.einsum("bsd,dhe->bshe", x_full, p["wx"])    # (B,S,h_loc,P)
+    z = jnp.einsum("bsd,dhe->bshe", x_full, p["wz"])
+    dt_raw = x_full @ p["wdt"] + p["dt_bias"]            # (B,S,h_loc)
+
+    xf = xz.reshape(B, S, h_loc * p_dim)
+    if decode:
+        bc = x_full[:, 0] @ wbc                          # (B, 2N)
+        conv_state, ssd_state, conv_bc_state = cache
+        xc, new_conv = ops.causal_conv1d_step(xf[:, 0], p["conv_x"], conv_state)
+        bcc, new_bc = ops.causal_conv1d_step(bc, p["conv_bc"], conv_bc_state)
+        xc = jax.nn.silu(xc).reshape(B, h_loc, p_dim)
+        bcc = jax.nn.silu(bcc)
+        Bv, Cv = bcc[:, :N][:, None, :], bcc[:, N:][:, None, :]   # (B,1,N)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32))
+        y, ssd_state = ops.ssd_decode(ssd_state, xc, dt, p["A_log"], Bv, Cv,
+                                      p["D"].astype(jnp.float32))
+        y = y[:, None]                                    # (B,1,h_loc,P)
+        new_cache = (new_conv, ssd_state, new_bc)
+    else:
+        prev_conv = None if cache is None else cache[0]
+        xc, conv_state = ops.causal_conv1d(xf, p["conv_x"], prev_conv)
+        if mode == "train" and bk.model > 1:
+            # replicated-weight rule: conv B/C on the local chunk with a
+            # ppermute halo, then all-gather the tiny result
+            bc_sp = x_sp @ wbc                           # (B, S_loc, 2N)
+            halo = jax.lax.ppermute(
+                bc_sp[:, -(W - 1):, :], "model",
+                [(i, i + 1) for i in range(bk.model - 1)])
+            bcc_sp, _ = ops.causal_conv1d(bc_sp, p["conv_bc"], halo)
+            bcc = bk.seq_ag(bcc_sp, dim=1)
+            conv_bc_state = None
+        else:
+            bc_full = (bk.seq_ag(x_sp @ wbc, dim=1)
+                       if bk.model > 1 else x_sp @ wbc)
+            prev_bc = None if cache is None else cache[2]
+            bcc, conv_bc_state = ops.causal_conv1d(bc_full, p["conv_bc"],
+                                                   prev_bc)
+        xc = jax.nn.silu(xc).reshape(B, S, h_loc, p_dim)
+        bcc = jax.nn.silu(bcc)
+        Bv = bcc[..., :N][:, :, None, :]                  # (B,S,1,N)
+        Cv = bcc[..., N:][:, :, None, :]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+        h0 = None if cache is None else cache[1]
+        chunk = mcfg.ssd_chunk if S % mcfg.ssd_chunk == 0 else S
+        y, ssd_state = ops.ssd(xc, dt, p["A_log"], Bv, Cv,
+                               p["D"].astype(jnp.float32), chunk=chunk,
+                               h0=h0, return_final_state=True)
+        new_cache = (conv_state, ssd_state, conv_bc_state)
+
+    y = y * jax.nn.silu(z if not decode else z[:, :1])
+    y = y * mask[None, None, :, None].astype(y.dtype)
+    out = jnp.einsum("bshe,hed->bsd", y, p["wo"])         # partial over model
+    return out, new_cache
+
+
+def ssm_cache_shapes(cfg: RunConfig, mcfg: ModelConfig, batch_loc: int):
+    """Per-layer decode cache ShapeDtypeStructs (local shapes)."""
+    h_pad, h_loc, p_dim, _ = ssm_dims(cfg, mcfg)
+    W = mcfg.conv_width
+    N = mcfg.ssm_state
+    dt = jnp.dtype(cfg.compute_dtype)
+    return (
+        jax.ShapeDtypeStruct((batch_loc, W - 1, h_loc * p_dim), dt),
+        jax.ShapeDtypeStruct((batch_loc, h_loc, p_dim, N), jnp.float32),
+        jax.ShapeDtypeStruct((batch_loc, W - 1, 2 * N), dt),
+    )

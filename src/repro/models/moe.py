@@ -1,0 +1,183 @@
+"""Mixture-of-Experts FF with expert parallelism over the `model` axis.
+
+Two strategies, selected statically (DESIGN.md §4):
+
+* **EP** (``num_experts % model == 0``): tokens stay sequence-sharded; the
+  router runs locally and tokens ride an ``all_to_all`` to their expert's
+  rank — the textbook *wide* DMA burst of the paper, while router
+  logits/aux-counters are *narrow* psums. Used by llama4-scout (16e/16).
+* **TP-MoE** (``num_experts % model != 0``): every rank holds an ff-slice of
+  every expert; tokens are dispatched locally into capacity buffers and the
+  expert matmuls are ff-sharded (no all_to_all; reuses the block's seq
+  AG/RS). Used by grok-1 (8e on a 16-wide axis).
+
+Dispatch is capacity-based (GShard): per-expert capacity
+``C = ceil(T * top_k * capacity_factor / E)``; overflow tokens drop (their
+residual path still carries them). Aux: load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, RunConfig
+from ..dist.backend import Backend
+from ..dist.params import ParamSpec
+from .layers import cdtype, wspec
+
+
+def moe_specs(cfg: RunConfig, mcfg: ModelConfig, stack: int | None = None) -> dict:
+    d, ff, E = mcfg.d_model, mcfg.d_ff, mcfg.num_experts
+    ep = E % cfg.tp_size == 0
+    # EP: experts sharded over model on dim 0; TP: ff sharded on dim 2
+    e_model_dim, f_model_dim = (0, None) if ep else (None, 2)
+    out = {
+        "router": wspec((d, E), cfg, model_dim=None, data_dim=None,
+                        init="scaled", fan_in_axes=(0,), stack=stack),
+        "wi": wspec((E, d, ff), cfg, model_dim=e_model_dim if ep else 2,
+                    data_dim=1, fan_in_axes=(1,), stack=stack),
+        "wd": wspec((E, ff, d), cfg, model_dim=0 if ep else 1,
+                    data_dim=2, fan_in_axes=(1,), stack=stack),
+    }
+    if mcfg.mlp_act == "swiglu":
+        out["wg"] = wspec((E, d, ff), cfg, model_dim=0 if ep else 2,
+                          data_dim=1, fan_in_axes=(1,), stack=stack)
+    if mcfg.shared_expert:
+        out["s_wi"] = wspec((d, ff), cfg, model_dim=1, data_dim=0,
+                            fan_in_axes=(0,), stack=stack)
+        out["s_wd"] = wspec((ff, d), cfg, model_dim=0, data_dim=1,
+                            fan_in_axes=(0,), stack=stack)
+        if mcfg.mlp_act == "swiglu":
+            out["s_wg"] = wspec((d, ff), cfg, model_dim=1, data_dim=0,
+                                fan_in_axes=(0,), stack=stack)
+    return out
+
+
+def _expert_ff(p, x, mcfg: ModelConfig):
+    """x: (E_loc, C, d) -> (E_loc, C, d); batched over local experts."""
+    h = jnp.einsum("ecd,edf->ecf", x, p["wi"])
+    if mcfg.mlp_act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wd"])
+
+
+def _route(logits: jax.Array, mcfg: ModelConfig):
+    """logits (T, E) fp32 -> (topk_idx (T,k), topk_p (T,k), aux dict)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = mcfg.top_k
+    topk_p, topk_idx = jax.lax.top_k(probs, k)
+    if k > 1:
+        topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+    E = mcfg.num_experts
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(topk_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return topk_idx, topk_p, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+
+
+def _router_logits(p, x: jax.Array) -> jax.Array:
+    """x (..., d) -> (..., E) in fp32 (router math is always fp32)."""
+    return x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+
+
+def _dispatch(x_tok, topk_idx, topk_p, E: int, C: int):
+    """Capacity-based scatter into (E, C, d) buffers.
+
+    Returns (buffer, combine_fn(y_buffer) -> (T, d)).
+    """
+    T, d = x_tok.shape
+    k = topk_idx.shape[1]
+    flat_e = topk_idx.reshape(-1)                                # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                         # position per expert
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < C
+    x_rep = jnp.repeat(x_tok, k, axis=0)                         # (T*k, d)
+    buf = jnp.zeros((E, C, d), x_tok.dtype)
+    e_idx = jnp.where(keep, flat_e, 0)
+    p_idx = jnp.where(keep, flat_pos, C - 1)
+    buf = buf.at[e_idx, p_idx].add(
+        jnp.where(keep[:, None], x_rep, 0), mode="drop")
+
+    flat_p = topk_p.reshape(-1).astype(x_tok.dtype)
+
+    def combine(y_buf):
+        y_tok = y_buf[e_idx, p_idx]                              # (T*k, d)
+        y_tok = jnp.where(keep[:, None], y_tok, 0) * flat_p[:, None]
+        return jnp.sum(y_tok.reshape(T, k, d), axis=1)
+
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return buf, combine, frac_dropped
+
+
+def apply_moe(p, x_sp: jax.Array, x_full: jax.Array | None, bk: Backend,
+              cfg: RunConfig, mcfg: ModelConfig, *, sp: bool = True):
+    """MoE FF. Returns (delta (B,S_loc,d), aux) — already reduced.
+
+    x_sp: sequence-sharded input (B, S_loc, d) — used by the EP path.
+    x_full: gathered input (B, S, d) or None — used by the TP path (the
+    caller reuses the block's AG; partial output is reduced here).
+    sp: sequence-parallel mode (train/prefill); decode reduces with psum.
+    """
+    E = mcfg.num_experts
+    ep = E % bk.model == 0
+    dt = cdtype(cfg)
+    reduce = (lambda t: bk.seq_rs(t, dim=1)) if sp else bk.psum_model
+
+    if ep:
+        B, S_loc, d = x_sp.shape
+        T = B * S_loc
+        x_tok = x_sp.reshape(T, d)
+        topk_idx, topk_p, aux = _route(_router_logits(p, x_tok), mcfg)
+        # objective = mean over rank-chunks; psum_inv keeps grads per-chunk
+        aux = {k: bk.psum_model(v) / bk.model for k, v in aux.items()}
+        C = int(np.ceil(T * mcfg.top_k * mcfg.capacity_factor / E))
+        C = max(8, -(-C // 8) * 8)
+        buf, combine, dropped = _dispatch(x_tok, topk_idx, topk_p, E, C)
+        # wide burst: (E, C, d) -> rows regrouped by owner rank
+        buf = bk.a2a_model(buf, split_dim=0, concat_dim=1)   # (E_loc, model*C, d)
+        y = _expert_ff(jax.tree.map(lambda w: w.astype(dt), p), buf, mcfg)
+        y = bk.a2a_model(y, split_dim=1, concat_dim=0)       # (E, C, d) back
+        delta = combine(y).reshape(B, S_loc, d)
+        if mcfg.shared_expert:
+            xf = x_full if x_full is not None else bk.seq_ag(x_sp, dim=1)
+            h = xf @ p["s_wi"].astype(dt)
+            if mcfg.mlp_act == "swiglu":
+                h = jax.nn.silu(h) * (xf @ p["s_wg"].astype(dt))
+            else:
+                h = jax.nn.gelu(h)
+            delta = delta + reduce(h @ p["s_wd"].astype(dt))
+        aux["moe_dropped"] = dropped
+        return delta, aux
+
+    # ---- TP-MoE: all experts on every rank, ff-sharded ----------------------
+    assert x_full is not None, "TP-MoE path requires the gathered activations"
+    B, S, d = x_full.shape
+    T = B * S
+    x_tok = x_full.reshape(T, d)
+    # router consumes the seq-sharded activations (local-chunk gradients),
+    # then the tiny logits ride a seq all-gather — replicated-weight rule.
+    logits_sp = _router_logits(p, x_sp)            # (B, S_loc, E) or (B,1,E)
+    logits = (bk.seq_ag(logits_sp, dim=1) if sp else logits_sp).reshape(T, E)
+    topk_idx, topk_p, aux = _route(logits, mcfg)
+    C = int(np.ceil(T * mcfg.top_k * mcfg.capacity_factor / E))
+    C = max(8, -(-C // 8) * 8)
+    buf, combine, dropped = _dispatch(x_tok, topk_idx, topk_p, E, C)
+    y = _expert_ff(jax.tree.map(lambda w: w.astype(dt), p), buf, mcfg)
+    delta = combine(y).reshape(B, S, d)       # partial over model (ff-sharded)
+    if mcfg.shared_expert:
+        h = x_full @ p["s_wi"].astype(dt)
+        if mcfg.mlp_act == "swiglu":
+            h = jax.nn.silu(h) * (x_full @ p["s_wg"].astype(dt))
+        else:
+            h = jax.nn.gelu(h)
+        delta = delta + h @ p["s_wd"].astype(dt)
+    delta = reduce(delta)
+    aux["moe_dropped"] = dropped
+    return delta, aux

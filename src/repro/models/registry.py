@@ -1,0 +1,11 @@
+"""Arch id -> Model builder."""
+from __future__ import annotations
+
+from ..configs import get_arch
+from ..configs.base import ModelConfig, RunConfig
+from .transformer import Model
+
+
+def build_model(arch: str | ModelConfig, cfg: RunConfig) -> Model:
+    mcfg = get_arch(arch) if isinstance(arch, str) else arch
+    return Model(mcfg, cfg)

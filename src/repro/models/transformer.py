@@ -1,0 +1,554 @@
+"""Generic segmented model covering all assigned architectures.
+
+A model is a list of *segments*: homogeneous runs of identical blocks whose
+parameters are stacked on a leading axis and executed with ``lax.scan``
+(O(1) HLO for 64-layer models — essential for single-core dry-run compiles).
+Heterogeneous layer patterns (VLM cross-attn layers, Hymba global-attention
+layers, whisper enc/dec) become multiple segments via run-length grouping.
+
+Block kinds:
+  dense  — self-attn (full or SWA) + MLP
+  moe    — self-attn + MoE FF (EP or TP; see models/moe.py)
+  ssm    — Mamba-2 SSD mixer (no MLP)
+  hyb    — parallel attn+SSM heads sharing the residual stream + MLP (Hymba)
+  cross  — tanh-gated image cross-attn + gated MLP (VLM inserted layers)
+  enc    — bidirectional self-attn + MLP (whisper encoder)
+  dec    — causal self-attn + cross-attn(enc) + MLP (whisper decoder)
+
+Modes: 'train'/'prefill' use sequence parallelism (activations sharded over
+`model` between blocks); 'decode' keeps the single-token activations
+replicated over `model` and reduces partial outputs with narrow psums.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..dist.backend import Backend
+from ..dist.params import ParamSpec
+from ..kernels import ops
+from . import layers as L
+from . import mamba2, moe as moe_mod
+from .layers import HeadPlan, cdtype
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Segment:
+    name: str
+    kind: str
+    count: int
+    window: int = 0          # sliding window for this segment's self-attn
+    causal: bool = True
+
+
+def build_plan(mcfg: ModelConfig) -> list[Segment]:
+    segs: list[Segment] = []
+    if mcfg.is_enc_dec:
+        segs.append(Segment("enc", "enc", mcfg.num_encoder_layers, causal=False))
+        segs.append(Segment("dec", "dec", mcfg.num_layers))
+        return segs
+
+    kinds = []
+    for i in range(mcfg.num_layers):
+        if mcfg.family == "vlm" and i in mcfg.cross_attn_layers:
+            kinds.append(("cross", 0))
+        elif mcfg.family == "moe":
+            kinds.append(("moe", mcfg.sliding_window))
+        elif mcfg.family == "ssm":
+            kinds.append(("ssm", 0))
+        elif mcfg.family == "hybrid":
+            w = 0 if i in mcfg.global_layers else mcfg.sliding_window
+            kinds.append(("hyb", w))
+        else:
+            kinds.append(("dense", mcfg.sliding_window))
+    # run-length group
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        kind, window = kinds[i]
+        segs.append(Segment(f"seg{len(segs)}_{kind}", kind, j - i, window))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+class Model:
+    def __init__(self, mcfg: ModelConfig, cfg: RunConfig):
+        self.mcfg = mcfg
+        self.cfg = cfg
+        self.plan = build_plan(mcfg)
+        self.head_plan = HeadPlan.build(mcfg.num_heads or 1,
+                                        mcfg.num_kv_heads or 1,
+                                        mcfg.head_dim or 1, cfg.tp_size)
+        from ..dist import params as params_lib
+        self._seg_pspecs = {
+            s.name: params_lib.tree_pspecs(self._block_specs(s.kind, s.count))
+            for s in self.plan
+        }
+
+    def _gather_params(self, bk: Backend, p, pspecs):
+        """Cast to compute dtype + FSDP all-gather over `data` (per layer).
+
+        pspecs carry the stacking axis (leading None); leaves inside the
+        scan body lost it, hence the dim-1 offset.
+        """
+        dt = cdtype(self.cfg)
+
+        def g(x, ps):
+            if x.dtype == jnp.float32:
+                x = x.astype(dt)
+            for i, entry in enumerate(ps):
+                if entry is None:
+                    continue
+                names = entry if isinstance(entry, (tuple, list)) else (entry,)
+                if "data" in names:
+                    return bk.param_ag(x, dim=i - 1)
+            return x
+
+        return jax.tree.map(g, p, pspecs)
+
+    # -- parameter declaration ------------------------------------------------
+    def _block_specs(self, kind: str, stack: int) -> dict:
+        cfg, mcfg = self.cfg, self.mcfg
+        p: dict[str, Any] = {"ln1": L.norm_specs(cfg, mcfg, stack)}
+        if kind in ("dense", "moe", "enc", "dec"):
+            p["attn"] = L.attention_specs(cfg, mcfg, stack)
+        if kind == "dec":
+            p["xattn"] = L.attention_specs(cfg, mcfg, stack)
+            p["lnx"] = L.norm_specs(cfg, mcfg, stack)
+        if kind == "cross":
+            p["xattn"] = L.attention_specs(cfg, mcfg, stack)
+            p["xgate"] = ParamSpec((stack,), jnp.dtype(cfg.param_dtype),
+                                   init="zeros")
+            p["mgate"] = ParamSpec((stack,), jnp.dtype(cfg.param_dtype),
+                                   init="zeros")
+        if kind == "ssm":
+            p["ssm"] = mamba2.ssm_specs(cfg, mcfg, stack)
+            return p  # no MLP, single norm
+        if kind == "hyb":
+            p["attn"] = L.attention_specs(cfg, mcfg, stack)
+            p["ssm"] = mamba2.ssm_specs(cfg, mcfg, stack)
+        if kind == "moe":
+            p["moe"] = moe_mod.moe_specs(cfg, mcfg, stack)
+        elif kind != "ssm":
+            p["mlp"] = L.mlp_specs(cfg, mcfg, stack)
+        p["ln2"] = L.norm_specs(cfg, mcfg, stack)
+        return p
+
+    def param_specs(self) -> dict:
+        cfg, mcfg = self.cfg, self.mcfg
+        tree: dict[str, Any] = {
+            "embed": L.embed_specs(cfg, mcfg),
+            "final_norm": L.norm_specs(cfg, mcfg),
+            "segments": {s.name: self._block_specs(s.kind, s.count)
+                         for s in self.plan},
+        }
+        return tree
+
+    # -- block application ------------------------------------------------------
+    def _self_attn(self, p, x_full, bk, *, seg: Segment, pos, mode,
+                   cache=None, split_kv=False, cache_pos=None, kv_len=None):
+        """Returns (partial_out, new_cache)."""
+        mcfg = self.mcfg
+        plan = self.head_plan
+        theta = mcfg.rope_theta
+        if mode == "decode":
+            rope_q = (cache_pos + jnp.arange(1)) if mcfg.pos_emb == "rope" else None
+            k_new, v_new = L.compute_kv(p, x_full, bk, plan,
+                                        rope_pos=rope_q, theta=theta)
+            kc, vc = cache
+            kc, vc = _cache_append(kc, vc, k_new, v_new, cache_pos, bk,
+                                   split_kv)
+            k_off = (bk.axis_index("data") * kc.shape[1]) if split_kv else 0
+            out = L.attention_core(
+                p, x_full, kc, vc, bk, plan, causal=False, window=seg.window,
+                rope_pos=rope_q, theta=theta,
+                q_offset=cache_pos, k_offset=k_off, kv_len=kv_len,
+                softcap=mcfg.logit_softcap, split_kv=split_kv)
+            return out, (kc, vc)
+        rope_pos = pos if mcfg.pos_emb == "rope" else None
+        k_sel, v_sel = L.compute_kv(p, x_full, bk, plan,
+                                    rope_pos=rope_pos, theta=theta)
+        out = L.attention_core(
+            p, x_full, k_sel, v_sel, bk, plan, causal=seg.causal,
+            window=seg.window, rope_pos=rope_pos, theta=theta,
+            softcap=mcfg.logit_softcap)
+        new_cache = (k_sel, v_sel) if mode == "prefill" else None
+        return out, new_cache
+
+    def _cross_attn(self, p, x_full, bk, *, ctx_kv=None, ctx_full=None):
+        """Cross-attention; kv either precomputed (decode) or from ctx_full."""
+        plan = self.head_plan
+        if ctx_kv is None:
+            k_sel, v_sel = L.compute_kv(p, ctx_full, bk, plan)
+            ctx_kv = (k_sel, v_sel)
+        out = L.attention_core(p, x_full, ctx_kv[0], ctx_kv[1], bk, plan,
+                               causal=False, window=0)
+        return out, ctx_kv
+
+    def _apply_block(self, seg: Segment, p, x, ctx, bk, *, mode,
+                     pos, cache=None, split_kv=False, cache_pos=None,
+                     kv_len=None):
+        """One block. x: (B, S_loc, d) SP in train/prefill; (B,1,d) decode.
+
+        Returns (x, new_cache, aux).
+        """
+        cfg, mcfg = self.cfg, self.mcfg
+        sp = mode != "decode"
+        aux: dict[str, Any] = {}
+        new_cache: dict[str, Any] = {}
+        p = self._gather_params(bk, p, self._seg_pspecs[seg.name])
+
+        def gather(h):
+            return bk.seq_ag(h, dim=1) if sp else h
+
+        def reduce(partial):
+            return bk.seq_rs(partial, dim=1) if sp else bk.psum_model(partial)
+
+        h = L.apply_norm(p["ln1"], x, mcfg)
+        h_full = gather(h)
+
+        if seg.kind == "ssm":
+            part, c = mamba2.apply_ssm(p["ssm"], h, h_full, bk, cfg, mcfg,
+                                       cache=None if cache is None else cache.get("ssm"),
+                                       mode=mode)
+            if mode != "train":
+                new_cache["ssm"] = c
+            return x + reduce(part).astype(x.dtype), new_cache, aux
+
+        if seg.kind == "cross":
+            part, ckv = self._cross_attn(
+                p["xattn"], h_full, bk,
+                ctx_kv=None if cache is None else cache.get("xkv"),
+                ctx_full=ctx.get("image_embeds"))
+            gate = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gate * reduce(part).astype(x.dtype)
+            if mode != "train":
+                new_cache["xkv"] = ckv
+            h2 = L.apply_norm(p["ln2"], x, mcfg)
+            mgate = jnp.tanh(p["mgate"].astype(jnp.float32)).astype(x.dtype)
+            part2 = L.apply_mlp(p["mlp"], gather(h2), mcfg)
+            return x + mgate * reduce(part2).astype(x.dtype), new_cache, aux
+
+        # --- self-attention (+parallel ssm for hyb) ---
+        if seg.kind in ("dense", "moe", "enc", "dec", "hyb"):
+            part, c = self._self_attn(
+                p["attn"], h_full, bk, seg=seg, pos=pos,
+                mode=mode, cache=None if cache is None else cache.get("attn"),
+                split_kv=split_kv, cache_pos=cache_pos, kv_len=kv_len)
+            if mode != "train" and c is not None:
+                new_cache["attn"] = c
+            if seg.kind == "hyb":
+                part_s, cs = mamba2.apply_ssm(
+                    p["ssm"], h, h_full, bk, cfg, mcfg,
+                    cache=None if cache is None else cache.get("ssm"),
+                    mode=mode)
+                part = 0.5 * (part + part_s)
+                if mode != "train":
+                    new_cache["ssm"] = cs
+            x = x + reduce(part).astype(x.dtype)
+
+        if seg.kind == "dec":
+            hx = L.apply_norm(p["lnx"], x, mcfg)
+            part, ckv = self._cross_attn(
+                p["xattn"], gather(hx), bk,
+                ctx_kv=None if cache is None else cache.get("xkv"),
+                ctx_full=ctx.get("enc_out"))
+            x = x + reduce(part).astype(x.dtype)
+            if mode != "train":
+                new_cache["xkv"] = ckv
+
+        # --- FF ---
+        h2 = L.apply_norm(p["ln2"], x, mcfg)
+        if seg.kind == "moe":
+            h2_full = gather(h2) if (self.mcfg.num_experts % bk.model != 0
+                                     or self.mcfg.shared_expert) else None
+            delta, moe_aux = moe_mod.apply_moe(p["moe"], h2, h2_full, bk,
+                                               cfg, mcfg, sp=sp)
+            x = x + delta.astype(x.dtype)   # reduced inside apply_moe
+            aux.update(moe_aux)
+        else:
+            part2 = L.apply_mlp(p["mlp"], gather(h2), mcfg)
+            x = x + reduce(part2).astype(x.dtype)
+        return x, new_cache, aux
+
+    # -- backbone over segments -------------------------------------------------
+    def _segment_scan(self, seg: Segment, p_seg, x, ctx, bk, *, mode, pos,
+                      cache=None, split_kv=False, cache_pos=None, kv_len=None):
+        """Scan a segment's stacked params (+cache) over its count."""
+        remat = self.cfg.remat != "none" and mode == "train"
+
+        def body(x, inp):
+            p_i, c_i = inp
+            x, c_new, aux = self._apply_block(
+                seg, p_i, x, ctx, bk, mode=mode, pos=pos, cache=c_i,
+                split_kv=split_kv, cache_pos=cache_pos, kv_len=kv_len)
+            return x, (c_new, aux)
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+
+        if cache is None:
+            x, (caches, auxs) = jax.lax.scan(
+                lambda carry, p_i: body(carry, (p_i, None)), x, p_seg)
+        else:
+            x, (caches, auxs) = jax.lax.scan(body, x, (p_seg, cache))
+        aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), auxs)
+        return x, caches, aux
+
+    def backbone(self, params, x, ctx, bk: Backend, *, mode, pos,
+                 caches=None, split_kv=False, cache_pos=None, kv_len=None):
+        all_caches = {}
+        all_aux: dict[str, Any] = {}
+        for seg in self.plan:
+            if seg.kind == "enc":
+                continue  # encoder handled separately in encode()
+            c = None if caches is None else caches.get(seg.name)
+            x, c_new, aux = self._segment_scan(
+                seg, params["segments"][seg.name], x, ctx, bk, mode=mode,
+                pos=pos, cache=c, split_kv=split_kv, cache_pos=cache_pos,
+                kv_len=kv_len)
+            if c_new is not None and mode != "train":
+                all_caches[seg.name] = c_new
+            for k, v in aux.items():
+                all_aux[k] = all_aux.get(k, 0.0) + v * seg.count / self.mcfg.num_layers
+        return x, all_caches, all_aux
+
+    def encode(self, params, frames_sp, bk: Backend):
+        """Whisper encoder: frames_sp (B, S_loc, d) -> enc_out_full (B, S, d)."""
+        seg = self.plan[0]
+        assert seg.kind == "enc"
+        x, _, _ = self._segment_scan(seg, params["segments"][seg.name],
+                                     frames_sp, {}, bk, mode="train", pos=None)
+        return bk.seq_ag(x, dim=1)
+
+    # ------------------------------------------------------------------
+    # Top-level entry points (run INSIDE shard_map; see dist/step.py)
+    # ------------------------------------------------------------------
+    def _prepare_ctx(self, params, batch, bk: Backend, *, sp: bool = True):
+        """Modality stubs -> cross-attention context. Returns (ctx, x_extra)."""
+        mcfg, cfg = self.mcfg, self.cfg
+        ctx: dict[str, Any] = {}
+        if mcfg.family == "vlm":
+            ctx["image_embeds"] = batch["image_embeds"].astype(cdtype(cfg))
+        if mcfg.is_enc_dec and "frames" in batch:
+            frames = batch["frames"].astype(cdtype(cfg))     # (B, S_enc, d)
+            B, S_enc, d = frames.shape
+            s_loc = S_enc // bk.model
+            ridx = bk.axis_index("model")
+            fr_sp = jax.lax.dynamic_slice_in_dim(frames, ridx * s_loc, s_loc, 1)
+            pos = ridx * s_loc + jnp.arange(s_loc)
+            fr_sp = fr_sp + L.sinusoidal_pos(pos, d, fr_sp.dtype)[None]
+            ctx["enc_out"] = self.encode(params, fr_sp, bk)
+        return ctx
+
+    def _embed_sp(self, params, tokens, bk: Backend):
+        """tokens (B,S) -> x_sp (B, S_loc, d) with positional handling."""
+        mcfg, cfg = self.mcfg, self.cfg
+        x_sp = L.embed_lookup(params["embed"], tokens, bk, cfg, mcfg)
+        if mcfg.pos_emb == "sinusoidal":
+            B, s_loc, d = x_sp.shape
+            ridx = bk.axis_index("model")
+            pos = ridx * s_loc + jnp.arange(s_loc)
+            x_sp = x_sp + L.sinusoidal_pos(pos, d, x_sp.dtype)[None]
+        return x_sp
+
+    def loss_fn(self, params, batch, bk: Backend):
+        """Causal-LM loss. batch: tokens/labels (B_loc, S) + modality stubs.
+
+        Returns (loss, metrics). Labels < 0 are masked.
+        """
+        mcfg, cfg = self.mcfg, self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        ctx = self._prepare_ctx(params, batch, bk)
+        x_sp = self._embed_sp(params, tokens, bk)
+        pos = jnp.arange(S)
+        x_sp, _, aux = self.backbone(params, x_sp, ctx, bk, mode="train",
+                                     pos=pos)
+        x_sp = L.apply_norm(params["final_norm"], x_sp, mcfg)
+        x_full = bk.seq_ag(x_sp, dim=1)
+        mask = (labels >= 0).astype(jnp.float32)
+        loss_sum, count = L.chunked_xent(
+            params["embed"], x_full, jnp.maximum(labels, 0), mask, bk, cfg,
+            mcfg, z_loss=1e-4)
+        # narrow-channel flit-packed metric reduction across dp ranks
+        red = bk.psum_scalar_metrics({"loss_sum": loss_sum, "count": count})
+        loss = red["loss_sum"] / jnp.maximum(red["count"], 1.0)
+        total = loss
+        metrics = {"ce_loss": loss}
+        if "moe_lb_loss" in aux:
+            total = total + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+            metrics.update({k: aux[k] for k in
+                            ("moe_lb_loss", "moe_z_loss", "moe_dropped")})
+        return total, metrics
+
+    def prefill(self, params, batch, bk: Backend):
+        """Prefill: returns (last-token logits (B,1,V_loc), caches)."""
+        mcfg, cfg = self.mcfg, self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        ctx = self._prepare_ctx(params, batch, bk)
+        x_sp = self._embed_sp(params, tokens, bk)
+        pos = jnp.arange(S)
+        x_sp, caches, _ = self.backbone(params, x_sp, ctx, bk, mode="prefill",
+                                        pos=pos)
+        x_sp = L.apply_norm(params["final_norm"], x_sp, mcfg)
+        x_full = bk.seq_ag(x_sp, dim=1)
+        logits = L.lm_logits(params["embed"], x_full[:, -1:], bk, cfg, mcfg)
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, pos, bk: Backend,
+                    *, split_kv: bool = False):
+        """One decode step. tokens (B,1); pos: scalar int32 (current length).
+
+        Returns (logits (B,1,V_loc), new caches).
+        """
+        mcfg, cfg = self.mcfg, self.cfg
+        x = L.embed_lookup(params["embed"], tokens, bk, cfg, mcfg, sp=False)
+        if mcfg.pos_emb == "sinusoidal":
+            x = x + L.sinusoidal_pos(pos + jnp.arange(1), x.shape[-1],
+                                     x.dtype)[None]
+        x, caches, _ = self.backbone(params, x, {}, bk, mode="decode",
+                                     pos=pos, caches=caches,
+                                     split_kv=split_kv, cache_pos=pos,
+                                     kv_len=pos + 1)
+        x = L.apply_norm(params["final_norm"], x, mcfg)
+        logits = L.lm_logits(params["embed"], x, bk, cfg, mcfg)
+        return logits, caches
+
+    # ------------------------------------------------------------------
+    # Input / cache specs (global shapes + PartitionSpecs; no allocation)
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, *, split_kv: bool | None = None):
+        """ShapeDtypeStructs + PartitionSpecs for every model input."""
+        from jax.sharding import PartitionSpec as P
+        mcfg, cfg = self.mcfg, self.cfg
+        dp = cfg.dp_axes_eff
+        dpx = dp if len(dp) > 1 else dp[0]
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.compute_dtype)
+        if split_kv is None:
+            split_kv = self._auto_split_kv(shape)
+        batch_spec = P() if split_kv else P(dpx)
+
+        if shape.kind in ("train", "prefill"):
+            sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            specs = {"tokens": P(dpx, None)}
+            if shape.kind == "train":
+                sds["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+                specs["labels"] = P(dpx, None)
+            if mcfg.family == "vlm":
+                sds["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, mcfg.context_len, mcfg.d_model), dt)
+                specs["image_embeds"] = P(dpx, None, None)
+            if mcfg.is_enc_dec:
+                sds["frames"] = jax.ShapeDtypeStruct((B, S, mcfg.d_model), dt)
+                specs["frames"] = P(dpx, None, None)
+            return sds, specs
+
+        # decode: single-token inputs + caches
+        sds = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+               "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        specs = {"tokens": P(None, None) if split_kv else P(dpx, None),
+                 "pos": P()}
+        return sds, specs
+
+    def _auto_split_kv(self, shape: ShapeConfig) -> bool:
+        dp = self.cfg.mesh.pod * self.cfg.mesh.data
+        if self.cfg.flat_dp:
+            dp *= self.cfg.mesh.model
+        return shape.kind == "decode" and shape.global_batch < dp
+
+    def cache_specs(self, shape: ShapeConfig, *, split_kv: bool | None = None):
+        """Global cache ShapeDtypeStructs + PartitionSpecs for decode."""
+        from jax.sharding import PartitionSpec as P
+        mcfg, cfg = self.mcfg, self.cfg
+        if split_kv is None:
+            split_kv = self._auto_split_kv(shape)
+        dp = cfg.dp_axes_eff
+        dpx = dp if len(dp) > 1 else dp[0]
+        B, S = shape.global_batch, shape.seq_len
+        plan = self.head_plan
+        dt = jnp.dtype(cfg.compute_dtype)
+        n_kv_g = plan.n_kv_loc * cfg.tp_size
+
+        if split_kv:
+            b_spec, s_spec = None, "data"
+        else:
+            b_spec, s_spec = dpx, None
+
+        sds: dict[str, Any] = {}
+        specs: dict[str, Any] = {}
+        for seg in self.plan:
+            if seg.kind == "enc":
+                continue
+            entry_sds: dict[str, Any] = {}
+            entry_spec: dict[str, Any] = {}
+            if seg.kind in ("dense", "moe", "dec", "hyb"):
+                kv = jax.ShapeDtypeStruct((seg.count, B, S, n_kv_g, mcfg.head_dim), dt)
+                kv_sp = P(None, b_spec, s_spec, "model", None)
+                entry_sds["attn"] = (kv, kv)
+                entry_spec["attn"] = (kv_sp, kv_sp)
+            if seg.kind in ("ssm", "hyb"):
+                h_pad, h_loc, p_dim, _ = mamba2.ssm_dims(cfg, mcfg)
+                W, N = mcfg.conv_width, mcfg.ssm_state
+                entry_sds["ssm"] = (
+                    jax.ShapeDtypeStruct((seg.count, B, W - 1, h_pad * p_dim), dt),
+                    jax.ShapeDtypeStruct((seg.count, B, h_pad, p_dim, N), jnp.float32),
+                    jax.ShapeDtypeStruct((seg.count, B, W - 1, 2 * N), dt),
+                )
+                entry_spec["ssm"] = (
+                    P(None, b_spec, None, "model"),
+                    P(None, b_spec, "model", None, None),
+                    P(None, b_spec, None, None),
+                )
+            if seg.kind in ("dec", "cross"):
+                S_ctx = mcfg.context_len if seg.kind == "cross" else S
+                xkv = jax.ShapeDtypeStruct((seg.count, B, S_ctx, n_kv_g,
+                                            mcfg.head_dim), dt)
+                xkv_sp = P(None, b_spec, None, "model", None)
+                entry_sds["xkv"] = (xkv, xkv)
+                entry_spec["xkv"] = (xkv_sp, xkv_sp)
+            sds[seg.name] = entry_sds
+            specs[seg.name] = entry_spec
+        return sds, specs
+
+
+def _cast(tree, cfg: RunConfig):
+    dt = cdtype(cfg)
+    return jax.tree.map(
+        lambda w: w.astype(dt) if w.dtype == jnp.float32 else w, tree)
+
+
+def _cache_append(kc, vc, k_new, v_new, pos, bk: Backend, split_kv: bool):
+    """Write the new token's kv at `pos` (global) into the cache.
+
+    split_kv: cache seq dim is sharded over `data`; only the owner writes.
+    """
+    if split_kv:
+        s_loc = kc.shape[1]
+        didx = bk.axis_index("data")
+        owner = (pos // s_loc) == didx
+        p_loc = pos % s_loc
+        kc_up = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), p_loc, 1)
+        vc_up = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), p_loc, 1)
+        kc = jnp.where(owner, kc_up, kc)
+        vc = jnp.where(owner, vc_up, vc)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), pos, 1)
+    return kc, vc

@@ -1,0 +1,51 @@
+"""KV-cache management for the serving engine.
+
+Caches are the model's per-segment trees (transformer.cache_specs).
+This module provides allocation from specs, prefill->decode promotion
+(padding the prefill-length cache into the decode-capacity buffer), and
+simple occupancy accounting.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from ..configs.base import RunConfig, ShapeConfig
+from ..dist import params as params_lib
+
+
+def allocate(model, shape: ShapeConfig, mesh, *, split_kv: bool = False):
+    """Zero-filled decode cache with the model's sharding."""
+    sds, specs = model.cache_specs(shape, split_kv=split_kv)
+
+    def mk(s, p):
+        return jax.device_put(jnp.zeros(s.shape, s.dtype),
+                              NamedSharding(mesh, p))
+
+    return jax.tree.map(mk, sds, specs)
+
+
+def promote(prefill_caches: Any, decode_capacity: int) -> Any:
+    """Pad prefill caches (seq dim = prompt length) to decode capacity.
+
+    Attention caches are (count, B, S, n_kv, hd): pad dim 2; cross-attn and
+    SSM caches pass through unchanged.
+    """
+    def pad_seg(seg: dict) -> dict:
+        out = {}
+        for k, v in seg.items():
+            if k == "attn":
+                out[k] = tuple(
+                    jnp.pad(a, ((0, 0), (0, 0),
+                                (0, decode_capacity - a.shape[2]),
+                                (0, 0), (0, 0)))
+                    for a in v)
+            else:
+                out[k] = v
+        return out
+
+    return {name: pad_seg(seg) for name, seg in prefill_caches.items()}

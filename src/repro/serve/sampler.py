@@ -1,0 +1,35 @@
+"""Token samplers over vocab-sharded logits.
+
+Greedy sampling is fully distributed (local arg-max + narrow-channel
+combine encodes (value, index) so no full-vocab gather ever happens);
+temperature/top-k gather the (small) per-rank top-k candidates only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_local(logits, v_offset):
+    """logits (B, 1, V_loc) -> (val (B,), idx_global (B,)) local candidates."""
+    val = jnp.max(logits[:, 0, :], axis=-1)
+    idx = jnp.argmax(logits[:, 0, :], axis=-1) + v_offset
+    return val.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def combine_greedy(val, idx, pmax, psum):
+    """Exact distributed argmax via value pmax + masked index psum."""
+    best = pmax(val)
+    mine = (val >= best)
+    # ties: lowest global index wins (psum of min-encoded)
+    cand = jnp.where(mine, idx, jnp.int32(2 ** 30))
+    chosen = -pmax(-cand)
+    return chosen
+
+
+def sample_temperature(logits_full, key, *, temperature=1.0, top_k=0):
+    x = logits_full.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k > 0:
+        v, _ = jax.lax.top_k(x, top_k)
+        x = jnp.where(x < v[..., -1:], -1e30, x)
+    return jax.random.categorical(key, x, axis=-1)

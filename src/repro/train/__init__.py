@@ -1,0 +1,1 @@
+from . import checkpoint, data, elastic, optimizer, straggler  # noqa: F401

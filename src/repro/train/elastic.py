@@ -1,0 +1,36 @@
+"""Elastic scaling: re-derive the mesh for a changed world size and restore
+checkpoints across the re-shard.
+
+Policy: keep the `model` axis fixed (TP degree is an arch property), scale
+`data` (and `pod`) with the fleet. A host failure therefore shrinks `data`
+by one row (16 chips) at the next restart boundary; the checkpoint restore
+path (train/checkpoint.py) reassembles any target sharding from the shard
+files, so no reshard tool is needed.
+"""
+from __future__ import annotations
+
+from ..configs.base import MeshConfig
+
+
+def choose_mesh(num_devices: int, *, model: int = 16,
+                pod_size: int = 256) -> MeshConfig:
+    """Factor a (possibly shrunk) device count into (pod, data, model)."""
+    assert num_devices % model == 0, (num_devices, model)
+    rows = num_devices // model                   # data rows across pods
+    if num_devices > pod_size:
+        pods = max(1, num_devices // pod_size)
+        data = rows // pods
+        return MeshConfig(data=data, model=model, pod=pods)
+    return MeshConfig(data=rows, model=model, pod=1)
+
+
+def degraded_meshes(start: MeshConfig, failures: int) -> list[MeshConfig]:
+    """Mesh sequence as rows of chips are quarantined one at a time."""
+    out = []
+    n = start.num_devices
+    for k in range(failures + 1):
+        remaining = n - k * start.model
+        if remaining < start.model:
+            break
+        out.append(choose_mesh(remaining, model=start.model))
+    return out

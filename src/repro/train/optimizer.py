@@ -1,0 +1,241 @@
+"""Sharded AdamW with optional 8-bit block-quantized states.
+
+Runs INSIDE shard_map on local parameter shards. Correctness rule for
+gradient synchronisation (DESIGN.md §4): a parameter's gradient must be
+all-reduced over every mesh axis that does **not** appear in its
+PartitionSpec (replicated axes see different local contributions).
+FSDP-sharded dims already reduced inside the backward pass (transpose of
+the parameter all-gather), which is why 'data' never shows up in the sync
+set for FSDP leaves.
+
+8-bit states (``opt_state_bits=8``): m and v are stored int8 with per-block
+fp32 scales along the last axis; the block size is chosen per-leaf so it
+divides the *local* last-dim extent (so quantization blocks never straddle
+shard boundaries). This is what lets grok-1-314b's optimizer fit one pod.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import MeshConfig, RunConfig
+from ..dist.backend import Backend
+from ..dist.params import ParamSpec, is_spec
+
+_B1, _B2, _EPS = 0.9, 0.95, 1e-8
+_INT8_MAX = 127.0
+
+
+# ---------------------------------------------------------------------------
+# grad sync axes
+# ---------------------------------------------------------------------------
+def pspec_axes(pspec: P) -> set[str]:
+    out: set[str] = set()
+    for entry in pspec:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            out.update(entry)
+        else:
+            out.add(entry)
+    return out
+
+
+def sync_axes_for(pspec: P, mesh: MeshConfig) -> tuple[str, ...]:
+    used = pspec_axes(pspec)
+    return tuple(a for a in mesh.axis_names if a not in used)
+
+
+def sync_grads(grads: Any, pspecs: Any, bk: Backend) -> Any:
+    """Group leaves by sync-axes set; dual-channel all-reduce each group."""
+    from ..core import channels
+    g_leaves, treedef = jax.tree.flatten(grads)
+    s_leaves = treedef.flatten_up_to(pspecs)
+    groups: dict[tuple[str, ...], list[int]] = {}
+    for i, ps in enumerate(s_leaves):
+        axes = sync_axes_for(ps, bk.mesh_cfg)
+        if axes:
+            groups.setdefault(axes, []).append(i)
+    out = list(g_leaves)
+    for axes, idxs in sorted(groups.items()):
+        sizes = [(a, bk.axis_size(a)) for a in axes]
+        if all(s == 1 for _, s in sizes):
+            continue
+        sub = [g_leaves[i] for i in idxs]
+        if bk.cfg.grad_compression == "int8-pod" and axes == ("pod",):
+            from ..dist import compression
+            red = compression.compressed_all_reduce_tree(
+                sub, sizes, ledger=bk.ledger,
+                wide_flit_bytes=bk.cfg.wide_flit_bytes)
+        elif bk.is_floo:
+            red = channels.dual_channel_all_reduce(
+                sub, sizes, wide_flit_bytes=bk.cfg.wide_flit_bytes,
+                bidir=bk.cfg.bidir_rings, ledger=bk.ledger)
+        else:
+            names = tuple(a for a, _ in sizes)
+            red = [jax.lax.psum(g, names) for g in sub]
+            for g in sub:
+                bk.ledger.log("psum", names,
+                              int(np.prod(g.shape)) * g.dtype.itemsize,
+                              channels.WIDE, "xla grad AR")
+        for j, i in enumerate(idxs):
+            out[i] = red[j]
+    return jax.tree.unflatten(treedef, out)
+
+
+def global_grad_norm(grads: Any, pspecs: Any, bk: Backend) -> jax.Array:
+    """Global L2 norm of the (synced) gradient across all shards."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    s_leaves = treedef.flatten_up_to(pspecs)
+    total = 0.0
+    for g, ps in zip(g_leaves, s_leaves):
+        repl = 1
+        for a in sync_axes_for(ps, bk.mesh_cfg):
+            repl *= bk.axis_size(a)
+        total = total + jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
+    axes = bk.mesh_cfg.axis_names
+    return jnp.sqrt(jax.lax.psum(total, axes))
+
+
+# ---------------------------------------------------------------------------
+# 8-bit block quantization along the last axis (shard-aligned blocks)
+# ---------------------------------------------------------------------------
+def _block_for(global_last: int, shards: int) -> int:
+    local = max(1, global_last // max(shards, 1))
+    for b in (256, 128, 64, 32, 16, 8, 4, 2):
+        if local % b == 0:
+            return b
+    return 1
+
+
+def _last_axis_shards(pspec: P, shape: tuple[int, ...], mesh: MeshConfig) -> int:
+    if len(pspec) < len(shape):
+        return 1
+    entry = pspec[len(shape) - 1]
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    n = 1
+    for a in names:
+        n *= dict(zip(mesh.axis_names, mesh.shape))[a]
+    return n
+
+
+def q8_zero(shape: tuple[int, ...], block: int):
+    scale_shape = shape[:-1] + (shape[-1] // block,)
+    return (jnp.zeros(shape, jnp.int8), jnp.zeros(scale_shape, jnp.float32))
+
+
+def q8_encode(x: jax.Array, block: int):
+    *lead, last = x.shape
+    xb = x.reshape(*lead, last // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / _INT8_MAX
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def q8_decode(q: jax.Array, scale: jax.Array, block: int):
+    *lead, last = q.shape
+    xb = q.reshape(*lead, last // block, block).astype(jnp.float32)
+    return (xb * scale[..., None]).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = _B1
+    b2: float = _B2
+    eps: float = _EPS
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = (jnp.minimum((step + 1.0) / cfg.warmup, 1.0)
+            if cfg.warmup > 0 else 1.0)
+    prog = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def opt_state_specs(param_tree: Any, run_cfg: RunConfig) -> Any:
+    """ParamSpec tree for (m, v [, scales]) mirroring the param sharding."""
+    mesh = run_cfg.mesh
+
+    def per_leaf(spec: ParamSpec):
+        if run_cfg.opt_state_bits == 8:
+            shards = _last_axis_shards(spec.pspec, spec.shape, mesh)
+            block = _block_for(spec.shape[-1], shards)
+            scale_shape = spec.shape[:-1] + (spec.shape[-1] // block,)
+            scale_pspec = spec.pspec
+            return {
+                "m_q": ParamSpec(spec.shape, jnp.int8, spec.pspec, init="zeros"),
+                "m_s": ParamSpec(scale_shape, jnp.float32, scale_pspec, init="zeros"),
+                "v_q": ParamSpec(spec.shape, jnp.int8, spec.pspec, init="zeros"),
+                "v_s": ParamSpec(scale_shape, jnp.float32, scale_pspec, init="zeros"),
+            }
+        return {
+            "m": ParamSpec(spec.shape, jnp.float32, spec.pspec, init="zeros"),
+            "v": ParamSpec(spec.shape, jnp.float32, spec.pspec, init="zeros"),
+        }
+
+    return jax.tree.map(per_leaf, param_tree, is_leaf=is_spec)
+
+
+def adamw_update(params: Any, grads: Any, opt_state: Any, step: jax.Array,
+                 run_cfg: RunConfig, acfg: AdamWConfig, pspecs: Any,
+                 bk: Backend):
+    """One AdamW step on local shards. Returns (params, opt_state, stats)."""
+    grads = sync_grads(grads, pspecs, bk)
+    gnorm = global_grad_norm(grads, pspecs, bk)
+    clip = jnp.minimum(1.0, acfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(acfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - acfg.b1 ** t
+    bc2 = 1.0 - acfg.b2 ** t
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    s_leaves = treedef.flatten_up_to(opt_state)
+
+    new_p, new_s = [], []
+    for p, g, s in zip(p_leaves, g_leaves, s_leaves):
+        g = g.astype(jnp.float32) * clip
+        if run_cfg.opt_state_bits == 8:
+            block = p.shape[-1] // s["m_s"].shape[-1]
+            m = q8_decode(s["m_q"], s["m_s"], block)
+            v = q8_decode(s["v_q"], s["v_s"], block)
+        else:
+            m, v = s["m"], s["v"]
+        m = acfg.b1 * m + (1 - acfg.b1) * g
+        v = acfg.b2 * v + (1 - acfg.b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + acfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim > 1:
+            upd = upd + acfg.weight_decay * p32
+        p32 = p32 - lr * upd
+        new_p.append(p32.astype(p.dtype))
+        if run_cfg.opt_state_bits == 8:
+            block = p.shape[-1] // s["m_s"].shape[-1]
+            mq, ms = q8_encode(m, block)
+            vq, vs = q8_encode(v, block)
+            new_s.append({"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs})
+        else:
+            new_s.append({"m": m, "v": v})
+
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return (jax.tree.unflatten(treedef, new_p),
+            jax.tree.unflatten(treedef, new_s), stats)

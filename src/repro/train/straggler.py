@@ -1,0 +1,108 @@
+"""Straggler detection + mitigation.
+
+In synchronous SPMD training every step runs at the pace of the slowest
+host. This module provides:
+
+* :class:`StepTimer` — per-step wall-time EMA + z-score detection of a
+  degrading host (in multi-host deployments each host reports its
+  pre-barrier compute time; here the single process stands in),
+* mitigation policies, applied by the training loop:
+    - ``prefetch``   : bump input-pipeline prefetch depth (hides data jitter)
+    - ``rebalance``  : shift one microbatch from the slow host to the
+                       fastest (needs microbatches > 1)
+    - ``quarantine`` : mark the host for removal; the elastic layer shrinks
+                       the mesh at the next checkpoint boundary
+* :class:`SimulatedCluster` — a closed-form harness quantifying each
+  policy's effect on p50/p99 step time for a 1000+-host fleet
+  (benchmarks/straggler_sim.py reports the table).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class StepTimer:
+    alpha: float = 0.05
+    z_threshold: float = 3.0
+    warmup: int = 20
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    _t0: float = 0.0
+    flagged: bool = False
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.n += 1
+        if self.n <= self.warmup:
+            self.mean = dt if self.n == 1 else \
+                (self.mean * (self.n - 1) + dt) / self.n
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return dt
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        z = d / max(np.sqrt(self.var), 1e-9)
+        self.flagged = z > self.z_threshold
+        return dt
+
+
+@dataclass
+class SimulatedCluster:
+    """Order statistics of synchronous step time under stragglers.
+
+    Host step time ~ lognormal(mu, sigma); a fraction `slow_frac` of hosts
+    runs `slow_x` times slower. Synchronous step time = max over hosts.
+    """
+    n_hosts: int = 1024
+    sigma: float = 0.05
+    slow_frac: float = 0.001
+    slow_x: float = 3.0
+    microbatches: int = 4
+    seed: int = 0
+
+    def step_times(self, policy: str = "none", steps: int = 2000) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        base = rng.lognormal(0.0, self.sigma, size=(steps, self.n_hosts))
+        slow = rng.random((steps, self.n_hosts)) < self.slow_frac
+        mult = np.where(slow, self.slow_x, 1.0)
+        if policy == "none":
+            host_t = base * mult
+        elif policy == "rebalance":
+            # slow host sheds 1 of k microbatches to the fastest host:
+            # slow: (k-1)/k of its work; fastest: (k+1)/k
+            k = self.microbatches
+            host_t = base * mult
+            worst = host_t.max(axis=1)
+            shed = np.where(slow.any(axis=1),
+                            worst * (k - 1) / k, worst)
+            others = np.where(slow, 0, base).max(axis=1) * (k + 1) / k
+            host_t = host_t.copy()
+            host_t[np.arange(steps), host_t.argmax(1)] = shed
+            host_t = np.maximum(host_t.max(1), others)
+            return host_t
+        elif policy == "quarantine":
+            # slow host removed after `detect_steps`; amortized: its work
+            # redistributes (n/(n-1) scaling) and tail disappears
+            host_t = base.copy()
+            host_t = host_t.max(axis=1) * (self.n_hosts / (self.n_hosts - 1))
+            return host_t
+        else:
+            raise ValueError(policy)
+        return host_t.max(axis=1)
+
+    def report(self, steps: int = 2000) -> dict[str, dict[str, float]]:
+        out = {}
+        for pol in ("none", "rebalance", "quarantine"):
+            t = self.step_times(pol, steps)
+            out[pol] = {"p50": float(np.percentile(t, 50)),
+                        "p99": float(np.percentile(t, 99)),
+                        "mean": float(t.mean())}
+        return out

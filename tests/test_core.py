@@ -1,0 +1,129 @@
+"""Unit + property tests for the FlooNoC core layer (flit/channels/ni/routing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channels, flit
+from repro.core.routing import _merge, _split
+from repro.dist.compression import (dequantize_blockwise, quantize_blockwise)
+from repro.models.layers import HeadPlan
+
+
+# ---------------------------------------------------------------------------
+# flit packing (property: pack/unpack is the identity for any float tree)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 7), st.integers(1, 5)),
+                min_size=1, max_size=6),
+       st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_flit_roundtrip(shapes, dtype):
+    leaves = [jnp.arange(a * b, dtype=jnp.float32).reshape(a, b).astype(dtype)
+              for a, b in shapes]
+    tree = {"leaves": leaves, "scalar": jnp.float32(3.5)}
+    payload, header = flit.pack(tree)
+    out = flit.unpack(payload, header)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_flit_header_is_static():
+    payload, header = flit.pack([jnp.zeros((4, 4)), jnp.zeros((3,))])
+    assert header.nbytes == (16 + 3) * 4
+    assert len(payload) == 1     # one dtype group -> one wide word
+
+
+# ---------------------------------------------------------------------------
+# classification / bucketing
+# ---------------------------------------------------------------------------
+def test_classify_threshold():
+    big = jnp.zeros((1 << 15,))          # 128 KiB fp32
+    small = jnp.zeros((16,))
+    cls = channels.classify([big, small], 65536)
+    assert cls == [channels.WIDE, channels.NARROW]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 1 << 18), min_size=1, max_size=30))
+def test_bucketize_covers_all(sizes):
+    leaves = [jnp.zeros((n,)) for n in sizes]
+    buckets = channels.bucketize(leaves, 1 << 20)
+    seen = sorted(i for b in buckets for i in b)
+    assert seen == list(range(len(leaves)))
+
+
+# ---------------------------------------------------------------------------
+# split/merge (ring chunk plumbing)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(0, 2))
+def test_split_merge_semantics(n, c, dim):
+    """_split yields dim-chunks (moved to front); _merge concatenates
+    stacked shards back along dim — the ring RS/AG layout contracts."""
+    shape = [2, 3, 4]
+    shape[dim] = n * c
+    x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+    xs = _split(x, n, dim)
+    assert xs.shape[0] == n
+    for k in range(n):
+        want = jnp.moveaxis(
+            jax.lax.slice_in_dim(x, k * c, (k + 1) * c, axis=dim), dim, 0)
+        np.testing.assert_array_equal(np.asarray(xs[k]), np.asarray(want))
+    # AG layout: stacked per-device shards (n, ...) concat along dim
+    shards = jnp.stack([jax.lax.slice_in_dim(x, k * c, (k + 1) * c, axis=dim)
+                        for k in range(n)])
+    y = _merge(shards, dim)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantization (property: bounded relative error)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.floats(0.01, 100.0))
+def test_quant_error_bound(nblocks, scale):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, scale, nblocks * 256).astype(np.float32))
+    q, s = quantize_blockwise(x, 256)
+    y = dequantize_blockwise(q, s, 256)
+    err = np.max(np.abs(np.asarray(x - y)))
+    bound = np.max(np.abs(np.asarray(x))) / 127 * 1.01 + 1e-9
+    assert err <= bound
+
+
+# ---------------------------------------------------------------------------
+# HeadPlan (property: every real q head maps to a stored kv head)
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16), st.sampled_from([1, 2, 4, 8, 16]))
+def test_head_plan_covers(hq, hkv, model):
+    if hq % hkv:
+        hkv = max(1, hq // max(1, hq // hkv))
+        if hq % hkv:
+            return
+    plan = HeadPlan.build(hq, hkv, 64, model)
+    assert plan.hq_pad % model == 0
+    for r in range(model):
+        ridx = jnp.int32(r)
+        kv_ids = np.asarray(plan.local_kv_ids(ridx))
+        q2kv = np.asarray(plan.q_to_local_kv(ridx))
+        qs = np.asarray(plan.local_q_ids(ridx))
+        mask = np.asarray(plan.q_mask(ridx))
+        assert np.all(kv_ids >= 0) and np.all(kv_ids < hkv)
+        for j, qg in enumerate(qs):
+            if mask[j] > 0:          # real head
+                want = min(qg, hq - 1) // max(1, hq // hkv)
+                assert kv_ids[q2kv[j]] == want, (qg, want, kv_ids, q2kv)
+
+
+# ---------------------------------------------------------------------------
+# NI windowed transactions
+# ---------------------------------------------------------------------------
+def test_windowed_transactions_results():
+    from repro.core.ni import windowed_transactions
+    thunks = [lambda i=i: jnp.full((4,), i, jnp.float32) for i in range(6)]
+    outs = windowed_transactions(thunks, window=2)
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(o), np.full((4,), i))

@@ -1,0 +1,168 @@
+"""Multi-device SPMD correctness (subprocess with 8 host devices).
+
+The invariant throughout: ANY mesh factorization must produce the same loss
+and the same global gradient norm as the single-device run — this is what
+makes the sharding rules + collective schedules trustworthy at 256/512
+chips where we can only dry-run.
+"""
+import pytest
+
+COMMON = """
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import get_arch, ShapeConfig
+from repro.configs.base import MeshConfig, RunConfig
+from repro.models import build_model
+from repro.dist import step as step_lib, params as params_lib
+
+def run(mesh_cfg, arch="llama3.2-1b", smoke_kw=None, **kw):
+    mcfg = get_arch(arch).smoke(**(smoke_kw or {}))
+    shape = ShapeConfig("t", 32, 4, "train")
+    cfg = RunConfig(model=mcfg, shape=shape, mesh=mesh_cfg, **kw)
+    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.shape))
+    model = build_model(mcfg, cfg)
+    art = step_lib.build_train_step(model, shape, mesh)
+    key = jax.random.key(0)
+    params = params_lib.materialize_sharded(art.param_specs, key, mesh)
+    opt = params_lib.materialize_sharded(art.opt_specs, key, mesh)
+    kb = jax.random.key(7)
+    batch = {"tokens": jax.random.randint(kb, (4, 32), 0, mcfg.vocab_size, jnp.int32),
+             "labels": jax.random.randint(kb, (4, 32), 0, mcfg.vocab_size, jnp.int32)}
+    if mcfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(kb, (4, mcfg.context_len, mcfg.d_model), jnp.bfloat16)
+    if mcfg.is_enc_dec:
+        batch["frames"] = jax.random.normal(kb, (4, 32, mcfg.d_model), jnp.bfloat16)
+    _, _, m = art.fn(params, opt, jnp.int32(0), batch)
+    return float(m["loss"]), float(m["grad_norm"])
+
+def check(arch="llama3.2-1b", meshes=None, tol=2e-2, gtol=7e-2, smoke_kw=None, **kw):
+    base_l, base_g = run(MeshConfig(1, 1, 1), arch, smoke_kw)
+    for mc in meshes:
+        l, g = run(mc, arch, smoke_kw, **kw)
+        assert abs(l - base_l) < tol, (arch, mc, l, base_l)
+        assert abs(g - base_g) / max(base_g, 1e-6) < gtol, (arch, mc, g, base_g)
+    print("PASS", arch)
+"""
+
+
+def test_dense_all_axes(subproc):
+    subproc(COMMON + """
+check("llama3.2-1b", meshes=[MeshConfig(2,1,1), MeshConfig(1,2,1),
+                             MeshConfig(2,2,1), MeshConfig(2,2,2)])
+""")
+
+
+def test_moe_ep(subproc):
+    subproc(COMMON + """
+check("llama4-scout-17b-a16e", meshes=[MeshConfig(2,2,1)], gtol=0.1)
+""")
+
+
+def test_moe_tp_path(subproc):
+    # 3 experts on a 2-wide model axis forces the TP-MoE path
+    subproc(COMMON + """
+check("grok-1-314b", meshes=[MeshConfig(2,2,1)], gtol=0.1,
+      smoke_kw={"num_experts": 3, "top_k": 2})
+""")
+
+
+def test_ssm_and_hybrid(subproc):
+    subproc(COMMON + """
+check("mamba2-370m", meshes=[MeshConfig(2,2,1)], gtol=0.1)
+check("hymba-1.5b", meshes=[MeshConfig(2,2,1)], gtol=0.1)
+""")
+
+
+def test_xla_backend_parity(subproc):
+    subproc(COMMON + """
+l1, g1 = run(MeshConfig(2,2,1), backend="floo")
+l2, g2 = run(MeshConfig(2,2,1), backend="xla")
+assert abs(l1 - l2) < 1e-2, (l1, l2)
+assert abs(g1 - g2) / max(g1, 1e-6) < 5e-2, (g1, g2)
+print("PASS parity")
+""")
+
+
+def test_bidir_and_compression(subproc):
+    subproc(COMMON + """
+base_l, base_g = run(MeshConfig(1,1,1))
+l, g = run(MeshConfig(2, 2, 2), bidir_rings=True)
+assert abs(l - base_l) < 2e-2
+l2, g2 = run(MeshConfig(2, 2, 2), grad_compression="int8-pod")
+assert abs(l2 - base_l) < 3e-2              # int8 grads: loss unchanged
+assert abs(g2 - base_g)/base_g < 0.15       # grad norm approx (quantized)
+print("PASS bidir+compression")
+""")
+
+
+def test_decode_split_kv_parity(subproc):
+    """split-KV decode over the data axis == batch-sharded decode."""
+    subproc(COMMON + """
+from jax.sharding import NamedSharding
+arch = "hymba-1.5b"
+mcfg = get_arch(arch).smoke()
+S, B = 32, 1
+key = jax.random.key(3)
+toks = jax.random.randint(key, (B, S+1), 0, mcfg.vocab_size, jnp.int32)
+
+# single-device reference: prefill(S) -> caches, and prefill(S+1) last logits
+mesh1_cfg = MeshConfig(1, 1, 1)
+mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg1 = RunConfig(model=mcfg, shape=ShapeConfig("p", S, B, "prefill"), mesh=mesh1_cfg)
+model1 = build_model(mcfg, cfg1)
+pre1 = step_lib.build_prefill_step(model1, ShapeConfig("p", S, B, "prefill"), mesh1)
+params1 = params_lib.materialize_sharded(pre1.param_specs, key, mesh1)
+_, caches = pre1.fn(params1, {"tokens": toks[:, :S]})
+pre1b = step_lib.build_prefill_step(model1, ShapeConfig("p2", S+1, B, "prefill"), mesh1)
+logits_ref, _ = pre1b.fn(params1, {"tokens": toks})
+
+# split-KV decode on (data=2, model=2): cache seq sharded over data
+mesh_cfg = MeshConfig(data=2, model=2, pod=1)
+mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names,
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = RunConfig(model=mcfg, shape=ShapeConfig("p", S, B, "prefill"), mesh=mesh_cfg)
+model = build_model(mcfg, cfg)
+dshape = ShapeConfig("d", S + 32, B, "decode")
+dec_split = step_lib.build_decode_step(model, dshape, mesh, split_kv=True)
+params = params_lib.materialize_sharded(dec_split.param_specs, key, mesh)
+sds, specs = model.cache_specs(dshape, split_kv=True)
+
+def to_split(pref, sds_tree, spec_tree):
+    out = {}
+    for name, seg in pref.items():
+        o = {}
+        for k, v in seg.items():
+            if k == "attn":
+                tgt, sp = sds_tree[name][k], spec_tree[name][k]
+                # single-device n_kv may differ (dedup): slice/pad head dim2
+                def fit(a, t, s):
+                    a = jnp.pad(a, ((0,0),(0,0),(0, t.shape[2]-a.shape[2]),
+                                    (0,0),(0,0)))
+                    if a.shape[3] != t.shape[3]:
+                        reps = t.shape[3] // a.shape[3]
+                        a = jnp.tile(a, (1,1,1,reps,1))
+                    return jax.device_put(a, NamedSharding(mesh, s))
+                o[k] = tuple(fit(a, t, s) for a, t, s in zip(v, tgt, sp))
+            else:
+                sp = spec_tree[name][k]
+                o[k] = jax.tree.map(
+                    lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                    v, sp)
+        out[name] = o
+    return out
+
+# NOTE: single-device caches store n_kv=hkv heads; the 2-way-TP layout
+# stores plan.n_kv_loc per rank with rank-dependent head selection, so a
+# faithful transfer requires the per-rank gather. At smoke scale
+# (model=2, hkv=2) the layouts coincide: n_kv_loc=1 per rank == heads
+# split across ranks == hkv stacked.
+caches_split = to_split(caches, sds, specs)
+logits_d, _ = dec_split.fn(params, caches_split, toks[:, S:S+1], jnp.int32(S))
+a = np.asarray(jnp.reshape(logits_d, -1), np.float32)
+b = np.asarray(jnp.reshape(logits_ref, -1), np.float32)
+rel = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-6)
+assert rel < 0.06, rel
+print("PASS split_kv", rel)
+""")

@@ -1,0 +1,74 @@
+"""Pipeline parallelism + flat_dp equivalence (subprocess, 8 devices)."""
+
+
+def test_flat_dp_equivalence(subproc):
+    subproc("""
+import jax, jax.numpy as jnp
+from repro.configs import get_arch, ShapeConfig
+from repro.configs.base import MeshConfig, RunConfig
+from repro.models import build_model
+from repro.dist import step as step_lib, params as params_lib
+
+def run(mesh_cfg, flat_dp=False):
+    mcfg = get_arch("llama3.2-1b").smoke()
+    shape = ShapeConfig("t", 32, 4, "train")
+    cfg = RunConfig(model=mcfg, shape=shape, mesh=mesh_cfg, flat_dp=flat_dp)
+    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.shape))
+    model = build_model(mcfg, cfg)
+    art = step_lib.build_train_step(model, shape, mesh)
+    params = params_lib.materialize_sharded(art.param_specs, jax.random.key(0), mesh)
+    opt = params_lib.materialize_sharded(art.opt_specs, jax.random.key(0), mesh)
+    kb = jax.random.key(7)
+    batch = {"tokens": jax.random.randint(kb, (4, 32), 0, mcfg.vocab_size, jnp.int32),
+             "labels": jax.random.randint(kb, (4, 32), 0, mcfg.vocab_size, jnp.int32)}
+    _, _, m = art.fn(params, opt, jnp.int32(0), batch)
+    return float(m["loss"]), float(m["grad_norm"])
+
+l0, g0 = run(MeshConfig(1, 1, 1))
+l1, g1 = run(MeshConfig(data=2, model=2), flat_dp=True)
+assert abs(l0 - l1) < 2e-2, (l0, l1)
+assert abs(g0 - g1) / g0 < 7e-2, (g0, g1)
+print("PASS flat_dp", l0, l1)
+""", n_devices=4)
+
+
+def test_pipeline_equivalence(subproc):
+    subproc("""
+import jax, jax.numpy as jnp
+from repro.configs import get_arch, ShapeConfig
+from repro.configs.base import MeshConfig, RunConfig
+from repro.models import build_model
+from repro.dist import params as params_lib, pipeline, step as step_lib
+
+mcfg = get_arch("llama3.2-1b").smoke()
+shape = ShapeConfig("t", 32, 4, "train")
+kb = jax.random.key(7)
+batch = {"tokens": jax.random.randint(kb, (4, 32), 0, mcfg.vocab_size, jnp.int32),
+         "labels": jax.random.randint(kb, (4, 32), 0, mcfg.vocab_size, jnp.int32)}
+
+cfg0 = RunConfig(model=mcfg, shape=shape, mesh=MeshConfig(1, 1, 1))
+mesh0 = jax.make_mesh((1, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+m0 = build_model(mcfg, cfg0)
+a0 = step_lib.build_train_step(m0, shape, mesh0)
+p0 = params_lib.materialize_sharded(a0.param_specs, jax.random.key(0), mesh0)
+o0 = params_lib.materialize_sharded(a0.opt_specs, jax.random.key(0), mesh0)
+_, _, r0 = a0.fn(p0, o0, jnp.int32(0), batch)
+
+cfg1 = RunConfig(model=mcfg, shape=shape, mesh=MeshConfig(data=2, model=2, pod=2),
+                 microbatches=2)
+mesh1 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 3)
+m1 = build_model(mcfg, cfg1)
+a1 = pipeline.build_pipeline_train_step(m1, shape, mesh1)
+p1 = params_lib.materialize_sharded(a1.param_specs, jax.random.key(0), mesh1)
+o1 = params_lib.materialize_sharded(a1.opt_specs, jax.random.key(0), mesh1)
+_, _, r1 = a1.fn(p1, o1, jnp.int32(0), batch)
+
+l0, l1 = float(r0["loss"]), float(r1["loss"])
+g0, g1 = float(r0["grad_norm"]), float(r1["grad_norm"])
+assert abs(l0 - l1) < 3e-2, (l0, l1)
+assert abs(g0 - g1) / g0 < 0.1, (g0, g1)
+print("PASS pipeline", l0, l1)
+""")

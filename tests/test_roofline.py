@@ -1,0 +1,72 @@
+"""Roofline HLO parser: trip-count scaling and collective byte accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (analyze_hlo_text, _group_size, _link_bytes,
+                                   _type_bytes)
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[64,64]{1,0}") == 64 * 64 * 4
+    assert _type_bytes("bf16[2,3]") == 12
+    assert _type_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _type_bytes("f32[]") == 0 or _type_bytes("f32[]") == 4  # scalar
+
+
+def test_link_bytes_model():
+    rest = "replica_groups=[16,16]<=[256]"
+    assert _group_size(rest) == 16
+    assert _link_bytes("all-gather", 100.0, rest) == 1500.0
+    assert abs(_link_bytes("all-reduce", 100.0, rest) - 187.5) < 1e-9
+    assert _link_bytes("collective-permute", 100.0, "") == 100.0
+
+
+def test_scan_trip_count_scaling():
+    """Parsed dot FLOPs must scale with the scan length (cost_analysis
+    famously does not)."""
+    def make(L):
+        def step(c, x):
+            return c @ x, ()
+
+        def f(c, xs):
+            return jax.lax.scan(step, c, xs)[0]
+
+        N = 64
+        lowered = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((N, N), jnp.float32),
+            jax.ShapeDtypeStruct((L, N, N), jnp.float32))
+        return lowered.compile()
+
+    costs4 = analyze_hlo_text(make(4).as_text())
+    costs8 = analyze_hlo_text(make(8).as_text())
+    analytic8 = 2 * 64**3 * 8
+    assert costs8.dot_flops == pytest.approx(analytic8, rel=0.01)
+    assert costs8.dot_flops == pytest.approx(2 * costs4.dot_flops, rel=0.01)
+    assert 8 in costs8.while_trips.values()
+
+
+def test_collective_bytes_in_scan(subproc):
+    subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.roofline import analyze_hlo_text
+
+mesh = jax.make_mesh((4,), ("i",), axis_types=(jax.sharding.AxisType.Auto,))
+
+def step(c, _):
+    c = jax.lax.ppermute(c, "i", [(j, (j + 1) % 4) for j in range(4)])
+    return c, ()
+
+def f(c):
+    return jax.lax.scan(step, c, None, length=6)[0]
+
+sh = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+comp = jax.jit(sh).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+costs = analyze_hlo_text(comp.as_text())
+want = 128 * 128 * 4 * 6          # one permute of the buffer x 6 trips
+got = costs.collective_bytes.get("collective-permute", 0)
+assert abs(got - want) / want < 0.01, (got, want)
+print("PASS", got)
+""", n_devices=4)
