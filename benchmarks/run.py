@@ -2,12 +2,36 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
 paper reports, e.g. latency cycles, bandwidth utilization, pJ/B/hop).
+
+All cycle-level benches run through the declarative ``repro.noc`` API
+(NocSpec presets + Workload patterns + vmapped ``simulate_batch``).
+
+    PYTHONPATH=src python benchmarks/run.py [--smoke] [--json PATH]
+
+``--smoke`` shrinks horizons for CI and ``--json`` (default
+``BENCH_noc.json`` under --smoke) records every derived metric plus
+wall time so the performance trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
+
+RESULTS: dict[str, dict] = {}
+
+
+def _record(name: str, us: float, **derived):
+    def _jsonable(v):
+        if isinstance(v, (bool, np.bool_)):
+            return bool(v)
+        if isinstance(v, (int, float, np.integer, np.floating)):
+            return float(v)
+        return v
+    RESULTS[name] = {"us_per_call": round(us, 1),
+                     **{k: _jsonable(v) for k, v in derived.items()}}
 
 
 def _timed(fn, *args, repeat=1, **kw):
@@ -19,67 +43,97 @@ def _timed(fn, *args, repeat=1, **kw):
     return out, dt * 1e6
 
 
-def bench_zero_load_latency():
+def bench_zero_load_latency(smoke: bool = False):
     """Paper section VI-A: 18-cycle tile-to-tile round trip."""
-    from repro.core.noc_sim import SimConfig, fig5_traffic, run_sim
-    cfg = SimConfig(nx=2, ny=1, cycles=200, narrow_wide=True, service_lat=10)
-    tr = fig5_traffic(cfg, num_narrow=1, num_wide=0, narrow_rate=0.01,
-                      src=0, dst=1)
-    m, us = _timed(run_sim, cfg, tr)
-    lat = float(m["narrow_avg_lat"][0])
+    from repro.noc import NocSpec, Workload, simulate
+    spec = NocSpec.narrow_wide(2, 1, cycles=200)
+    wl = Workload.make("fig5", rates={"narrow": 0.01},
+                       counts={"narrow": 1}, src=0, dst=1)
+    m, us = _timed(simulate, spec, wl)
+    lat = float(m.classes["narrow"].avg_lat[0])
     print(f"zero_load_latency,{us:.0f},round_trip_cycles={lat:.0f} (paper=18)")
+    _record("zero_load_latency", us, round_trip_cycles=lat, paper=18)
     return lat
 
 
-def bench_fig5a_latency():
-    """Fig. 5a: narrow latency under wide burst interference."""
-    from repro.core.noc_sim import SimConfig, fig5_traffic, run_sim
+def bench_fig5a_latency(smoke: bool = False):
+    """Fig. 5a: narrow latency under wide burst interference.
+
+    One vmapped ``simulate_batch`` per topology covers the interference
+    and no-interference points together."""
+    from repro.noc import NocSpec, Workload, simulate_batch
+    cycles = 3000 if smoke else 8000
+    n_wide = 64 if smoke else 200
     rows = []
-    for nw in (True, False):
+    for preset, tag in ((NocSpec.narrow_wide, "nw"),
+                        (NocSpec.wide_only, "wideonly")):
+        spec = preset(4, 4, cycles=cycles)
         for bidir in (False, True):
-            cfg = SimConfig(nx=4, ny=4, cycles=8000, narrow_wide=nw,
-                            service_lat=10)
-            tr = fig5_traffic(cfg, num_narrow=100, num_wide=200,
-                              wide_rate=1.0, narrow_rate=0.05, src=0,
-                              dst=15, bidir=bidir)
-            m, us = _timed(run_sim, cfg, tr)
-            tr0 = fig5_traffic(cfg, num_narrow=100, num_wide=0,
-                               narrow_rate=0.05, src=0, dst=15)
-            m0, _ = _timed(run_sim, cfg, tr0)
-            lat = float(m["narrow_avg_lat"][0])
-            lat0 = float(m0["narrow_avg_lat"][0])
-            mx = float(m["narrow_max_lat"][0])
-            name = (f"fig5a_{'nw' if nw else 'wideonly'}_"
-                    f"{'bidir' if bidir else 'unidir'}")
+            # point 0: interference at `bidir`; point 1: the seed bench's
+            # baseline — no wide traffic, always unidirectional
+            wls = [Workload.make("fig5",
+                                 rates={"narrow": 0.05, "wide": 1.0},
+                                 counts={"narrow": 100, "wide": n_wide},
+                                 src=0, dst=15, bidir=bidir),
+                   Workload.make("fig5", rates={"narrow": 0.05},
+                                 counts={"narrow": 100}, src=0, dst=15)]
+            m, us = _timed(simulate_batch, spec, wls)
+            lat = float(m.classes["narrow"].avg_lat[0, 0])
+            lat0 = float(m.classes["narrow"].avg_lat[1, 0])
+            mx = float(m.classes["narrow"].max_lat[0, 0])
+            name = f"fig5a_{tag}_{'bidir' if bidir else 'unidir'}"
             print(f"{name},{us:.0f},avg={lat:.0f}cyc({lat/lat0:.2f}x)"
                   f" max={mx:.0f}cyc({mx/lat0:.2f}x)")
-            rows.append((nw, bidir, lat / lat0, mx / lat0))
+            _record(name, us, avg_cycles=lat, avg_x=lat / lat0,
+                    max_x=mx / lat0)
+            rows.append((tag, bidir, lat / lat0, mx / lat0))
     return rows
 
 
-def bench_fig5b_bandwidth():
+def bench_fig5b_bandwidth(smoke: bool = False):
     """Fig. 5b: wide effective bandwidth under narrow interference."""
-    from repro.core.noc_sim import SimConfig, fig5_traffic, run_sim
+    from repro.noc import NocSpec, Workload, simulate_batch
+    cycles = 3000 if smoke else 6000
+    n_wide = 128 if smoke else 256
     rows = []
-    for nw in (True, False):
-        utils = []
-        for nrate in (0.0, 1.0):
-            cfg = SimConfig(nx=4, ny=4, cycles=6000, narrow_wide=nw,
-                            service_lat=10)
-            tr = fig5_traffic(cfg, num_narrow=3000 if nrate else 0,
-                              num_wide=256, wide_rate=1.0, narrow_rate=nrate,
-                              src=0, dst=5)
-            m, us = _timed(run_sim, cfg, tr)
-            utils.append(float(m["wide_eff_bw"][0]))
+    for preset, tag in ((NocSpec.narrow_wide, "nw"),
+                        (NocSpec.wide_only, "wideonly")):
+        spec = preset(4, 4, cycles=cycles)
+        wls = [Workload.make("fig5",
+                             rates={"narrow": nrate, "wide": 1.0},
+                             counts={"narrow": 3000 if nrate else 0,
+                                     "wide": n_wide},
+                             src=0, dst=5)
+               for nrate in (0.0, 1.0)]
+        m, us = _timed(simulate_batch, spec, wls)
+        utils = [float(m.classes["wide"].eff_bw[i, 0]) for i in (0, 1)]
         rel = utils[1] / max(utils[0], 1e-9)
-        name = f"fig5b_{'nw' if nw else 'wideonly'}"
+        name = f"fig5b_{tag}"
         print(f"{name},{us:.0f},util={utils[1]:.2f} rel={rel:.2f}"
               f" (paper nw>=0.85)")
-        rows.append((nw, utils))
+        _record(name, us, util=utils[1], rel=rel)
+        rows.append((tag, utils))
     return rows
 
 
-def bench_table1_links():
+def bench_rate_sweep(smoke: bool = False):
+    """API showcase: a vmapped injection-rate sweep in ONE jit call."""
+    from repro.noc import NocSpec, Workload, simulate_batch
+    spec = NocSpec.narrow_wide(4, 4, cycles=2000 if smoke else 4000)
+    rates = [0.25, 0.5, 0.75, 1.0]
+    wls = [Workload.make("fig5", rates={"narrow": 0.05, "wide": r},
+                         counts={"narrow": 50, "wide": 32},
+                         src=0, dst=15) for r in rates]
+    m, us = _timed(simulate_batch, spec, wls)
+    bw = [float(m.classes["wide"].eff_bw[i, 0]) for i in range(len(rates))]
+    print(f"rate_sweep_vmap,{us:.0f},"
+          + " ".join(f"r{r}={b:.2f}" for r, b in zip(rates, bw)))
+    _record("rate_sweep_vmap", us,
+            **{f"bw_at_{r}": b for r, b in zip(rates, bw)})
+    return bw
+
+
+def bench_table1_links(smoke: bool = False):
     """Table I / section VI-B: link sizing and peak bandwidth."""
     from repro.core.noc_sim import PAPER
     _, us = _timed(lambda: None)
@@ -93,10 +147,13 @@ def bench_table1_links():
     print(f"table1_mesh7x7_boundary,{us:.0f},{agg:.1f}TB/s (paper 4.4)")
     print(f"table1_channel_wires,{us:.0f},{wires} wires (~1600)")
     print(f"table1_channel_width,{us:.0f},{um:.0f}um (paper ~120)")
+    _record("table1", us, wide_link_gbps=gbps, duplex_tbps=tbps,
+            mesh7x7_boundary_tbs=agg, channel_wires=wires,
+            channel_width_um=um)
     return gbps, tbps, agg
 
 
-def bench_fig6_area_energy():
+def bench_fig6_area_energy(smoke: bool = False):
     """Fig. 6: area/power breakdown + 0.19 pJ/B/hop."""
     from repro.core.noc_sim import PAPER
     _, us = _timed(lambda: None)
@@ -105,24 +162,33 @@ def bench_fig6_area_energy():
     print(f"fig6_noc_area_fraction,{us:.0f},{frac:.2f} (paper 0.10)")
     print(f"fig6_energy_1kB_hop,{us:.0f},{e:.0f}pJ (paper 198)")
     print(f"fig6_pJ_per_B_hop,{us:.0f},{PAPER.pj_per_byte_hop} (paper 0.19)")
+    _record("fig6", us, noc_area_fraction=frac, energy_1kB_hop_pj=e,
+            pj_per_byte_hop=PAPER.pj_per_byte_hop)
     return frac, e
 
 
-def bench_straggler_sim():
+def bench_straggler_sim(smoke: bool = False):
     """Straggler mitigation at 1024 hosts (DESIGN section 7)."""
-    from repro.train.straggler import SimulatedCluster
-    sim = SimulatedCluster(n_hosts=1024)
+    try:
+        from repro.train.straggler import SimulatedCluster
+    except ImportError as e:   # seed gap: repro.train pulls in repro.dist
+        print(f"straggler,0,SKIPPED ({e})")
+        _record("straggler", 0, skipped=str(e))
+        return None
+    sim = SimulatedCluster(n_hosts=128 if smoke else 1024)
     rep, us = _timed(sim.report)
     for pol, r in rep.items():
         print(f"straggler_{pol},{us:.0f},p50={r['p50']:.3f} p99={r['p99']:.3f}")
+        _record(f"straggler_{pol}", us, p50=r["p50"], p99=r["p99"])
     return rep
 
 
-def bench_channels_ablation():
-    """Software Fig. 5 analogue: dual- vs single-channel grad-sync schedule
-    (static schedule planning: op counts, bytes, and latency-op model)."""
-    import numpy as np
+def bench_channels_ablation(smoke: bool = False):
+    """Software Fig. 5 analogue: the collectives schedule under the
+    dual- vs single-channel policies derived from the same NocSpecs that
+    drive the cycle simulator (one shared vocabulary)."""
     from repro.core import channels
+    from repro.noc import NocSpec
 
     class Fake:
         def __init__(self, shape):
@@ -132,30 +198,55 @@ def bench_channels_ablation():
     leaves = [Fake((1024, 1024)), Fake((4096, 512))] + \
              [Fake((256,)) for _ in range(20)]
     t0 = time.perf_counter()
-    classes = channels.classify(leaves, 65536)
-    n_narrow = classes.count(channels.NARROW)
-    wide = [l for l, c in zip(leaves, classes) if c == channels.WIDE]
-    buckets = channels.bucketize(wide, 4 << 20)
+    dual = channels.ChannelPolicy.from_spec(NocSpec.narrow_wide())
+    single = channels.ChannelPolicy.from_spec(NocSpec.wide_only())
+    cls = [dual.classify(int(np.prod(l.shape)) * 4) for l in leaves]
+    n_narrow = sum(c.transport == "psum" for c in cls)
+    wide = [l for l, c in zip(leaves, cls) if c.transport == "ring"]
+    buckets = channels.bucketize(wide, dual.bucket_bytes)
     us = (time.perf_counter() - t0) * 1e6
     narrow_bytes = sum(int(np.prod(l.shape)) * 4 for l, c in
-                       zip(leaves, classes) if c == channels.NARROW)
-    # dual: smalls -> ONE fused psum; wide -> len(buckets) ring transactions
-    # single: every leaf serialized through the wide ring schedule
+                       zip(leaves, cls) if c.transport == "psum")
+    single_shared = len({c.channel for c in single.classes}) == 1
     print(f"channels_dual,{us:.0f},smalls={n_narrow}->1 flit-packed psum"
           f" ({narrow_bytes}B) + {len(buckets)} wide ring bucket(s)"
-          f" | single-channel: {len(leaves)} tensors serialized on one ring")
-    return classes, buckets
+          f" | single-channel policy shares 1 link: {single_shared}"
+          f" ({len(leaves)} tensors serialized on one ring)")
+    _record("channels_dual", us, n_narrow=n_narrow,
+            narrow_bytes=narrow_bytes, wide_buckets=len(buckets),
+            single_policy_shared=single_shared)
+    return cls, buckets
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced horizons for CI")
+    ap.add_argument("--json", default=None,
+                    help="write derived metrics to this JSON file "
+                         "(default BENCH_noc.json under --smoke)")
+    args = ap.parse_args()
+    json_path = args.json or ("BENCH_noc.json" if args.smoke else None)
+
+    t0 = time.perf_counter()
     print("name,us_per_call,derived")
-    bench_table1_links()
-    bench_fig6_area_energy()
-    bench_zero_load_latency()
-    bench_fig5a_latency()
-    bench_fig5b_bandwidth()
-    bench_straggler_sim()
-    bench_channels_ablation()
+    bench_table1_links(args.smoke)
+    bench_fig6_area_energy(args.smoke)
+    bench_zero_load_latency(args.smoke)
+    bench_fig5a_latency(args.smoke)
+    bench_fig5b_bandwidth(args.smoke)
+    bench_rate_sweep(args.smoke)
+    bench_straggler_sim(args.smoke)
+    bench_channels_ablation(args.smoke)
+    wall_s = time.perf_counter() - t0
+
+    if json_path:
+        payload = {"smoke": args.smoke, "wall_s": round(wall_s, 2),
+                   "benches": RESULTS}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path} ({len(RESULTS)} benches, "
+              f"{wall_s:.1f}s wall)")
 
 
 if __name__ == "__main__":

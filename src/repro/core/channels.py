@@ -16,6 +16,7 @@ bulk; `benchmarks/channels_ablation.py` reproduces the software analogue.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -86,6 +87,180 @@ def bucketize(leaves: Sequence[Any], bucket_bytes: int) -> list[list[int]]:
     return buckets
 
 
+@dataclass(frozen=True)
+class PolicyClass:
+    """One software traffic class: which leaves it owns (size threshold),
+    how it moves them (transport), and which physical channel it rides."""
+    name: str
+    min_bytes: int          # leaf belongs to the largest matching class
+    transport: str          # "psum" (latency-optimal fused) | "ring" (RS+AG)
+    channel: str            # physical channel name (from the NocSpec)
+
+
+@dataclass(frozen=True)
+class ChannelPolicy:
+    """Class->channel assignment for collectives, the software twin of
+    :class:`repro.noc.NocSpec`'s ``class_map``.
+
+    Classes whose ``channel`` hosts a ring-transport class SHARE that
+    ring: their leaves serialize through the same bucketed schedule (the
+    paper's wide-only ablation). A psum class with a channel of its own
+    gets the fused latency-optimal reduction (the dedicated narrow
+    network). ``ChannelPolicy.from_spec`` derives this mechanically from
+    a NocSpec, so the cycle simulator and the collectives analogue are
+    driven by one declaration.
+    """
+    classes: tuple[PolicyClass, ...]      # ascending min_bytes
+    bucket_bytes: int | None = 4 << 20    # None = single bucket per ring
+
+    def __post_init__(self):
+        cs = tuple(sorted(self.classes, key=lambda c: c.min_bytes))
+        object.__setattr__(self, "classes", cs)
+        if not cs or cs[0].min_bytes != 0:
+            raise ValueError("policy needs a base class with min_bytes=0")
+        for c in cs:
+            if c.transport not in ("psum", "ring"):
+                raise ValueError(f"unknown transport {c.transport!r}")
+
+    def classify(self, nbytes: int) -> PolicyClass:
+        chosen = self.classes[0]
+        for c in self.classes:
+            if nbytes >= c.min_bytes:
+                chosen = c
+        return chosen
+
+    @classmethod
+    def from_spec(cls, spec, *, wide_flit_bytes: int = 65536,
+                  thresholds: dict[str, int] | None = None,
+                  bucket_bytes: int | None | str = "auto"
+                  ) -> "ChannelPolicy":
+        """Derive the collectives policy from a NocSpec (duck-typed):
+        single-beat classes become fused-psum classes, burst classes
+        become ring classes, each riding the channel its responses are
+        mapped to. ``thresholds`` overrides per-class ``min_bytes``
+        (default: 0 for the smallest class, ``wide_flit_bytes`` scaled
+        4x per further burst class). ``bucket_bytes="auto"`` picks
+        4 MiB buckets for separated topologies but a single serialized
+        schedule when every class shares one channel — matching the
+        deprecated ``single_channel_all_reduce`` ablation exactly."""
+        thresholds = dict(thresholds or {})
+        if bucket_bytes == "auto":
+            shared = len({spec.channels[spec.rsp_channel(c.name)].name
+                          for c in spec.classes}) == 1
+            bucket_bytes = None if shared else 4 << 20
+        ordered = sorted(spec.classes, key=lambda c: (c.burst_beats > 1,
+                                                      c.payload_bits))
+        out, k = [], 0
+        for i, tc in enumerate(ordered):
+            if tc.name in thresholds:
+                mb = thresholds[tc.name]
+            elif i == 0:
+                mb = 0
+            else:
+                mb = wide_flit_bytes * (4 ** k)
+                k += 1
+            out.append(PolicyClass(
+                name=tc.name, min_bytes=mb,
+                transport="ring" if tc.burst_beats > 1 else "psum",
+                channel=spec.channels[spec.rsp_channel(tc.name)].name))
+        return cls(tuple(out), bucket_bytes)
+
+
+# default two-class policies mirroring the paper's configurations
+DUAL_POLICY = ChannelPolicy((
+    PolicyClass(NARROW, 0, "psum", "rsp"),
+    PolicyClass(WIDE, 65536, "ring", "wide"),
+))
+SINGLE_POLICY = ChannelPolicy((
+    PolicyClass(NARROW, 0, "psum", "wide"),
+    PolicyClass(WIDE, 65536, "ring", "wide"),
+), bucket_bytes=None)
+
+
+def multi_channel_all_reduce(
+    tree: Any,
+    axes: Sequence[tuple[str, int]],
+    *,
+    policy: ChannelPolicy = DUAL_POLICY,
+    bidir: bool = False,
+    ledger: Ledger | None = None,
+) -> Any:
+    """All-reduce a gradient pytree under a declarative channel policy.
+
+    axes: [(axis_name, size), ...] in dimension (XY) order.  Leaves are
+    classified by size into the policy's classes; per physical channel,
+    psum classes get one fused flit-packed latency-optimal ``psum``
+    each, ring classes get bucketed dimension-ordered ring RS+AG — and
+    any class sharing a channel with a ring class is serialized into
+    that ring (the wide-only ablation falls out of the policy instead of
+    being a separate code path).
+    """
+    total = 1
+    for _, s in axes:
+        total *= s
+    if total == 1:
+        return tree
+
+    leaves, treedef = jax.tree.flatten(tree)
+    axis_names = tuple(n for n, _ in axes)
+    leaf_cls = [policy.classify(_nbytes(l)) for l in leaves]
+    out: list[Any] = [None] * len(leaves)
+
+    def fused_psum(idxs: list[int], cls_name: str) -> None:
+        payload, header = flit.pack([leaves[i] for i in idxs])
+        reduced = {k: lax.psum(v, axis_names) for k, v in payload.items()}
+        if ledger is not None:
+            for v in payload.values():
+                ledger.log("psum", axis_names, _nbytes(v), cls_name,
+                           f"flit-packed x{len(idxs)}")
+        restored = flit.unpack(reduced, header)
+        for j, i in enumerate(idxs):
+            out[i] = restored[j]
+
+    def ring_group(idxs: list[int], cls_name: str) -> None:
+        cap = policy.bucket_bytes
+        buckets = (bucketize([leaves[i] for i in idxs], cap)
+                   if cap else [list(range(len(idxs)))])
+        for bucket in buckets:
+            bidx = [idxs[j] for j in bucket]
+            payload, header = flit.pack([leaves[i] for i in bidx])
+            reduced = {}
+            for k, v in payload.items():
+                vp, n = flit.pad_to(v, total * (2 if bidir else 1))
+                r = routing.dim_ordered_all_reduce(vp, axes, dim=0,
+                                                   bidir=bidir)
+                reduced[k] = r[:n]
+                if ledger is not None:
+                    ledger.log("ring_rs_ag", axis_names, _nbytes(vp),
+                               cls_name,
+                               f"bucket x{len(bidx)} bidir={bidir}")
+            restored = flit.unpack(reduced, header)
+            for j, i in enumerate(bidx):
+                out[i] = restored[j]
+
+    # group policy classes by physical channel, preserving policy order
+    by_channel: dict[str, list[PolicyClass]] = {}
+    for pc in policy.classes:
+        by_channel.setdefault(pc.channel, []).append(pc)
+
+    for channel, pcs in by_channel.items():
+        has_ring = any(pc.transport == "ring" for pc in pcs)
+        if has_ring:
+            # shared link: every class on this channel serializes through
+            # one bucketed ring schedule (smalls stall behind bulk)
+            idxs = [i for i, lc in enumerate(leaf_cls)
+                    if lc.channel == channel]
+            if idxs:
+                ring_group(idxs, "+".join(pc.name for pc in pcs))
+        else:
+            for pc in pcs:
+                idxs = [i for i, lc in enumerate(leaf_cls) if lc is pc]
+                if idxs:
+                    fused_psum(idxs, pc.name)
+
+    return jax.tree.unflatten(treedef, out)
+
+
 def dual_channel_all_reduce(
     tree: Any,
     axes: Sequence[tuple[str, int]],
@@ -96,75 +271,31 @@ def dual_channel_all_reduce(
     ledger: Ledger | None = None,
     narrow_dtype=None,
 ) -> Any:
-    """All-reduce a gradient pytree with narrow/wide channel separation.
-
-    axes: [(axis_name, size), ...] in dimension (XY) order.
-    """
-    total = 1
-    for _, s in axes:
-        total *= s
-    if total == 1:
-        return tree
-
-    leaves, treedef = jax.tree.flatten(tree)
-    classes = classify(leaves, wide_flit_bytes)
-    axis_names = tuple(n for n, _ in axes)
-
-    out: list[Any] = [None] * len(leaves)
-
-    # --- narrow channel: one flit-packed latency-optimal psum ---------------
-    narrow_idx = [i for i, c in enumerate(classes) if c == NARROW]
-    if narrow_idx:
-        payload, header = flit.pack([leaves[i] for i in narrow_idx])
-        reduced = {k: lax.psum(v, axis_names) for k, v in payload.items()}
-        if ledger is not None:
-            for k, v in payload.items():
-                ledger.log("psum", axis_names, _nbytes(v), NARROW,
-                           f"flit-packed x{len(narrow_idx)}")
-        restored = flit.unpack(reduced, header)
-        for j, i in enumerate(narrow_idx):
-            out[i] = restored[j]
-
-    # --- wide channel: bucketed dimension-ordered ring RS+AG ----------------
-    wide_idx = [i for i, c in enumerate(classes) if c == WIDE]
-    if wide_idx:
-        for bucket in bucketize([leaves[i] for i in wide_idx], bucket_bytes):
-            idxs = [wide_idx[j] for j in bucket]
-            payload, header = flit.pack([leaves[i] for i in idxs])
-            reduced = {}
-            for k, v in payload.items():
-                vp, n = flit.pad_to(v, total * (2 if bidir else 1))
-                r = routing.dim_ordered_all_reduce(vp, axes, dim=0, bidir=bidir)
-                reduced[k] = r[:n]
-                if ledger is not None:
-                    ledger.log("ring_rs_ag", axis_names, _nbytes(vp), WIDE,
-                               f"bucket x{len(idxs)} bidir={bidir}")
-            restored = flit.unpack(reduced, header)
-            for j, i in enumerate(idxs):
-                out[i] = restored[j]
-
-    return jax.tree.unflatten(treedef, out)
+    """DEPRECATED shim: narrow/wide separation as a fixed two-class
+    policy. Use :func:`multi_channel_all_reduce` with a
+    :class:`ChannelPolicy` (e.g. ``ChannelPolicy.from_spec(spec)``)."""
+    warnings.warn(
+        "dual_channel_all_reduce is deprecated; use "
+        "multi_channel_all_reduce(policy=ChannelPolicy.from_spec(spec))",
+        DeprecationWarning, stacklevel=2)
+    policy = ChannelPolicy((
+        PolicyClass(NARROW, 0, "psum", "rsp"),
+        PolicyClass(WIDE, wide_flit_bytes, "ring", "wide"),
+    ), bucket_bytes)
+    return multi_channel_all_reduce(tree, axes, policy=policy, bidir=bidir,
+                                    ledger=ledger)
 
 
 def single_channel_all_reduce(tree: Any, axes: Sequence[tuple[str, int]],
                               *, bidir: bool = False,
                               ledger: Ledger | None = None) -> Any:
-    """Ablation baseline: everything rides one wide channel (paper's
-    'wide-only' configuration in Fig. 5) — smalls are bucketed together with
-    bulk and serialized through the same ring schedule."""
-    leaves, treedef = jax.tree.flatten(tree)
-    total = 1
-    for _, s in axes:
-        total *= s
-    if total == 1:
-        return tree
-    payload, header = flit.pack(leaves)
-    reduced = {}
-    for k, v in payload.items():
-        vp, n = flit.pad_to(v, total * (2 if bidir else 1))
-        r = routing.dim_ordered_all_reduce(vp, axes, dim=0, bidir=bidir)
-        reduced[k] = r[:n]
-        if ledger is not None:
-            ledger.log("ring_rs_ag", tuple(n_ for n_, _ in axes), _nbytes(vp),
-                       WIDE, "single-channel (ablation)")
-    return jax.tree.unflatten(treedef, flit.unpack(reduced, header))
+    """DEPRECATED shim — ablation baseline: everything rides one wide
+    channel (paper's 'wide-only' configuration in Fig. 5); smalls are
+    packed together with bulk and serialized through the same ring
+    schedule. Use ``multi_channel_all_reduce(policy=SINGLE_POLICY)``."""
+    warnings.warn(
+        "single_channel_all_reduce is deprecated; use "
+        "multi_channel_all_reduce(policy=SINGLE_POLICY)",
+        DeprecationWarning, stacklevel=2)
+    return multi_channel_all_reduce(tree, axes, policy=SINGLE_POLICY,
+                                    bidir=bidir, ledger=ledger)

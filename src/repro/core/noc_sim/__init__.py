@@ -1,3 +1,11 @@
+"""Cycle-level NoC building blocks + legacy simulator surface.
+
+The router micro-architecture (``router.py``) and analytic paper model
+(``energy.py``) live here; the experiment surface moved to the
+declarative :mod:`repro.noc` API (``NocSpec``/``Workload``/``simulate``
+with vmapped sweeps). ``SimConfig``/``run_sim`` and the schedule
+generators in ``traffic.py`` remain as deprecation shims over it.
+"""
 from .energy import PAPER, PAPER_CLAIMS, FlooNoCModel  # noqa: F401
 from .mesh_sim import SimConfig, run_sim  # noqa: F401
 from .router import NetState, init_state, network_step, xy_route  # noqa: F401

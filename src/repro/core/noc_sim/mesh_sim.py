@@ -1,43 +1,24 @@
-"""Full FlooNoC simulation: NIs + 1 or 3 physical networks, scanned cycles.
+"""DEPRECATED shim — the seed's ``SimConfig``/``run_sim`` surface.
 
-Network configurations (paper §III-B, Table I):
-  narrow-wide : three independent networks. narrow_req carries narrow read
-                requests AND wide AR requests; narrow_rsp carries narrow
-                read responses (and B); wide carries R burst beats.
-  wide-only   : ablation baseline — ONE network carries everything; a
-                narrow flit occupies a full wide-link cycle and burst
-                packets hold links end-to-end (wormhole), which is what
-                starves latency-critical smalls (paper Fig. 5a).
+The cycle engine moved to :mod:`repro.noc` (declarative
+``NocSpec``/``Workload``/``simulate``), which generalizes the hardcoded
+``narrow_wide: bool`` 1-or-3-network branch that used to live here into
+an arbitrary list of physical channels with a class->channel map.  The
+generalized engine is cycle-exact with the seed simulator for both
+paper presets (golden-checked in ``tests/test_noc_api.py``).
 
-NI model (paper §III-A):
-  * end-to-end flow control: a request is injected only if the source ROB
-    has space for its response (per-class outstanding limits),
-  * separate response buffers per physical link (narrow rsp / wide rsp),
-  * read transactions: req flit -> target NI -> after `service_lat` cycles
-    the response (1 narrow flit, or `burstlen` wide beats) streams back;
-    a burst, once started, streams atomically (it is one packet),
-  * responses to the same destination arrive in order (deterministic XY
-    routing) — the ROB-bypass rule that removes reorder logic.
-
-Traffic is a precomputed schedule (see traffic.py); everything is jitted
-and scanned over cycles.
+This module keeps the old names importable: ``SimConfig`` maps onto the
+matching :class:`repro.noc.NocSpec` preset and ``run_sim`` feeds legacy
+schedule dicts through :func:`repro.noc.simulate`, returning the same
+result-dict keys the seed produced.  New code should use ``repro.noc``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from functools import partial
-from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME, F_TXN, N_FIELDS,
-                     NetState, init_state, network_step)
-
-# flit kinds
+# re-exported for legacy callers that imported kinds from here
 K_NARROW_REQ, K_NARROW_RSP, K_WIDE_REQ, K_WIDE_RSP = 0, 1, 2, 3
-Q_NAR, Q_WIDE = 0, 1
 
 RESP_Q_CAP = 256
 BIG = 1 << 30
@@ -45,6 +26,8 @@ BIG = 1 << 30
 
 @dataclass(frozen=True)
 class SimConfig:
+    """Legacy two-class config. Use :class:`repro.noc.NocSpec` presets
+    (``NocSpec.narrow_wide`` / ``NocSpec.wide_only``) in new code."""
     nx: int = 4
     ny: int = 4
     depth: int = 2
@@ -59,298 +42,25 @@ class SimConfig:
     def n_routers(self) -> int:
         return self.nx * self.ny
 
-
-class NIState(NamedTuple):
-    nar_ptr: jax.Array          # (R,)  schedule pointers
-    wide_ptr: jax.Array         # (R,)
-    nar_out: jax.Array          # (R,)  outstanding (ROB flow control)
-    wide_out: jax.Array         # (R,)
-    # response ring buffers, class-split: (R, 2, C)
-    rq_head: jax.Array          # (R, 2)
-    rq_tail: jax.Array          # (R, 2)
-    rq_ready: jax.Array         # (R, 2, C)
-    rq_dest: jax.Array          # (R, 2, C)
-    rq_beats: jax.Array         # (R, 2, C)
-    rq_time0: jax.Array         # (R, 2, C)
-    rq_txn: jax.Array           # (R, 2, C)
-    rq_kind: jax.Array          # (R, 2, C)
-    w_started: jax.Array        # (R,) wide burst mid-stream (inject atomicity)
-    inj_rr: jax.Array           # (R,) wide-only injection round-robin
-    # metrics
-    nar_lat_sum: jax.Array      # (R,)
-    nar_lat_max: jax.Array      # (R,)
-    nar_done: jax.Array         # (R,)
-    wide_beats_rx: jax.Array    # (R,)
-    wide_done: jax.Array        # (R,)
-    wide_lat_sum: jax.Array     # (R,)
-    first_beat_t: jax.Array     # (R,)
-    last_beat_t: jax.Array      # (R,)
-
-
-class SimState(NamedTuple):
-    nets: tuple
-    ni: NIState
-    cycle: jax.Array
-
-
-def init_ni(R: int) -> NIState:
-    z = jnp.zeros((R,), jnp.int32)
-    z2 = jnp.zeros((R, 2), jnp.int32)
-    zc = jnp.zeros((R, 2, RESP_Q_CAP), jnp.int32)
-    return NIState(z, z, z, z, z2, z2, zc, zc, zc, zc, zc, zc,
-                   jnp.zeros((R,), jnp.bool_), z,
-                   z, z, z, z, z, z, jnp.full((R,), BIG, jnp.int32), z)
-
-
-def _q_push(ni: NIState, q: int, valid, dest, beats, time0, txn, ready_at,
-            kind):
-    rows = jnp.arange(valid.shape[0])
-    slot = ni.rq_tail[:, q] % RESP_Q_CAP
-
-    def upd(arr, val):
-        return arr.at[rows, q, slot].set(
-            jnp.where(valid, val, arr[rows, q, slot]))
-
-    return ni._replace(
-        rq_ready=upd(ni.rq_ready, ready_at),
-        rq_dest=upd(ni.rq_dest, dest),
-        rq_beats=upd(ni.rq_beats, beats),
-        rq_time0=upd(ni.rq_time0, time0),
-        rq_txn=upd(ni.rq_txn, txn),
-        rq_kind=upd(ni.rq_kind, kind),
-        rq_tail=ni.rq_tail.at[:, q].add(valid.astype(jnp.int32)),
-    )
-
-
-def _q_head(ni: NIState, q: int, now):
-    rows = jnp.arange(ni.rq_head.shape[0])
-    have = ni.rq_head[:, q] < ni.rq_tail[:, q]
-    slot = ni.rq_head[:, q] % RESP_Q_CAP
-    ready = have & (ni.rq_ready[rows, q, slot] <= now)
-    return {
-        "ready": ready,
-        "slot": slot,
-        "dest": ni.rq_dest[rows, q, slot],
-        "beats": ni.rq_beats[rows, q, slot],
-        "time0": ni.rq_time0[rows, q, slot],
-        "txn": ni.rq_txn[rows, q, slot],
-        "kind": ni.rq_kind[rows, q, slot],
-    }
-
-
-def _q_sent(ni: NIState, q: int, sent):
-    """Decrement head beats; pop when exhausted."""
-    rows = jnp.arange(sent.shape[0])
-    slot = ni.rq_head[:, q] % RESP_Q_CAP
-    left = ni.rq_beats[rows, q, slot] - sent.astype(jnp.int32)
-    ni = ni._replace(
-        rq_beats=ni.rq_beats.at[rows, q, slot].set(
-            jnp.where(sent, left, ni.rq_beats[rows, q, slot])),
-        rq_head=ni.rq_head.at[:, q].add(
-            (sent & (left <= 0)).astype(jnp.int32)),
-    )
-    if q == Q_WIDE:
-        ni = ni._replace(w_started=jnp.where(sent, left > 0, ni.w_started))
-    return ni
-
-
-def make_step(cfg: SimConfig, traffic):
-    R = cfg.n_routers
-    nx, ny = cfg.nx, cfg.ny
-    rows = jnp.arange(R)
-    nar_time = jnp.asarray(traffic["nar_time"])
-    nar_dest = jnp.asarray(traffic["nar_dest"])
-    wide_time = jnp.asarray(traffic["wide_time"])
-    wide_dest = jnp.asarray(traffic["wide_dest"])
-    Tn, Tw = nar_time.shape[1], wide_time.shape[1]
-
-    def mk_flit(valid, dest, src, time, kind, txn, beat):
-        f = jnp.zeros((R, N_FIELDS), jnp.int32)
-        z = jnp.int32(0)
-        for idx, val in ((F_DEST, dest), (F_SRC, src), (F_TIME, time),
-                         (F_KIND, kind), (F_TXN, txn), (F_BEAT, beat)):
-            f = f.at[:, idx].set(jnp.where(valid, val, z))
-        return f
-
-    def step(state: SimState, _):
-        ni = state.ni
-        now = state.cycle
-
-        # ---- source side: request candidates (ROB flow control) -----------
-        np_ = jnp.clip(ni.nar_ptr, 0, Tn - 1)
-        nar_want = ((ni.nar_ptr < Tn) & (nar_time[rows, np_] <= now)
-                    & (ni.nar_out < cfg.max_narrow_outstanding))
-        nar_d = nar_dest[rows, np_]
-
-        wp = jnp.clip(ni.wide_ptr, 0, Tw - 1)
-        wide_want = ((ni.wide_ptr < Tw) & (wide_time[rows, wp] <= now)
-                     & (ni.wide_out < cfg.max_wide_outstanding))
-        wide_d = wide_dest[rows, wp]
-
-        # ---- target side: response heads ----------------------------------
-        hn = _q_head(ni, Q_NAR, now)
-        hw = _q_head(ni, Q_WIDE, now)
-
-        nets = state.nets
-        if cfg.narrow_wide:
-            # net0 narrow_req: narrow reqs + wide AR (narrow priority)
-            req_valid = nar_want | wide_want
-            use_nar = nar_want
-            f_req = mk_flit(req_valid,
-                            jnp.where(use_nar, nar_d, wide_d), rows, now,
-                            jnp.where(use_nar, K_NARROW_REQ, K_WIDE_REQ),
-                            jnp.where(use_nar, ni.nar_ptr, ni.wide_ptr), 1)
-            net0, ok_req, dv0, df0, lm0 = network_step(nets[0], req_valid,
-                                                       f_req, nx, ny)
-            nar_injected = ok_req & use_nar
-            wide_injected = ok_req & ~use_nar & wide_want
-
-            # net1 narrow_rsp
-            f_rsp = mk_flit(hn["ready"], hn["dest"], rows, hn["time0"],
-                            K_NARROW_RSP, hn["txn"], 1)
-            net1, ok1, dv1, df1, lm1 = network_step(nets[1], hn["ready"],
-                                                    f_rsp, nx, ny)
-            nar_rsp_sent = ok1 & hn["ready"]
-
-            # net2 wide: R burst beats (atomic packet)
-            f_beat = mk_flit(hw["ready"], hw["dest"], rows, hw["time0"],
-                             K_WIDE_RSP, hw["txn"], hw["beats"])
-            net2, ok2, dv2, df2, lm2 = network_step(nets[2], hw["ready"],
-                                                    f_beat, nx, ny)
-            wide_rsp_sent = ok2 & hw["ready"]
-
-            new_nets = (net0, net1, net2)
-            deliveries = [(dv0, df0), (dv1, df1), (dv2, df2)]
-            link_moves, wide_moves = lm0 + lm1 + lm2, lm2
-        else:
-            # wide-only: one network. Injection priority per NI with burst
-            # atomicity: an in-flight wide burst excludes everything else;
-            # otherwise round-robin between classes (fair single-channel).
-            # single shared response FIFO (one R channel on one link);
-            # bursts stream atomically once started
-            head_is_burst = hw["kind"] == K_WIDE_RSP
-            burst_hold = ni.w_started & (hw["beats"] > 0)
-            rr = ni.inj_rr % 3
-            cand_valid = jnp.stack(
-                [hw["ready"], nar_want, wide_want], axis=1)
-            order = (jnp.arange(3)[None, :] + rr[:, None]) % 3
-            ordered_valid = jnp.take_along_axis(cand_valid, order, axis=1)
-            first = jnp.argmax(ordered_valid, axis=1)
-            has_any = jnp.any(cand_valid, axis=1)
-            choice = jnp.take_along_axis(order, first[:, None], axis=1)[:, 0]
-            choice = jnp.where(burst_hold, 0, choice)       # burst streams on
-            valid = has_any | burst_hold
-
-            is_rsp = valid & (choice == 0) & hw["ready"]
-            is_nreq = valid & (choice == 1)
-            is_wreq = valid & (choice == 2)
-            valid = is_rsp | is_nreq | is_wreq
-
-            dest = jnp.where(is_rsp, hw["dest"],
-                   jnp.where(is_nreq, nar_d, wide_d))
-            kind = jnp.where(is_rsp, hw["kind"],
-                   jnp.where(is_nreq, K_NARROW_REQ, K_WIDE_REQ))
-            time = jnp.where(is_rsp, hw["time0"], now)
-            txn = jnp.where(is_rsp, hw["txn"],
-                  jnp.where(is_nreq, ni.nar_ptr, ni.wide_ptr))
-            beat = jnp.where(is_rsp & head_is_burst, hw["beats"], 1)
-            f = mk_flit(valid, dest, rows, time, kind, txn, beat)
-            net0, ok, dv0, df0, lm0 = network_step(nets[0], valid, f, nx, ny)
-            nar_injected = ok & is_nreq
-            wide_injected = ok & is_wreq
-            nar_rsp_sent = jnp.zeros_like(ok) & ok
-            wide_rsp_sent = ok & is_rsp
-            ni = ni._replace(
-                inj_rr=jnp.where(ok & ~burst_hold, ni.inj_rr + 1, ni.inj_rr),
-                w_started=ni.w_started |
-                          (wide_rsp_sent & head_is_burst & (hw["beats"] > 1)))
-            new_nets = (net0,)
-            deliveries = [(dv0, df0)]
-            link_moves = wide_moves = lm0
-
-        if cfg.narrow_wide:
-            ni = ni._replace(
-                w_started=ni.w_started | (wide_rsp_sent & (hw["beats"] > 1)))
-
-        # ---- pointer / outstanding / queue updates -------------------------
-        ni = ni._replace(
-            nar_ptr=ni.nar_ptr + nar_injected.astype(jnp.int32),
-            wide_ptr=ni.wide_ptr + wide_injected.astype(jnp.int32),
-            nar_out=ni.nar_out + nar_injected.astype(jnp.int32),
-            wide_out=ni.wide_out + wide_injected.astype(jnp.int32),
-        )
-        ni = _q_sent(ni, Q_NAR, nar_rsp_sent)
-        ni = _q_sent(ni, Q_WIDE, wide_rsp_sent)
-
-        # ---- deliveries -----------------------------------------------------
-        for dv, df in deliveries:
-            kind = df[:, F_KIND]
-            src = df[:, F_SRC]
-            is_nreq = dv & (kind == K_NARROW_REQ)
-            q_nar = Q_NAR if cfg.narrow_wide else Q_WIDE  # shared FIFO ablation
-            ni = _q_push(ni, q_nar, is_nreq, src, jnp.ones((R,), jnp.int32),
-                         df[:, F_TIME], df[:, F_TXN], now + cfg.service_lat,
-                         jnp.full((R,), K_NARROW_RSP, jnp.int32))
-            is_wreq = dv & (kind == K_WIDE_REQ)
-            ni = _q_push(ni, Q_WIDE, is_wreq, src,
-                         jnp.full((R,), cfg.burstlen, jnp.int32),
-                         df[:, F_TIME], df[:, F_TXN], now + cfg.service_lat,
-                         jnp.full((R,), K_WIDE_RSP, jnp.int32))
-            is_nrsp = dv & (kind == K_NARROW_RSP)
-            lat = now - df[:, F_TIME]
-            ni = ni._replace(
-                nar_lat_sum=ni.nar_lat_sum + jnp.where(is_nrsp, lat, 0),
-                nar_lat_max=jnp.maximum(ni.nar_lat_max,
-                                        jnp.where(is_nrsp, lat, 0)),
-                nar_done=ni.nar_done + is_nrsp.astype(jnp.int32),
-                nar_out=ni.nar_out - is_nrsp.astype(jnp.int32),
-            )
-            is_wrsp = dv & (kind == K_WIDE_RSP)
-            last_beat = is_wrsp & (df[:, F_BEAT] <= 1)
-            ni = ni._replace(
-                wide_beats_rx=ni.wide_beats_rx + is_wrsp.astype(jnp.int32),
-                first_beat_t=jnp.where(is_wrsp,
-                                       jnp.minimum(ni.first_beat_t, now),
-                                       ni.first_beat_t),
-                last_beat_t=jnp.where(is_wrsp,
-                                      jnp.maximum(ni.last_beat_t, now),
-                                      ni.last_beat_t),
-                wide_done=ni.wide_done + last_beat.astype(jnp.int32),
-                wide_lat_sum=ni.wide_lat_sum + jnp.where(last_beat, lat, 0),
-                wide_out=ni.wide_out - last_beat.astype(jnp.int32),
-            )
-
-        return SimState(new_nets, ni, now + 1), link_moves
-
-    return step
+    def to_spec(self):
+        """The equivalent declarative :class:`repro.noc.NocSpec`."""
+        from repro.noc import NocSpec
+        preset = NocSpec.narrow_wide if self.narrow_wide else \
+            NocSpec.wide_only
+        return preset(
+            self.nx, self.ny, depth=self.depth, burstlen=self.burstlen,
+            service_lat=self.service_lat, cycles=self.cycles,
+            max_narrow_outstanding=self.max_narrow_outstanding,
+            max_wide_outstanding=self.max_wide_outstanding)
 
 
 def run_sim(cfg: SimConfig, traffic) -> dict:
-    R = cfg.n_routers
-    n_nets = 3 if cfg.narrow_wide else 1
-    nets = tuple(init_state(cfg.nx, cfg.ny, cfg.depth) for _ in range(n_nets))
-    state = SimState(nets, init_ni(R), jnp.int32(0))
-    step = make_step(cfg, traffic)
-
-    @jax.jit
-    def go(state):
-        return jax.lax.scan(step, state, None, length=cfg.cycles)
-
-    final, link_moves = go(state)
-    ni = final.ni
-    nar_done = np.maximum(np.asarray(ni.nar_done), 1)
-    wide_done = np.maximum(np.asarray(ni.wide_done), 1)
-    span = np.maximum(np.asarray(ni.last_beat_t)
-                      - np.minimum(np.asarray(ni.first_beat_t),
-                                   np.asarray(ni.last_beat_t)), 1)
-    return {
-        "narrow_done": np.asarray(ni.nar_done),
-        "narrow_avg_lat": np.asarray(ni.nar_lat_sum) / nar_done,
-        "narrow_max_lat": np.asarray(ni.nar_lat_max),
-        "wide_done": np.asarray(ni.wide_done),
-        "wide_beats_rx": np.asarray(ni.wide_beats_rx),
-        "wide_avg_lat": np.asarray(ni.wide_lat_sum) / wide_done,
-        "wide_eff_bw": np.asarray(ni.wide_beats_rx) / span,
-        "cycles": cfg.cycles,
-        "total_link_moves": int(np.asarray(jnp.sum(link_moves))),
-    }
+    """DEPRECATED: call :func:`repro.noc.simulate` instead."""
+    warnings.warn(
+        "repro.core.noc_sim.run_sim is deprecated; use "
+        "repro.noc.simulate(NocSpec, Workload)", DeprecationWarning,
+        stacklevel=2)
+    from repro.noc import from_legacy_traffic, simulate_schedules
+    spec = cfg.to_spec()
+    return simulate_schedules(spec, from_legacy_traffic(spec, traffic)) \
+        .to_legacy()

@@ -1,7 +1,11 @@
-"""Traffic schedule generators for the NoC simulator (paper Fig. 5 setups).
+"""Legacy traffic schedule generators (paper Fig. 5 setups).
 
-Schedules are dense (R, T) int32 arrays of desired inject times (sorted per
-NI; an entry beyond the horizon disables the slot) plus destinations.
+Schedules are dense (R, T) int32 arrays of desired inject times (sorted
+per NI; an entry beyond the horizon disables the slot) plus
+destinations.  New code should declare a :class:`repro.noc.Workload`
+("fig5" / "uniform_random" patterns carry the same semantics, typed
+against the spec's traffic classes); these helpers remain for the
+deprecated ``SimConfig``/``run_sim`` path.
 """
 from __future__ import annotations
 
@@ -18,13 +22,16 @@ def _empty(R: int):
 def fig5_traffic(cfg, *, num_narrow: int = 100, num_wide: int = 16,
                  wide_rate: float = 1.0, narrow_rate: float = 0.05,
                  src: int | None = None, dst: int | None = None,
-                 bidir: bool = False, seed: int = 0):
+                 bidir: bool = False):
     """Cluster-to-cluster accesses between two tiles (paper Fig. 5).
 
     src tile issues `num_narrow` narrow reads at `narrow_rate` (flits/cycle)
     and wide burst reads at `wide_rate` (bursts are back-to-back when the
     rate is 1.0). `bidir` mirrors the same traffic from dst to src.
     wide_rate/narrow_rate scale the injection gap (0 disables).
+
+    The schedule is fully deterministic (the former ``seed`` parameter
+    was accepted and ignored; it has been removed).
     """
     R = cfg.n_routers
     if src is None:
@@ -74,10 +81,11 @@ def uniform_random(cfg, *, narrow_per_ni: int = 0, wide_per_ni: int = 0,
         gap = max(1, int(round(stretch / rate)))
         times = 10 + np.cumsum(rng.integers(1, 2 * gap, size=(R, count)),
                                axis=1).astype(np.int32)
-        dests = rng.integers(0, R, size=(R, count)).astype(np.int32)
-        dests = (dests + 1 + np.arange(R)[:, None]) % R  # never self
+        # never self: shared remap with the repro.noc workload patterns
+        # (draw from [0, R-1) so the +1 shift can't wrap onto the source)
+        from repro.noc.workload import _no_self_dests
         out[f"{kind}_time"] = times
-        out[f"{kind}_dest"] = dests
+        out[f"{kind}_dest"] = _no_self_dests(rng, R, count)
 
     fill("nar", narrow_per_ni, narrow_rate)
     fill("wide", wide_per_ni, wide_rate, stretch=cfg.burstlen)

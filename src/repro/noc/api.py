@@ -1,0 +1,174 @@
+"""`simulate(spec, workload)` — the one entry point for NoC experiments.
+
+The static half of an experiment (mesh dims, channel topology, FIFO
+depths, cycle horizon) lives in the frozen :class:`NocSpec` and keys a
+cached jitted simulator; the dynamic half (schedules, service latency,
+outstanding limits, burst lengths) are traced operands.  That split is
+what makes sweeps cheap:
+
+* :func:`simulate`        — one spec + one workload -> one SimResult,
+* :func:`simulate_batch`  — one spec + N workloads (and optionally
+  per-point scalar overrides) -> ONE vmapped jit call returning a
+  batched SimResult, bit-identical to N individual runs,
+* :func:`sweep`           — arbitrary (spec, workload) points; points
+  sharing a static spec are grouped into vmapped batches, points that
+  differ statically (e.g. FIFO depth, channel count) compile per group.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import BIG, compiled_sim
+from .result import SimResult
+from .spec import NocSpec
+from .workload import Workload
+
+__all__ = ["simulate", "simulate_batch", "simulate_schedules", "sweep",
+           "stack_schedules"]
+
+
+def stack_schedules(spec: NocSpec,
+                    schedules: Mapping[str, tuple[np.ndarray, np.ndarray]],
+                    T: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-class (R, T_c) schedules to a common horizon and stack
+    into the (n_cls, R, T) operands the engine consumes."""
+    R = spec.n_routers
+    per_cls = []
+    for cls in spec.classes:
+        t, d = schedules[cls.name]
+        t = np.asarray(t, np.int32).reshape(R, -1)
+        d = np.asarray(d, np.int32).reshape(R, -1)
+        per_cls.append((t, d))
+    T_need = max(t.shape[1] for t, _ in per_cls)
+    T = T_need if T is None else max(T, T_need)
+    times = np.full((len(per_cls), R, T), BIG, np.int32)
+    dests = np.zeros((len(per_cls), R, T), np.int32)
+    for i, (t, d) in enumerate(per_cls):
+        times[i, :, :t.shape[1]] = t
+        dests[i, :, :d.shape[1]] = d
+    return times, dests
+
+
+def _dyn_scalars(spec: NocSpec, service_lat, max_outstanding, burst_beats):
+    sl = np.int32(spec.service_lat if service_lat is None else service_lat)
+    mo = np.asarray([c.max_outstanding for c in spec.classes], np.int32) \
+        if max_outstanding is None else np.asarray(max_outstanding, np.int32)
+    bb = np.asarray([c.burst_beats for c in spec.classes], np.int32) \
+        if burst_beats is None else np.asarray(burst_beats, np.int32)
+    return sl, mo, bb
+
+
+def simulate_schedules(spec: NocSpec,
+                       schedules: Mapping[str, tuple[np.ndarray, np.ndarray]],
+                       *, service_lat: int | None = None,
+                       max_outstanding: Sequence[int] | None = None,
+                       burst_beats: Sequence[int] | None = None
+                       ) -> SimResult:
+    """Run one experiment from raw per-class schedules (the layer the
+    Workload-less legacy shim and custom schedule sources go through)."""
+    times, dests = stack_schedules(spec, schedules)
+    sl, mo, bb = _dyn_scalars(spec, service_lat, max_outstanding,
+                              burst_beats)
+    raw = compiled_sim(spec, times.shape[-1])(times, dests, sl, mo, bb)
+    return SimResult.from_raw(spec, raw)
+
+
+def simulate(spec: NocSpec, workload: Workload, *,
+             service_lat: int | None = None,
+             max_outstanding: Sequence[int] | None = None,
+             burst_beats: Sequence[int] | None = None) -> SimResult:
+    """Run one experiment; scalar keyword overrides shadow the spec's
+    declared values without recompiling (they are traced operands)."""
+    return simulate_schedules(spec, workload.schedules(spec),
+                              service_lat=service_lat,
+                              max_outstanding=max_outstanding,
+                              burst_beats=burst_beats)
+
+
+def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
+                   service_lat: Sequence[int] | int | None = None,
+                   max_outstanding=None,
+                   burst_beats=None) -> SimResult:
+    """Run N operating points in ONE vmapped jit call.
+
+    ``workloads`` supplies per-point schedules (rate/seed/pattern
+    sweeps). ``service_lat`` may be one int (broadcast) or a length-N
+    sequence (swept). ``max_outstanding`` / ``burst_beats`` are
+    per-class: one int (all classes), a length-n_cls vector
+    (broadcast), or an (N, n_cls) array (swept per point).
+    Returns a SimResult whose arrays carry a leading sweep axis.
+    """
+    n = len(workloads)
+    if n == 0:
+        raise ValueError("empty sweep")
+    per_point = [wl.schedules(spec) for wl in workloads]
+    T = max(max(np.asarray(t).reshape(spec.n_routers, -1).shape[1]
+                for t, _ in sched.values()) for sched in per_point)
+    stacked = [stack_schedules(spec, sched, T=T) for sched in per_point]
+    times = np.stack([t for t, _ in stacked])          # (n, n_cls, R, T)
+    dests = np.stack([d for _, d in stacked])
+    n_cls = len(spec.classes)
+
+    def scalar_axis(v, default, name):
+        """0-d -> broadcast; (n,) -> swept."""
+        if v is None:
+            return np.int32(default), None
+        v = np.asarray(v, np.int32)
+        if v.ndim == 0:
+            return v, None
+        if v.shape != (n,):
+            raise ValueError(
+                f"{name} must be a scalar or length-{n} sweep; got shape "
+                f"{v.shape}")
+        return v, 0
+
+    def per_class_axis(v, default, name):
+        """0-d -> all classes; (n_cls,) -> broadcast; (n, n_cls) -> swept."""
+        if v is None:
+            return np.asarray(default, np.int32), None
+        v = np.asarray(v, np.int32)
+        if v.ndim == 0:
+            return np.full((n_cls,), v, np.int32), None
+        if v.shape == (n_cls,):
+            return v, None
+        if v.shape == (n, n_cls):
+            return v, 0
+        raise ValueError(
+            f"{name} must be a scalar, ({n_cls},) per-class vector, or "
+            f"({n}, {n_cls}) sweep; got shape {v.shape}")
+
+    sl, sl_ax = scalar_axis(service_lat, spec.service_lat, "service_lat")
+    mo, mo_ax = per_class_axis(
+        max_outstanding, [c.max_outstanding for c in spec.classes],
+        "max_outstanding")
+    bb, bb_ax = per_class_axis(
+        burst_beats, [c.burst_beats for c in spec.classes], "burst_beats")
+
+    fn = compiled_sim(spec, T)
+    raw = jax.vmap(fn, in_axes=(0, 0, sl_ax, mo_ax, bb_ax))(
+        jnp.asarray(times), jnp.asarray(dests), jnp.asarray(sl),
+        jnp.asarray(mo), jnp.asarray(bb))
+    return SimResult.from_raw(spec, raw)
+
+
+def sweep(points: Sequence[tuple[NocSpec, Workload]]) -> list[SimResult]:
+    """Simulate arbitrary (spec, workload) points, vmapping every group
+    of points that shares a static spec. Results come back in input
+    order, one unbatched SimResult per point."""
+    groups: dict[NocSpec, list[int]] = {}
+    for i, (spec, _) in enumerate(points):
+        groups.setdefault(spec, []).append(i)
+    out: list[SimResult | None] = [None] * len(points)
+    for spec, idxs in groups.items():
+        wls = [points[i][1] for i in idxs]
+        if len(idxs) == 1:
+            out[idxs[0]] = simulate(spec, wls[0])
+        else:
+            batched = simulate_batch(spec, wls)
+            for j, i in enumerate(idxs):
+                out[i] = batched.point(j)
+    return out  # type: ignore[return-value]

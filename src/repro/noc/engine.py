@@ -1,0 +1,392 @@
+"""Generalized N-channel FlooNoC cycle engine.
+
+This is the seed ``mesh_sim.py`` engine refactored from a hardcoded
+``narrow_wide: bool`` (1-or-3 network) branch into a topology-driven
+loop over the channels declared in a :class:`~repro.noc.spec.NocSpec`.
+Per channel, the injection policy is derived from which flows the
+``class_map`` routes onto it:
+
+* only response flows from one queue  -> direct streaming (paper's
+  dedicated narrow_rsp / wide networks),
+* only request flows                  -> static priority, latency-
+  critical (1-beat) classes first (paper's shared narrow_req carrying
+  narrow reqs + wide ARs with narrow priority),
+* requests and responses mixed       -> per-NI round-robin over all
+  flows with wormhole burst atomicity (the paper's wide-only ablation,
+  where a started burst excludes everything else on the link).
+
+Response reorder buffers are keyed by *response channel*: classes whose
+responses share one physical channel share one FIFO (the shared-FIFO
+ablation — one R channel on one link), classes with dedicated response
+channels get dedicated FIFOs.  For the two paper presets this engine is
+cycle-exact with the seed simulator (golden-checked by the test suite).
+
+NI model (paper §III-A) is unchanged: end-to-end ROB flow control,
+read transactions req -> target NI -> after ``service_lat`` cycles a
+response of ``burst_beats`` beats streams back atomically, in-order
+delivery via deterministic XY routing.
+
+Static structure (mesh dims, channel list, FIFO depths, class->channel
+map, horizon) lives in the spec and keys one jitted simulator; dynamic
+knobs (schedules, service latency, outstanding limits, burst lengths)
+are traced operands so ``jax.vmap`` batches whole sweeps in one jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noc_sim.router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME,
+                                       F_TXN, N_FIELDS, init_state,
+                                       network_step)
+from .spec import NocSpec
+
+RESP_Q_CAP = 256
+BIG = 1 << 30
+
+
+def req_kind(cls_idx: int) -> int:
+    return 2 * cls_idx
+
+
+def rsp_kind(cls_idx: int) -> int:
+    return 2 * cls_idx + 1
+
+
+class Topology(NamedTuple):
+    """Static routing of flows onto channels, derived from a NocSpec."""
+    n_cls: int
+    n_ch: int
+    n_q: int
+    queue_of_class: tuple[int, ...]   # class -> response queue id
+    reqs_on: tuple[tuple[int, ...], ...]   # channel -> req class ids (prio order)
+    queues_on: tuple[tuple[int, ...], ...]  # channel -> rsp queue ids
+
+
+def build_topology(spec: NocSpec) -> Topology:
+    n_cls, n_ch = len(spec.classes), len(spec.channels)
+    # queues: one per distinct response channel, in first-appearance order
+    rsp_ch_of_q: list[int] = []
+    queue_of_class = []
+    for cls in spec.classes:
+        ch = spec.rsp_channel(cls.name)
+        if ch not in rsp_ch_of_q:
+            rsp_ch_of_q.append(ch)
+        queue_of_class.append(rsp_ch_of_q.index(ch))
+    # per-channel request classes, latency-critical (single-beat) first
+    reqs_on = []
+    for c in range(n_ch):
+        ids = [i for i, cls in enumerate(spec.classes)
+               if spec.req_channel(cls.name) == c]
+        ids.sort(key=lambda i: (spec.classes[i].burst_beats > 1, i))
+        reqs_on.append(tuple(ids))
+    queues_on = tuple(
+        tuple(q for q, ch in enumerate(rsp_ch_of_q) if ch == c)
+        for c in range(n_ch))
+    return Topology(n_cls, n_ch, len(rsp_ch_of_q), tuple(queue_of_class),
+                    tuple(reqs_on), queues_on)
+
+
+class NIState(NamedTuple):
+    ptr: jax.Array          # (R, n_cls) schedule pointers
+    out: jax.Array          # (R, n_cls) outstanding (ROB flow control)
+    # response ring buffers: (R, n_q, C)
+    rq_head: jax.Array      # (R, n_q)
+    rq_tail: jax.Array      # (R, n_q)
+    rq_ready: jax.Array
+    rq_dest: jax.Array
+    rq_beats: jax.Array
+    rq_time0: jax.Array
+    rq_txn: jax.Array
+    rq_kind: jax.Array
+    w_started: jax.Array    # (R, n_q) burst mid-stream (inject atomicity)
+    inj_rr: jax.Array       # (R, n_ch) mixed-channel round-robin
+    # per-class metrics: (R, n_cls)
+    lat_sum: jax.Array
+    lat_max: jax.Array
+    done: jax.Array
+    beats_rx: jax.Array
+    first_t: jax.Array
+    last_t: jax.Array
+
+
+class SimState(NamedTuple):
+    nets: tuple
+    ni: NIState
+    cycle: jax.Array
+    moves: jax.Array        # (n_ch,) link traversals per channel
+
+
+def init_ni(R: int, topo: Topology) -> NIState:
+    zc = jnp.zeros((R, topo.n_cls), jnp.int32)
+    zq = jnp.zeros((R, topo.n_q), jnp.int32)
+    zqc = jnp.zeros((R, topo.n_q, RESP_Q_CAP), jnp.int32)
+    return NIState(
+        ptr=zc, out=zc, rq_head=zq, rq_tail=zq, rq_ready=zqc, rq_dest=zqc,
+        rq_beats=zqc, rq_time0=zqc, rq_txn=zqc, rq_kind=zqc,
+        w_started=jnp.zeros((R, topo.n_q), jnp.bool_),
+        inj_rr=jnp.zeros((R, topo.n_ch), jnp.int32),
+        lat_sum=zc, lat_max=zc, done=zc, beats_rx=zc,
+        first_t=jnp.full((R, topo.n_cls), BIG, jnp.int32), last_t=zc)
+
+
+def _q_push(ni: NIState, q: int, valid, dest, beats, time0, txn, ready_at,
+            kind):
+    rows = jnp.arange(valid.shape[0])
+    slot = ni.rq_tail[:, q] % RESP_Q_CAP
+
+    def upd(arr, val):
+        return arr.at[rows, q, slot].set(
+            jnp.where(valid, val, arr[rows, q, slot]))
+
+    return ni._replace(
+        rq_ready=upd(ni.rq_ready, ready_at),
+        rq_dest=upd(ni.rq_dest, dest),
+        rq_beats=upd(ni.rq_beats, beats),
+        rq_time0=upd(ni.rq_time0, time0),
+        rq_txn=upd(ni.rq_txn, txn),
+        rq_kind=upd(ni.rq_kind, kind),
+        rq_tail=ni.rq_tail.at[:, q].add(valid.astype(jnp.int32)),
+    )
+
+
+def _q_head(ni: NIState, q: int, now):
+    rows = jnp.arange(ni.rq_head.shape[0])
+    have = ni.rq_head[:, q] < ni.rq_tail[:, q]
+    slot = ni.rq_head[:, q] % RESP_Q_CAP
+    ready = have & (ni.rq_ready[rows, q, slot] <= now)
+    return {
+        "ready": ready,
+        "dest": ni.rq_dest[rows, q, slot],
+        "beats": ni.rq_beats[rows, q, slot],
+        "time0": ni.rq_time0[rows, q, slot],
+        "txn": ni.rq_txn[rows, q, slot],
+        "kind": ni.rq_kind[rows, q, slot],
+    }
+
+
+def _q_sent(ni: NIState, q: int, sent):
+    """Decrement head beats; pop when exhausted; track burst-in-flight."""
+    rows = jnp.arange(sent.shape[0])
+    slot = ni.rq_head[:, q] % RESP_Q_CAP
+    left = ni.rq_beats[rows, q, slot] - sent.astype(jnp.int32)
+    return ni._replace(
+        rq_beats=ni.rq_beats.at[rows, q, slot].set(
+            jnp.where(sent, left, ni.rq_beats[rows, q, slot])),
+        rq_head=ni.rq_head.at[:, q].add(
+            (sent & (left <= 0)).astype(jnp.int32)),
+        w_started=ni.w_started.at[:, q].set(
+            jnp.where(sent, left > 0, ni.w_started[:, q])),
+    )
+
+
+def make_step(spec: NocSpec, topo: Topology, T: int):
+    """Build the per-cycle transition. Dynamic operands arrive via the
+    carried closure-free ``dyn`` dict (schedules + scalar knobs)."""
+    R = spec.n_routers
+    nx, ny = spec.nx, spec.ny
+    rows = jnp.arange(R)
+
+    def mk_flit(valid, dest, src, time, kind, txn, beat):
+        f = jnp.zeros((R, N_FIELDS), jnp.int32)
+        z = jnp.int32(0)
+        for idx, val in ((F_DEST, dest), (F_SRC, src), (F_TIME, time),
+                         (F_KIND, kind), (F_TXN, txn), (F_BEAT, beat)):
+            f = f.at[:, idx].set(jnp.where(valid, val, z))
+        return f
+
+    def step(dyn, state: SimState, _):
+        times, dests = dyn["times"], dyn["dests"]
+        service_lat = dyn["service_lat"]
+        max_out, burst_beats = dyn["max_out"], dyn["burst_beats"]
+        ni = state.ni
+        now = state.cycle
+
+        # ---- source side: per-class request candidates (ROB gated) ------
+        want, req_d = [], []
+        for i in range(topo.n_cls):
+            p = jnp.clip(ni.ptr[:, i], 0, T - 1)
+            want.append((ni.ptr[:, i] < T) & (times[i, rows, p] <= now)
+                        & (ni.out[:, i] < max_out[i]))
+            req_d.append(dests[i, rows, p])
+
+        # ---- target side: response queue heads --------------------------
+        heads = [_q_head(ni, q, now) for q in range(topo.n_q)]
+
+        injected = [jnp.zeros((R,), jnp.bool_) for _ in range(topo.n_cls)]
+        sent = [jnp.zeros((R,), jnp.bool_) for _ in range(topo.n_q)]
+        new_nets, deliveries, moves = [], [], []
+
+        for c in range(topo.n_ch):
+            reqs, qs = topo.reqs_on[c], topo.queues_on[c]
+            if not reqs and not qs:          # idle channel: still steps
+                net, _, dv, df, lm = network_step(
+                    state.nets[c], jnp.zeros((R,), jnp.bool_),
+                    jnp.zeros((R, N_FIELDS), jnp.int32), nx, ny)
+            elif not reqs and len(qs) == 1:
+                # dedicated response channel: stream the queue head
+                q = qs[0]
+                h = heads[q]
+                f = mk_flit(h["ready"], h["dest"], rows, h["time0"],
+                            h["kind"], h["txn"], h["beats"])
+                net, ok, dv, df, lm = network_step(state.nets[c],
+                                                   h["ready"], f, nx, ny)
+                sent[q] = ok & h["ready"]
+            elif reqs and not qs:
+                # request-only channel: static priority, smalls first
+                taken = jnp.zeros((R,), jnp.bool_)
+                sel = []
+                for i in reqs:
+                    s = want[i] & ~taken
+                    sel.append((i, s))
+                    taken = taken | s
+                dest = kind = txn = jnp.zeros((R,), jnp.int32)
+                for i, s in sel:
+                    dest = jnp.where(s, req_d[i], dest)
+                    kind = jnp.where(s, req_kind(i), kind)
+                    txn = jnp.where(s, ni.ptr[:, i], txn)
+                f = mk_flit(taken, dest, rows, now, kind, txn, 1)
+                net, ok, dv, df, lm = network_step(state.nets[c], taken, f,
+                                                   nx, ny)
+                for i, s in sel:
+                    injected[i] = ok & s
+            else:
+                # mixed channel: round-robin over [rsp heads..., reqs...]
+                # with burst atomicity — an in-flight burst excludes all
+                cand = ([("rsp", q) for q in qs]
+                        + [("req", i) for i in reqs])
+                n_cand = len(cand)
+                cand_valid = jnp.stack(
+                    [heads[q]["ready"] for q in qs]
+                    + [want[i] for i in reqs], axis=1)
+                rr = ni.inj_rr[:, c] % n_cand
+                order = (jnp.arange(n_cand)[None, :] + rr[:, None]) % n_cand
+                ordered = jnp.take_along_axis(cand_valid, order, axis=1)
+                first = jnp.argmax(ordered, axis=1)
+                has_any = jnp.any(cand_valid, axis=1)
+                choice = jnp.take_along_axis(order, first[:, None],
+                                             axis=1)[:, 0]
+                hold = jnp.zeros((R,), jnp.bool_)
+                for k, q in enumerate(qs):
+                    hq = ni.w_started[:, q] & (heads[q]["beats"] > 0)
+                    choice = jnp.where(hq & ~hold, k, choice)
+                    hold = hold | hq
+                valid0 = has_any | hold
+
+                sel_masks = []
+                for k, (tag, idx) in enumerate(cand):
+                    gate = heads[idx]["ready"] if tag == "rsp" else want[idx]
+                    sel_masks.append(valid0 & (choice == k) & gate)
+                valid = functools.reduce(jnp.logical_or, sel_masks)
+
+                dest = kind = txn = beat = jnp.zeros((R,), jnp.int32)
+                time = jnp.broadcast_to(now, (R,)).astype(jnp.int32)
+                for (tag, idx), s in zip(cand, sel_masks):
+                    if tag == "rsp":
+                        h = heads[idx]
+                        dest = jnp.where(s, h["dest"], dest)
+                        kind = jnp.where(s, h["kind"], kind)
+                        txn = jnp.where(s, h["txn"], txn)
+                        time = jnp.where(s, h["time0"], time)
+                        beat = jnp.where(s, h["beats"], beat)
+                    else:
+                        dest = jnp.where(s, req_d[idx], dest)
+                        kind = jnp.where(s, req_kind(idx), kind)
+                        txn = jnp.where(s, ni.ptr[:, idx], txn)
+                        beat = jnp.where(s, 1, beat)
+                f = mk_flit(valid, dest, rows, time, kind, txn, beat)
+                net, ok, dv, df, lm = network_step(state.nets[c], valid, f,
+                                                   nx, ny)
+                for (tag, idx), s in zip(cand, sel_masks):
+                    if tag == "rsp":
+                        sent[idx] = sent[idx] | (ok & s)
+                    else:
+                        injected[idx] = ok & s
+                ni = ni._replace(inj_rr=ni.inj_rr.at[:, c].add(
+                    (ok & ~hold).astype(jnp.int32)))
+            new_nets.append(net)
+            deliveries.append((dv, df))
+            moves.append(lm)
+
+        # ---- pointer / outstanding / queue updates ----------------------
+        inj = jnp.stack(injected, axis=1).astype(jnp.int32)
+        ni = ni._replace(ptr=ni.ptr + inj, out=ni.out + inj)
+        for q in range(topo.n_q):
+            ni = _q_sent(ni, q, sent[q])
+
+        # ---- deliveries --------------------------------------------------
+        for c, (dv, df) in enumerate(deliveries):
+            kind = df[:, F_KIND]
+            src = df[:, F_SRC]
+            lat = now - df[:, F_TIME]
+            for i in topo.reqs_on[c]:
+                is_req = dv & (kind == req_kind(i))
+                ni = _q_push(
+                    ni, topo.queue_of_class[i], is_req, src,
+                    jnp.broadcast_to(burst_beats[i], (R,)).astype(jnp.int32),
+                    df[:, F_TIME], df[:, F_TXN], now + service_lat,
+                    jnp.full((R,), rsp_kind(i), jnp.int32))
+            rsp_classes = [i for i in range(topo.n_cls)
+                           if topo.queue_of_class[i] in topo.queues_on[c]]
+            for i in rsp_classes:
+                is_rsp = dv & (kind == rsp_kind(i))
+                last = is_rsp & (df[:, F_BEAT] <= 1)
+                li = last.astype(jnp.int32)
+                col = (jnp.arange(topo.n_cls) == i)
+                ni = ni._replace(
+                    beats_rx=ni.beats_rx + jnp.where(
+                        col, is_rsp.astype(jnp.int32)[:, None], 0),
+                    first_t=jnp.where(
+                        col & is_rsp[:, None],
+                        jnp.minimum(ni.first_t, now), ni.first_t),
+                    last_t=jnp.where(
+                        col & is_rsp[:, None],
+                        jnp.maximum(ni.last_t, now), ni.last_t),
+                    done=ni.done + jnp.where(col, li[:, None], 0),
+                    lat_sum=ni.lat_sum + jnp.where(
+                        col, jnp.where(last, lat, 0)[:, None], 0),
+                    lat_max=jnp.maximum(ni.lat_max, jnp.where(
+                        col, jnp.where(last, lat, 0)[:, None], 0)),
+                    out=ni.out - jnp.where(col, li[:, None], 0),
+                )
+
+        new_moves = state.moves + jnp.stack(moves).astype(jnp.int32)
+        return SimState(tuple(new_nets), ni, now + 1, new_moves), None
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def compiled_sim(spec: NocSpec, T: int):
+    """One jitted simulator per (static spec, horizon) pair.
+
+    Returns ``fn(times, dests, service_lat, max_out, burst_beats)`` where
+    ``times``/``dests`` are (n_cls, R, T) int32 schedules and the scalar
+    knobs are traced — so the whole function is vmappable over a leading
+    batch axis for rate/seed/latency sweeps in a single jit.
+    """
+    topo = build_topology(spec)
+    step = make_step(spec, topo, T)
+
+    @jax.jit
+    def run(times, dests, service_lat, max_out, burst_beats):
+        nets = tuple(init_state(spec.nx, spec.ny, ch.depth)
+                     for ch in spec.channels)
+        state = SimState(nets, init_ni(spec.n_routers, topo), jnp.int32(0),
+                         jnp.zeros((topo.n_ch,), jnp.int32))
+        dyn = {"times": times, "dests": dests,
+               "service_lat": service_lat, "max_out": max_out,
+               "burst_beats": burst_beats}
+        final, _ = jax.lax.scan(functools.partial(step, dyn), state, None,
+                                length=spec.cycles)
+        ni = final.ni
+        return {
+            "done": ni.done, "lat_sum": ni.lat_sum, "lat_max": ni.lat_max,
+            "beats_rx": ni.beats_rx, "first_t": ni.first_t,
+            "last_t": ni.last_t, "link_moves": final.moves,
+        }
+
+    return run

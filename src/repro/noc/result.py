@@ -1,0 +1,143 @@
+"""Structured simulation results.
+
+Replaces the seed's ad-hoc result dicts (``run_sim`` / ``benchmarks`` /
+``examples`` each reshaping raw keys differently) with one typed
+:class:`SimResult`: per-class latency/bandwidth stats, per-channel link
+activity + energy (paper Fig. 6 pJ/B/hop model), and a ``to_legacy``
+view feeding the deprecation shims.
+
+All arrays keep whatever leading batch dimensions the engine produced,
+so a vmapped sweep returns ONE ``SimResult`` whose stats have a leading
+sweep axis; ``point(i)`` slices out a single operating point.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+import numpy as np
+
+from .spec import NocSpec
+
+
+@dataclass(frozen=True)
+class ClassStats:
+    """Per-traffic-class metrics; arrays are (*batch, R)."""
+    done: np.ndarray          # completed transactions per NI
+    avg_lat: np.ndarray       # mean request->last-beat latency (cycles)
+    max_lat: np.ndarray       # worst-case latency (cycles)
+    beats_rx: np.ndarray      # response beats delivered per NI
+    eff_bw: np.ndarray        # beats / active-span cycles (link utilization)
+
+
+@dataclass(frozen=True)
+class ChannelStats:
+    """Per-physical-channel metrics; arrays are (*batch,)."""
+    link_moves: np.ndarray    # link traversals over the run
+    energy_pj: np.ndarray     # Fig. 6 model: moves * width_bytes * pJ/B/hop
+
+
+@dataclass(frozen=True)
+class SimResult:
+    spec: NocSpec
+    cycles: int
+    classes: Mapping[str, ClassStats]
+    channels: Mapping[str, ChannelStats]
+
+    @classmethod
+    def from_raw(cls, spec: NocSpec, raw: Mapping[str, Any]) -> "SimResult":
+        from repro.core.noc_sim.energy import PAPER
+        done = np.asarray(raw["done"])
+        lat_sum = np.asarray(raw["lat_sum"])
+        lat_max = np.asarray(raw["lat_max"])
+        beats = np.asarray(raw["beats_rx"])
+        first_t = np.asarray(raw["first_t"])
+        last_t = np.asarray(raw["last_t"])
+        moves = np.asarray(raw["link_moves"])
+
+        classes = {}
+        for i, tc in enumerate(spec.classes):
+            d = done[..., i]
+            span = np.maximum(
+                last_t[..., i] - np.minimum(first_t[..., i], last_t[..., i]),
+                1)
+            classes[tc.name] = ClassStats(
+                done=d,
+                avg_lat=lat_sum[..., i] / np.maximum(d, 1),
+                max_lat=lat_max[..., i],
+                beats_rx=beats[..., i],
+                eff_bw=beats[..., i] / span,
+            )
+        channels = {}
+        for c, ch in enumerate(spec.channels):
+            m = moves[..., c]
+            channels[ch.name] = ChannelStats(
+                link_moves=m,
+                energy_pj=m * (ch.width_bits / 8.0) * PAPER.pj_per_byte_hop,
+            )
+        return cls(spec=spec, cycles=spec.cycles, classes=classes,
+                   channels=channels)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        some = next(iter(self.classes.values()))
+        return some.done.shape[:-1]
+
+    def point(self, i: int) -> "SimResult":
+        """Slice one operating point out of a batched (vmapped) result."""
+        if not self.batch_shape:
+            raise IndexError("result is not batched")
+        classes = {k: ClassStats(**{f: getattr(v, f)[i]
+                                    for f in ClassStats.__dataclass_fields__})
+                   for k, v in self.classes.items()}
+        channels = {k: ChannelStats(link_moves=v.link_moves[i],
+                                    energy_pj=v.energy_pj[i])
+                    for k, v in self.channels.items()}
+        return SimResult(self.spec, self.cycles, classes, channels)
+
+    @property
+    def total_link_moves(self) -> np.ndarray:
+        return np.sum(np.stack(
+            [c.link_moves for c in self.channels.values()]), axis=0)
+
+    @property
+    def total_energy_pj(self) -> np.ndarray:
+        return np.sum(np.stack(
+            [c.energy_pj for c in self.channels.values()]), axis=0)
+
+    def to_legacy(self) -> dict[str, Any]:
+        """Seed ``run_sim`` result-dict view (narrow_*/wide_* keys)."""
+        if self.batch_shape:
+            raise ValueError("to_legacy needs an unbatched result")
+        n, w = self.classes["narrow"], self.classes["wide"]
+        return {
+            "narrow_done": n.done,
+            "narrow_avg_lat": n.avg_lat,
+            "narrow_max_lat": n.max_lat,
+            "wide_done": w.done,
+            "wide_beats_rx": w.beats_rx,
+            "wide_avg_lat": w.avg_lat,
+            "wide_eff_bw": w.eff_bw,
+            "cycles": self.cycles,
+            "total_link_moves": int(self.total_link_moves),
+        }
+
+    def summary(self) -> dict[str, Any]:
+        """Compact scalars (means over NIs with traffic) for reports."""
+        out: dict[str, Any] = {"cycles": self.cycles}
+        for name, st in self.classes.items():
+            active = st.done > 0
+            any_active = np.any(active, axis=-1)
+            with np.errstate(invalid="ignore"):
+                avg = np.where(
+                    any_active,
+                    np.sum(st.avg_lat * active, axis=-1)
+                    / np.maximum(np.sum(active, axis=-1), 1), 0.0)
+            out[f"{name}_done"] = np.sum(st.done, axis=-1)
+            out[f"{name}_avg_lat"] = avg
+            out[f"{name}_max_lat"] = np.max(st.max_lat, axis=-1)
+            out[f"{name}_peak_eff_bw"] = np.max(st.eff_bw, axis=-1)
+        out["total_link_moves"] = self.total_link_moves
+        out["total_energy_pj"] = self.total_energy_pj
+        return out

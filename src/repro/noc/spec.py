@@ -1,0 +1,210 @@
+"""Declarative NoC experiment specification.
+
+A :class:`NocSpec` declares *what the network is* — mesh dimensions, an
+arbitrary list of physical channels (each its own complete network
+instance, per the paper's no-VC design), the traffic classes riding on
+them, and a ``class_map`` assigning every traffic flow
+(``"<class>.req"`` / ``"<class>.rsp"``) to a channel.  The paper's two
+configurations are presets:
+
+* :meth:`NocSpec.narrow_wide` — three physical networks (narrow_req /
+  narrow_rsp / wide), paper §III-B Table I,
+* :meth:`NocSpec.wide_only` — the Fig. 5 ablation where one network
+  carries everything,
+
+but any N-channel topology can be declared, e.g. the journal version's
+end-to-end parallel multi-stream wide channels or PATRONoC-style
+per-stream links.
+
+Everything here is frozen/hashable: a ``NocSpec`` is the static cache
+key for one jitted simulator (see ``engine.py``); the *dynamic* knobs
+(service latency, outstanding limits, burst lengths, schedules) are
+traced operands so sweeps vmap over them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Mapping, Sequence
+
+
+@dataclass(frozen=True)
+class TrafficClass:
+    """One AXI-like traffic class (paper: narrow vs wide).
+
+    ``burst_beats == 1`` marks a latency-critical class whose response is
+    a single flit; ``burst_beats > 1`` marks a bandwidth class whose
+    response is an atomic wormhole burst of that many beats.
+    """
+    name: str
+    burst_beats: int = 1
+    max_outstanding: int = 8       # end-to-end ROB flow control budget
+    payload_bits: int = 64         # per-beat payload (accounting only)
+
+
+@dataclass(frozen=True)
+class PhysicalChannel:
+    """One physical network instance (complete router mesh, no VCs)."""
+    name: str
+    depth: int = 2                 # input FIFO depth per router port
+    width_bits: int = 603          # link width incl. header lines (accounting)
+
+
+@dataclass(frozen=True)
+class NocSpec:
+    """Static description of one NoC experiment configuration."""
+    nx: int = 4
+    ny: int = 4
+    classes: tuple[TrafficClass, ...] = (
+        TrafficClass("narrow", burst_beats=1, max_outstanding=8,
+                     payload_bits=64),
+        TrafficClass("wide", burst_beats=16, max_outstanding=8,
+                     payload_bits=512),
+    )
+    channels: tuple[PhysicalChannel, ...] = (
+        PhysicalChannel("req", depth=2, width_bits=119),
+        PhysicalChannel("rsp", depth=2, width_bits=103),
+        PhysicalChannel("wide", depth=2, width_bits=603),
+    )
+    # flow ("<class>.req" | "<class>.rsp") -> channel name, stored sorted
+    class_map: tuple[tuple[str, str], ...] = (
+        ("narrow.req", "req"), ("narrow.rsp", "rsp"),
+        ("wide.req", "req"), ("wide.rsp", "wide"),
+    )
+    service_lat: int = 10          # target memory + NI latency (cycles)
+    cycles: int = 4000
+
+    def __post_init__(self):
+        if isinstance(self.classes, Sequence) and not isinstance(
+                self.classes, tuple):
+            object.__setattr__(self, "classes", tuple(self.classes))
+        if isinstance(self.channels, Sequence) and not isinstance(
+                self.channels, tuple):
+            object.__setattr__(self, "channels", tuple(self.channels))
+        cm = self.class_map
+        items = list(cm.items()) if isinstance(cm, Mapping) else list(cm)
+        if len({k for k, _ in items}) != len(items):
+            raise ValueError("class_map has duplicate flow entries")
+        # normalize (sort) regardless of input form so equivalent specs
+        # hash equal and share one compiled simulator
+        cm = tuple(sorted(items))
+        object.__setattr__(self, "class_map", cm)
+        names = {c.name for c in self.classes}
+        chans = {c.name for c in self.channels}
+        if len(names) != len(self.classes):
+            raise ValueError("duplicate traffic class names")
+        if len(chans) != len(self.channels):
+            raise ValueError("duplicate channel names")
+        flows = dict(cm)
+        for cls in self.classes:
+            for d in ("req", "rsp"):
+                flow = f"{cls.name}.{d}"
+                if flow not in flows:
+                    raise ValueError(f"class_map missing flow {flow!r}")
+                if flows[flow] not in chans:
+                    raise ValueError(
+                        f"flow {flow!r} mapped to unknown channel "
+                        f"{flows[flow]!r}")
+        for flow in flows:
+            cls_name, _, d = flow.partition(".")
+            if cls_name not in names or d not in ("req", "rsp"):
+                raise ValueError(f"class_map has unknown flow {flow!r}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_routers(self) -> int:
+        return self.nx * self.ny
+
+    @property
+    def flow_map(self) -> dict[str, str]:
+        return dict(self.class_map)
+
+    def class_index(self, name: str) -> int:
+        for i, c in enumerate(self.classes):
+            if c.name == name:
+                return i
+        raise KeyError(name)
+
+    def get_class(self, name: str) -> TrafficClass:
+        return self.classes[self.class_index(name)]
+
+    def channel_index(self, name: str) -> int:
+        for i, c in enumerate(self.channels):
+            if c.name == name:
+                return i
+        raise KeyError(name)
+
+    def req_channel(self, cls_name: str) -> int:
+        return self.channel_index(self.flow_map[f"{cls_name}.req"])
+
+    def rsp_channel(self, cls_name: str) -> int:
+        return self.channel_index(self.flow_map[f"{cls_name}.rsp"])
+
+    @property
+    def burstlen(self) -> int:
+        """Largest declared burst (legacy traffic generators key off it)."""
+        return max(c.burst_beats for c in self.classes)
+
+    def with_(self, **kw) -> "NocSpec":
+        return replace(self, **kw)
+
+    # ---------------------------------------------------------------- #
+    # paper presets
+    # ---------------------------------------------------------------- #
+    @classmethod
+    def narrow_wide(cls, nx: int = 4, ny: int = 4, *, depth: int = 2,
+                    burstlen: int = 16, service_lat: int = 10,
+                    cycles: int = 4000, max_narrow_outstanding: int = 8,
+                    max_wide_outstanding: int = 8) -> "NocSpec":
+        """Paper §III-B: three independent physical networks."""
+        return cls(
+            nx=nx, ny=ny,
+            classes=(
+                TrafficClass("narrow", 1, max_narrow_outstanding, 64),
+                TrafficClass("wide", burstlen, max_wide_outstanding, 512),
+            ),
+            channels=(
+                PhysicalChannel("req", depth, 119),
+                PhysicalChannel("rsp", depth, 103),
+                PhysicalChannel("wide", depth, 603),
+            ),
+            class_map=(("narrow.req", "req"), ("narrow.rsp", "rsp"),
+                       ("wide.req", "req"), ("wide.rsp", "wide")),
+            service_lat=service_lat, cycles=cycles)
+
+    @classmethod
+    def wide_only(cls, nx: int = 4, ny: int = 4, *, depth: int = 2,
+                  burstlen: int = 16, service_lat: int = 10,
+                  cycles: int = 4000, max_narrow_outstanding: int = 8,
+                  max_wide_outstanding: int = 8) -> "NocSpec":
+        """Fig. 5 ablation: ONE network carries every flow; narrow flits
+        burn full wide-link cycles and bursts hold links end-to-end."""
+        return cls(
+            nx=nx, ny=ny,
+            classes=(
+                TrafficClass("narrow", 1, max_narrow_outstanding, 64),
+                TrafficClass("wide", burstlen, max_wide_outstanding, 512),
+            ),
+            channels=(PhysicalChannel("wide", depth, 603),),
+            class_map=(("narrow.req", "wide"), ("narrow.rsp", "wide"),
+                       ("wide.req", "wide"), ("wide.rsp", "wide")),
+            service_lat=service_lat, cycles=cycles)
+
+    @classmethod
+    def multi_stream(cls, nx: int = 4, ny: int = 4, *, n_wide: int = 2,
+                     depth: int = 2, burstlen: int = 16,
+                     service_lat: int = 10, cycles: int = 4000
+                     ) -> "NocSpec":
+        """Journal-version style: ``n_wide`` parallel wide stream channels
+        (wide class i rides its own physical network) next to the shared
+        narrow req/rsp pair."""
+        classes = [TrafficClass("narrow", 1, 8, 64)]
+        channels = [PhysicalChannel("req", depth, 119),
+                    PhysicalChannel("rsp", depth, 103)]
+        cmap = [("narrow.req", "req"), ("narrow.rsp", "rsp")]
+        for i in range(n_wide):
+            classes.append(TrafficClass(f"wide{i}", burstlen, 8, 512))
+            channels.append(PhysicalChannel(f"wide{i}", depth, 603))
+            cmap += [(f"wide{i}.req", "req"), (f"wide{i}.rsp", f"wide{i}")]
+        return cls(nx=nx, ny=ny, classes=tuple(classes),
+                   channels=tuple(channels), class_map=tuple(sorted(cmap)),
+                   service_lat=service_lat, cycles=cycles)

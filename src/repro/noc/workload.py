@@ -1,0 +1,316 @@
+"""Declarative traffic workloads typed against a NocSpec's classes.
+
+A :class:`Workload` names a registered *pattern* plus per-class
+parameters (rates in flits/cycle, transaction counts).  Patterns
+produce, for every declared :class:`~repro.noc.spec.TrafficClass`, a
+dense ``(R, T)`` schedule of desired inject times (sorted per NI; an
+entry at/after ``BIG`` disables the slot) and destinations — the same
+schedule contract the seed ``traffic.py`` used, generalized from the
+hardcoded narrow/wide pair to the spec's declared class list.
+
+Built-in patterns:
+
+* ``fig5``           — paper Fig. 5 cluster-to-cluster pair traffic
+  (wraps the seed ``fig5_traffic`` semantics),
+* ``uniform_random`` — uniform-random background from every NI (wraps
+  the seed ``uniform_random``, with the self-traffic remap fixed),
+* ``hotspot``        — a fraction of traffic converges on one hot tile,
+* ``transpose``      — tile (x, y) talks to tile (y, x),
+* ``all_to_all``     — every NI sweeps all other tiles round-robin
+  (PATRONoC-style DNN all-to-all phase).
+
+Rates/counts referencing a class name the spec does not declare raise
+immediately — workloads are typed against the spec, not stringly glued.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from .spec import NocSpec
+
+BIG = 1 << 30
+
+PATTERNS: dict[str, Callable] = {}
+
+
+def register_pattern(name: str):
+    def deco(fn):
+        PATTERNS[name] = fn
+        return fn
+    return deco
+
+
+# dicts are frozen to a tagged tuple so thawing is exact (a user pattern
+# taking a literal sequence of (str, value) pairs is NOT turned into a dict)
+_DICT_TAG = "__frozen_mapping__"
+
+
+def _freeze(v):
+    if isinstance(v, Mapping):
+        return (_DICT_TAG,
+                tuple(sorted((k, _freeze(x)) for k, x in v.items())))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    return v
+
+
+def _thaw(v):
+    if (isinstance(v, tuple) and len(v) == 2 and v[0] == _DICT_TAG
+            and isinstance(v[1], tuple)):
+        return {k: _thaw(x) for k, x in v[1]}
+    if isinstance(v, tuple):
+        return tuple(_thaw(x) for x in v)
+    return v
+
+
+@dataclass(frozen=True)
+class Workload:
+    """A named traffic pattern with (frozen, hashable) parameters."""
+    pattern: str
+    params: tuple = ()
+
+    @classmethod
+    def make(cls, pattern: str, **params) -> "Workload":
+        if pattern not in PATTERNS:
+            raise KeyError(
+                f"unknown pattern {pattern!r}; have {sorted(PATTERNS)}")
+        # top level is always kwargs: store as plain (name, frozen) pairs
+        return cls(pattern, tuple(sorted(
+            (k, _freeze(v)) for k, v in params.items())))
+
+    @property
+    def kwargs(self) -> dict[str, Any]:
+        return {k: _thaw(v) for k, v in self.params}
+
+    def schedules(self, spec: NocSpec) -> dict[str, tuple[np.ndarray,
+                                                          np.ndarray]]:
+        """Per-class (times, dests) arrays, one entry per declared class."""
+        out = PATTERNS[self.pattern](spec, **self.kwargs)
+        for name in out:
+            spec.class_index(name)      # typed against declared classes
+        for cls in spec.classes:
+            out.setdefault(cls.name, _empty(spec.n_routers))
+        return out
+
+
+# --------------------------------------------------------------------- #
+# helpers shared by the patterns
+# --------------------------------------------------------------------- #
+def _empty(R: int) -> tuple[np.ndarray, np.ndarray]:
+    return (np.full((R, 1), BIG, np.int32), np.zeros((R, 1), np.int32))
+
+
+def _per_class(spec: NocSpec, m: Mapping[str, Any] | None,
+               default) -> dict[str, Any]:
+    m = dict(m or {})
+    for name in m:
+        spec.class_index(name)          # raises on undeclared class
+    return {c.name: m.get(c.name, default) for c in spec.classes}
+
+
+def _check_tile(spec: NocSpec, name: str, tile: int) -> int:
+    if not 0 <= tile < spec.n_routers:
+        raise ValueError(
+            f"{name}={tile} outside the {spec.nx}x{spec.ny} mesh "
+            f"(0..{spec.n_routers - 1})")
+    return tile
+
+
+def _gap(rate: float, stretch: int) -> int:
+    return max(1, int(round(stretch / rate)))
+
+
+def _ramp(rate: float, count: int, stretch: int = 1,
+          start: int = 10) -> np.ndarray:
+    """Evenly spaced inject times, the seed's deterministic schedule."""
+    if rate <= 0 or count <= 0:
+        return np.full((1,), BIG, np.int32)
+    return (start + np.arange(count) * _gap(rate, stretch)).astype(np.int32)
+
+
+def _no_self_dests(rng: np.random.Generator, R: int,
+                   count: int) -> np.ndarray:
+    """Uniform destinations excluding self: draw from [0, R-1) then shift
+    past the source so dest == src is impossible (for R > 1)."""
+    if R <= 1:
+        return np.zeros((R, count), np.int32)
+    draws = rng.integers(0, R - 1, size=(R, count)).astype(np.int32)
+    return (draws + 1 + np.arange(R)[:, None]).astype(np.int32) % R
+
+
+class _Builder:
+    """Accumulates per-NI schedules into dense sorted (R, T) arrays."""
+
+    def __init__(self, R: int):
+        self.R = R
+        self.rows: list[list[tuple[int, int]]] = [[] for _ in range(R)]
+
+    def add(self, src: int, times: np.ndarray, dests) -> None:
+        dests = np.broadcast_to(np.asarray(dests, np.int32), times.shape)
+        for t, d in zip(times.tolist(), dests.tolist()):
+            if t < BIG:
+                self.rows[src].append((t, d))
+
+    def build(self) -> tuple[np.ndarray, np.ndarray]:
+        T = max(1, max(len(r) for r in self.rows))
+        times = np.full((self.R, T), BIG, np.int32)
+        dests = np.zeros((self.R, T), np.int32)
+        for s, r in enumerate(self.rows):
+            r.sort()
+            for j, (t, d) in enumerate(r):
+                times[s, j] = t
+                dests[s, j] = d
+        return times, dests
+
+
+# --------------------------------------------------------------------- #
+# patterns
+# --------------------------------------------------------------------- #
+@register_pattern("fig5")
+def fig5(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
+         counts: Mapping[str, int] | None = None, src: int | None = None,
+         dst: int | None = None, bidir: bool = False) -> dict:
+    """Cluster-to-cluster accesses between two tiles (paper Fig. 5).
+
+    Each class issues ``counts[cls]`` reads at ``rates[cls]`` flits/cycle
+    from src to dst (burst classes scale the AR gap by their burst
+    length, so rate 1.0 means back-to-back bursts); ``bidir`` mirrors
+    the traffic dst -> src.
+    """
+    R = spec.n_routers
+    src = 0 if src is None else _check_tile(spec, "src", src)
+    dst = R - 1 if dst is None else _check_tile(spec, "dst", dst)
+    rates = _per_class(spec, rates, 0.0)
+    counts = _per_class(spec, counts, 0)
+    out = {}
+    for cls in spec.classes:
+        b = _Builder(R)
+        times = _ramp(rates[cls.name], counts[cls.name],
+                      stretch=cls.burst_beats)
+        b.add(src, times, dst)
+        if bidir:
+            b.add(dst, times, src)
+        out[cls.name] = b.build()
+    return out
+
+
+@register_pattern("uniform_random")
+def uniform_random(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
+                   counts: Mapping[str, int] | None = None,
+                   seed: int = 0) -> dict:
+    """Uniform-random background traffic (all NIs, random non-self dests)."""
+    R = spec.n_routers
+    rng = np.random.default_rng(seed)
+    rates = _per_class(spec, rates, 0.0)
+    counts = _per_class(spec, counts, 0)
+    out = {}
+    for cls in spec.classes:
+        rate, count = rates[cls.name], counts[cls.name]
+        if count <= 0 or rate <= 0:
+            out[cls.name] = _empty(R)
+            continue
+        gap = _gap(rate, cls.burst_beats)
+        times = 10 + np.cumsum(rng.integers(1, 2 * gap, size=(R, count)),
+                               axis=1).astype(np.int32)
+        out[cls.name] = (times.astype(np.int32),
+                         _no_self_dests(rng, R, count))
+    return out
+
+
+@register_pattern("hotspot")
+def hotspot(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
+            counts: Mapping[str, int] | None = None,
+            hot: int | None = None, hot_frac: float = 0.5,
+            seed: int = 0) -> dict:
+    """Uniform-random traffic with a fraction converging on one hot tile
+    (memory-controller / parameter-server congestion archetype)."""
+    R = spec.n_routers
+    if hot is None:
+        hot = (spec.ny // 2) * spec.nx + spec.nx // 2
+    else:
+        _check_tile(spec, "hot", hot)
+    rng = np.random.default_rng(seed)
+    rates = _per_class(spec, rates, 0.0)
+    counts = _per_class(spec, counts, 0)
+    out = {}
+    for cls in spec.classes:
+        rate, count = rates[cls.name], counts[cls.name]
+        if count <= 0 or rate <= 0:
+            out[cls.name] = _empty(R)
+            continue
+        gap = _gap(rate, cls.burst_beats)
+        times = 10 + np.cumsum(rng.integers(1, 2 * gap, size=(R, count)),
+                               axis=1).astype(np.int32)
+        dests = _no_self_dests(rng, R, count)
+        to_hot = rng.random((R, count)) < hot_frac
+        dests = np.where(to_hot, hot, dests).astype(np.int32)
+        # the hot tile itself keeps its uniform destinations
+        if R > 1:
+            dests[hot] = _no_self_dests(
+                np.random.default_rng(seed + 1), R, count)[hot]
+        out[cls.name] = (times, dests)
+    return out
+
+
+@register_pattern("transpose")
+def transpose(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
+              counts: Mapping[str, int] | None = None) -> dict:
+    """Matrix-transpose permutation: tile (x, y) targets tile (y, x).
+    Requires a square mesh; diagonal tiles stay silent."""
+    if spec.nx != spec.ny:
+        raise ValueError("transpose pattern needs a square mesh")
+    R = spec.n_routers
+    rates = _per_class(spec, rates, 0.0)
+    counts = _per_class(spec, counts, 0)
+    out = {}
+    for cls in spec.classes:
+        b = _Builder(R)
+        times = _ramp(rates[cls.name], counts[cls.name],
+                      stretch=cls.burst_beats)
+        for r in range(R):
+            x, y = r % spec.nx, r // spec.nx
+            d = x * spec.nx + y
+            if d != r:
+                b.add(r, times, d)
+        out[cls.name] = b.build()
+    return out
+
+
+@register_pattern("all_to_all")
+def all_to_all(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
+               rounds: Mapping[str, int] | None = None) -> dict:
+    """Every NI sweeps all other tiles in src-staggered round-robin order
+    (the DNN all-to-all / expert-exchange phase PATRONoC stresses)."""
+    R = spec.n_routers
+    rates = _per_class(spec, rates, 0.0)
+    rounds = _per_class(spec, rounds, 0)
+    out = {}
+    for cls in spec.classes:
+        rate, n_rounds = rates[cls.name], rounds[cls.name]
+        count = n_rounds * (R - 1)
+        if count <= 0 or rate <= 0 or R <= 1:
+            out[cls.name] = _empty(R)
+            continue
+        b = _Builder(R)
+        times = _ramp(rate, count, stretch=cls.burst_beats)
+        offs = np.arange(count) % (R - 1)        # 0..R-2 repeated
+        for s in range(R):
+            dests = (s + 1 + offs) % R           # sweeps all non-self tiles
+            b.add(s, times, dests)
+        out[cls.name] = b.build()
+    return out
+
+
+def from_legacy_traffic(spec: NocSpec, traffic: Mapping[str, np.ndarray]
+                        ) -> dict[str, tuple[np.ndarray, np.ndarray]]:
+    """Adapt a seed-format schedule dict (nar_*/wide_* keys) to the
+    per-class schedule mapping the engine consumes."""
+    return {
+        "narrow": (np.asarray(traffic["nar_time"], np.int32),
+                   np.asarray(traffic["nar_dest"], np.int32)),
+        "wide": (np.asarray(traffic["wide_time"], np.int32),
+                 np.asarray(traffic["wide_dest"], np.int32)),
+    }

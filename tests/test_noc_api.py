@@ -1,0 +1,271 @@
+"""Tests for the declarative repro.noc experiment API.
+
+Covers: spec/workload validation, paper-preset invariants (Fig. 5a/5b
+through the new surface), vmapped-sweep == Python-loop equivalence,
+the uniform_random self-traffic regression, N-channel topologies, and
+the NocSpec -> ChannelPolicy derivation shared with the collectives.
+"""
+import numpy as np
+import pytest
+
+from repro.noc import (NocSpec, PhysicalChannel, TrafficClass, Workload,
+                       build_topology, simulate, simulate_batch, sweep)
+
+
+# --------------------------------------------------------------------- #
+# spec validation / topology derivation
+# --------------------------------------------------------------------- #
+def test_spec_validates_class_map():
+    with pytest.raises(ValueError, match="missing flow"):
+        NocSpec(class_map=(("narrow.req", "req"), ("narrow.rsp", "rsp"),
+                           ("wide.req", "req")))
+    with pytest.raises(ValueError, match="unknown channel"):
+        NocSpec(class_map=(("narrow.req", "nope"), ("narrow.rsp", "rsp"),
+                           ("wide.req", "req"), ("wide.rsp", "wide")))
+
+
+def test_topology_presets():
+    nw = build_topology(NocSpec.narrow_wide())
+    assert nw.n_ch == 3 and nw.n_q == 2
+    assert nw.reqs_on == ((0, 1), (), ())        # shared req, narrow first
+    assert nw.queues_on == ((), (0,), (1,))      # dedicated rsp networks
+    wo = build_topology(NocSpec.wide_only())
+    assert wo.n_ch == 1 and wo.n_q == 1          # shared-FIFO ablation
+    assert wo.queue_of_class == (0, 0)
+    ms = build_topology(NocSpec.multi_stream(n_wide=3))
+    assert ms.n_ch == 5 and ms.n_q == 4
+
+
+def test_workload_typed_against_classes():
+    spec = NocSpec.narrow_wide(2, 2, cycles=100)
+    with pytest.raises(KeyError):
+        Workload.make("nonexistent_pattern")
+    wl = Workload.make("fig5", rates={"bogus_class": 1.0},
+                       counts={"bogus_class": 1})
+    with pytest.raises(KeyError):
+        wl.schedules(spec)
+
+
+# --------------------------------------------------------------------- #
+# paper invariants through the new API
+# --------------------------------------------------------------------- #
+def _fig5_wl(rate, n_wide, bidir=True):
+    return Workload.make("fig5", rates={"narrow": 0.05, "wide": rate},
+                         counts={"narrow": 100, "wide": n_wide},
+                         src=0, dst=15, bidir=bidir)
+
+
+def test_zero_load_latency():
+    spec = NocSpec.narrow_wide(2, 1, cycles=200)
+    r = simulate(spec, Workload.make("fig5", rates={"narrow": 0.01},
+                                     counts={"narrow": 1}, src=0, dst=1))
+    assert int(r.classes["narrow"].done[0]) == 1
+    assert float(r.classes["narrow"].avg_lat[0]) == 18   # paper VI-A
+
+
+def test_narrow_wide_isolation_vs_wide_only_degradation():
+    """Fig. 5a through the new API: dedicated channels keep narrow
+    latency flat; the shared wide-only link degrades max latency >=2x."""
+    stats = {}
+    for preset in (NocSpec.narrow_wide, NocSpec.wide_only):
+        spec = preset(4, 4, cycles=8000)
+        r = simulate_batch(spec, [_fig5_wl(0.0, 0), _fig5_wl(1.0, 128)])
+        base = float(r.classes["narrow"].avg_lat[0, 0])
+        stats[preset.__name__] = (
+            float(r.classes["narrow"].avg_lat[1, 0]) / base,
+            float(r.classes["narrow"].max_lat[1, 0]) / base)
+    avg_nw, _ = stats["narrow_wide"]
+    avg_wo, max_wo = stats["wide_only"]
+    assert avg_nw < 1.1, stats
+    assert avg_wo > 2.0, stats
+    assert max_wo >= 2.0, stats
+
+
+def test_wide_bandwidth_follows_fig5b_trend():
+    """Fig. 5b: with separation, wide bandwidth under narrow
+    interference stays within 15% of the clean run."""
+    spec = NocSpec.narrow_wide(4, 4, cycles=6000)
+    wls = [Workload.make("fig5", rates={"narrow": nr, "wide": 1.0},
+                         counts={"narrow": 2000 if nr else 0, "wide": 128},
+                         src=0, dst=5)
+           for nr in (0.0, 1.0)]
+    r = simulate_batch(spec, wls)
+    clean = float(r.classes["wide"].eff_bw[0, 0])
+    loaded = float(r.classes["wide"].eff_bw[1, 0])
+    assert loaded >= 0.85 * clean, (clean, loaded)
+
+
+# --------------------------------------------------------------------- #
+# vmapped sweep == Python loop (the API's core promise)
+# --------------------------------------------------------------------- #
+def test_vmapped_sweep_matches_individual_runs():
+    spec = NocSpec.narrow_wide(4, 4, cycles=2000)
+    rates = [0.25, 0.5, 0.75, 1.0]
+    wls = [Workload.make("fig5", rates={"narrow": 0.05, "wide": r},
+                         counts={"narrow": 40, "wide": 24}, src=0, dst=15)
+           for r in rates]
+    batched = simulate_batch(spec, wls)
+    assert batched.batch_shape == (len(rates),)
+    for i, wl in enumerate(wls):
+        single = simulate(spec, wl)
+        for cname in ("narrow", "wide"):
+            b, s = batched.point(i).classes[cname], single.classes[cname]
+            np.testing.assert_array_equal(b.done, s.done)
+            np.testing.assert_allclose(b.avg_lat, s.avg_lat)
+            np.testing.assert_array_equal(b.beats_rx, s.beats_rx)
+        np.testing.assert_array_equal(batched.point(i).total_link_moves,
+                                      single.total_link_moves)
+
+
+def test_scalar_field_sweep_vmaps():
+    """service_lat is a traced operand: sweeping it batches in one jit
+    and matches per-point runs."""
+    spec = NocSpec.narrow_wide(2, 2, cycles=600)
+    wl = Workload.make("fig5", rates={"narrow": 0.1}, counts={"narrow": 10},
+                       src=0, dst=3)
+    lats = [5, 10, 20]
+    batched = simulate_batch(spec, [wl] * len(lats), service_lat=lats)
+    for i, sl in enumerate(lats):
+        single = simulate(spec, wl, service_lat=sl)
+        np.testing.assert_allclose(
+            batched.point(i).classes["narrow"].avg_lat,
+            single.classes["narrow"].avg_lat)
+    # more service latency -> strictly more round-trip latency
+    l = [float(np.max(batched.classes["narrow"].avg_lat[i])) for i in
+         range(len(lats))]
+    assert l[0] < l[1] < l[2], l
+
+
+def test_sweep_groups_static_specs():
+    pts = [(NocSpec.narrow_wide(2, 2, depth=d, cycles=400),
+            Workload.make("fig5", rates={"narrow": 0.1},
+                          counts={"narrow": 5}))
+           for d in (2, 3, 2)]
+    res = sweep(pts)
+    assert [int(r.classes["narrow"].done.sum()) for r in res] == [5, 5, 5]
+    assert all(not r.batch_shape for r in res)
+
+
+# --------------------------------------------------------------------- #
+# workload patterns
+# --------------------------------------------------------------------- #
+def test_uniform_random_never_self():
+    """Regression: the old remap (d + 1 + src) % R with d drawn from
+    [0, R) produced dest == src whenever d == R-1."""
+    spec = NocSpec.narrow_wide(4, 4, cycles=100)
+    for seed in range(8):
+        wl = Workload.make("uniform_random",
+                           rates={"narrow": 0.5, "wide": 0.5},
+                           counts={"narrow": 200, "wide": 50}, seed=seed)
+        for name, (times, dests) in wl.schedules(spec).items():
+            live = times < (1 << 30)
+            srcs = np.broadcast_to(
+                np.arange(spec.n_routers)[:, None], dests.shape)
+            assert not np.any((dests == srcs) & live), (name, seed)
+
+
+def test_legacy_uniform_random_never_self():
+    from repro.core.noc_sim.traffic import uniform_random
+    from repro.core.noc_sim import SimConfig
+    cfg = SimConfig(nx=4, ny=4)
+    for seed in range(8):
+        tr = uniform_random(cfg, narrow_per_ni=200, wide_per_ni=50,
+                            narrow_rate=0.5, wide_rate=0.5, seed=seed)
+        for kind in ("nar", "wide"):
+            dests = tr[f"{kind}_dest"]
+            live = tr[f"{kind}_time"] < (1 << 30)
+            srcs = np.broadcast_to(np.arange(cfg.n_routers)[:, None],
+                                   dests.shape)
+            assert not np.any((dests == srcs) & live), (kind, seed)
+
+
+def test_patterns_produce_valid_schedules():
+    spec = NocSpec.narrow_wide(4, 4, cycles=100)
+    wls = [
+        Workload.make("hotspot", rates={"narrow": 0.2}, counts={"narrow": 5}),
+        Workload.make("transpose", rates={"wide": 0.5}, counts={"wide": 2}),
+        Workload.make("all_to_all", rates={"narrow": 0.2},
+                      rounds={"narrow": 1}),
+    ]
+    for wl in wls:
+        sched = wl.schedules(spec)
+        assert set(sched) == {"narrow", "wide"}
+        for times, dests in sched.values():
+            assert times.shape == dests.shape
+            assert np.all((dests >= 0) & (dests < spec.n_routers))
+            assert np.all(np.diff(
+                np.where(times < (1 << 30), times, np.int64(1 << 30)),
+                axis=1) >= 0)  # sorted per NI
+
+
+def test_all_to_all_covers_every_pair():
+    spec = NocSpec.narrow_wide(3, 3, cycles=100)
+    wl = Workload.make("all_to_all", rates={"narrow": 1.0},
+                       rounds={"narrow": 1})
+    times, dests = wl.schedules(spec)["narrow"]
+    R = spec.n_routers
+    for s in range(R):
+        live = times[s] < (1 << 30)
+        assert set(dests[s][live].tolist()) == set(range(R)) - {s}
+
+
+# --------------------------------------------------------------------- #
+# N-channel topologies beyond the paper's two
+# --------------------------------------------------------------------- #
+def test_multi_stream_completes_and_isolates():
+    spec = NocSpec.multi_stream(3, 3, n_wide=2, cycles=4000)
+    wl = Workload.make("fig5",
+                       rates={"narrow": 0.1, "wide0": 1.0, "wide1": 1.0},
+                       counts={"narrow": 20, "wide0": 8, "wide1": 8},
+                       src=0, dst=8)
+    r = simulate(spec, wl)
+    assert int(r.classes["narrow"].done[0]) == 20
+    assert int(r.classes["wide0"].done[0]) == 8
+    assert int(r.classes["wide1"].done[0]) == 8
+    # both streams deliver full bursts
+    bl = spec.get_class("wide0").burst_beats
+    assert int(r.classes["wide0"].beats_rx[0]) == 8 * bl
+    # 4 physical networks (req, rsp, wide0, wide1) tracked independently
+    assert len(r.channels) == 4
+    assert float(r.channels["req"].energy_pj) > 0
+
+
+def test_shim_matches_new_api():
+    """The deprecated SimConfig/run_sim shim and the declarative API
+    agree exactly on the same deterministic workload."""
+    import warnings
+    from repro.core.noc_sim import SimConfig, fig5_traffic, run_sim
+    cfg = SimConfig(nx=3, ny=3, cycles=1500, narrow_wide=True)
+    tr = fig5_traffic(cfg, num_narrow=20, num_wide=8, wide_rate=1.0,
+                      narrow_rate=0.05, src=0, dst=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_sim(cfg, tr)
+    r = simulate(cfg.to_spec(),
+                 Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
+                               counts={"narrow": 20, "wide": 8},
+                               src=0, dst=8))
+    np.testing.assert_array_equal(legacy["narrow_done"],
+                                  r.classes["narrow"].done)
+    np.testing.assert_allclose(legacy["narrow_avg_lat"],
+                               r.classes["narrow"].avg_lat)
+    np.testing.assert_array_equal(legacy["wide_beats_rx"],
+                                  r.classes["wide"].beats_rx)
+    np.testing.assert_allclose(legacy["wide_eff_bw"],
+                               r.classes["wide"].eff_bw)
+    assert legacy["total_link_moves"] == int(r.total_link_moves)
+
+
+# --------------------------------------------------------------------- #
+# NocSpec -> ChannelPolicy (shared vocabulary with collectives)
+# --------------------------------------------------------------------- #
+def test_channel_policy_from_spec():
+    from repro.core.channels import ChannelPolicy
+    dual = ChannelPolicy.from_spec(NocSpec.narrow_wide())
+    assert [(c.name, c.transport, c.channel) for c in dual.classes] == \
+        [("narrow", "psum", "rsp"), ("wide", "ring", "wide")]
+    single = ChannelPolicy.from_spec(NocSpec.wide_only())
+    assert len({c.channel for c in single.classes}) == 1
+    ms = ChannelPolicy.from_spec(NocSpec.multi_stream(n_wide=2))
+    assert [c.channel for c in ms.classes] == ["rsp", "wide0", "wide1"]
+    assert ms.classes[1].min_bytes < ms.classes[2].min_bytes
