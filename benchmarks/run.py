@@ -133,6 +133,55 @@ def bench_rate_sweep(smoke: bool = False):
     return bw
 
 
+def bench_backend_channels(smoke: bool = False):
+    """Backend x channel-count comparison behind one simulate() surface.
+
+    Times the jnp reference against the Pallas router-arbiter backend
+    on 1-channel (wide-only), 3-channel (paper narrow-wide) and
+    4-channel (2-stream) specs, checks them flit-for-flit equivalent,
+    and records everything into BENCH_noc.json."""
+    from repro.noc import NocSpec, Workload, simulate
+    cycles = 1000 if smoke else 3000
+    n_wide = 12 if smoke else 48
+    specs = [
+        ("1ch", NocSpec.wide_only(4, 4, cycles=cycles),
+         {"narrow": 0.05, "wide": 1.0}, {"narrow": 30, "wide": n_wide}),
+        ("3ch", NocSpec.narrow_wide(4, 4, cycles=cycles),
+         {"narrow": 0.05, "wide": 1.0}, {"narrow": 30, "wide": n_wide}),
+        ("4ch", NocSpec.multi_stream(4, 4, n_wide=2, cycles=cycles),
+         {"narrow": 0.05, "wide0": 1.0, "wide1": 1.0},
+         {"narrow": 30, "wide0": n_wide // 2, "wide1": n_wide // 2}),
+    ]
+    rows = []
+    for tag, spec, rates, counts in specs:
+        wl = Workload.make("fig5", rates=rates, counts=counts,
+                           src=0, dst=15)
+        results = {}
+        for backend in ("jnp", "pallas"):
+            simulate(spec, wl, backend=backend)        # compile
+            m, us = _timed(simulate, spec, wl, backend=backend)
+            results[backend] = (m, us)
+        (mj, usj), (mp, usp) = results["jnp"], results["pallas"]
+        equal = all(
+            np.array_equal(getattr(mj.classes[c], f),
+                           getattr(mp.classes[c], f))
+            for c in mj.classes
+            for f in ("done", "avg_lat", "max_lat", "beats_rx", "eff_bw")
+        ) and all(
+            np.array_equal(mj.channels[ch].link_moves,
+                           mp.channels[ch].link_moves)
+            for ch in mj.channels)
+        lat = float(mj.classes["narrow"].avg_lat[0])
+        name = f"backend_{tag}"
+        print(f"{name},{usj:.0f},jnp={usj:.0f}us pallas={usp:.0f}us "
+              f"equal={equal} narrow_avg={lat:.0f}cyc")
+        _record(name, usj, pallas_us=usp, backends_equal=equal,
+                narrow_avg_cycles=lat, n_channels=len(spec.channels))
+        rows.append((tag, usj, usp, equal))
+    assert all(eq for *_, eq in rows), "backend mismatch!"
+    return rows
+
+
 def bench_table1_links(smoke: bool = False):
     """Table I / section VI-B: link sizing and peak bandwidth."""
     from repro.core.noc_sim import PAPER
@@ -236,6 +285,7 @@ def main() -> None:
     bench_fig5a_latency(args.smoke)
     bench_fig5b_bandwidth(args.smoke)
     bench_rate_sweep(args.smoke)
+    bench_backend_channels(args.smoke)
     bench_straggler_sim(args.smoke)
     bench_channels_ablation(args.smoke)
     wall_s = time.perf_counter() - t0

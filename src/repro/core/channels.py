@@ -16,7 +16,6 @@ bulk; `benchmarks/channels_ablation.py` reproduces the software analogue.
 from __future__ import annotations
 
 import functools
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -141,8 +140,8 @@ class ChannelPolicy:
         (default: 0 for the smallest class, ``wide_flit_bytes`` scaled
         4x per further burst class). ``bucket_bytes="auto"`` picks
         4 MiB buckets for separated topologies but a single serialized
-        schedule when every class shares one channel — matching the
-        deprecated ``single_channel_all_reduce`` ablation exactly."""
+        schedule when every class shares one channel — the paper's
+        wide-only ablation, where smalls stall behind bulk."""
         thresholds = dict(thresholds or {})
         if bucket_bytes == "auto":
             shared = len({spec.channels[spec.rsp_channel(c.name)].name
@@ -166,11 +165,17 @@ class ChannelPolicy:
         return cls(tuple(out), bucket_bytes)
 
 
+def dual_policy(wide_flit_bytes: int = 65536,
+                bucket_bytes: int | None = 4 << 20) -> ChannelPolicy:
+    """The paper's narrow/wide separation with a custom size threshold."""
+    return ChannelPolicy((
+        PolicyClass(NARROW, 0, "psum", "rsp"),
+        PolicyClass(WIDE, wide_flit_bytes, "ring", "wide"),
+    ), bucket_bytes)
+
+
 # default two-class policies mirroring the paper's configurations
-DUAL_POLICY = ChannelPolicy((
-    PolicyClass(NARROW, 0, "psum", "rsp"),
-    PolicyClass(WIDE, 65536, "ring", "wide"),
-))
+DUAL_POLICY = dual_policy()
 SINGLE_POLICY = ChannelPolicy((
     PolicyClass(NARROW, 0, "psum", "wide"),
     PolicyClass(WIDE, 65536, "ring", "wide"),
@@ -259,43 +264,3 @@ def multi_channel_all_reduce(
                     fused_psum(idxs, pc.name)
 
     return jax.tree.unflatten(treedef, out)
-
-
-def dual_channel_all_reduce(
-    tree: Any,
-    axes: Sequence[tuple[str, int]],
-    *,
-    wide_flit_bytes: int = 65536,
-    bucket_bytes: int = 4 << 20,
-    bidir: bool = False,
-    ledger: Ledger | None = None,
-    narrow_dtype=None,
-) -> Any:
-    """DEPRECATED shim: narrow/wide separation as a fixed two-class
-    policy. Use :func:`multi_channel_all_reduce` with a
-    :class:`ChannelPolicy` (e.g. ``ChannelPolicy.from_spec(spec)``)."""
-    warnings.warn(
-        "dual_channel_all_reduce is deprecated; use "
-        "multi_channel_all_reduce(policy=ChannelPolicy.from_spec(spec))",
-        DeprecationWarning, stacklevel=2)
-    policy = ChannelPolicy((
-        PolicyClass(NARROW, 0, "psum", "rsp"),
-        PolicyClass(WIDE, wide_flit_bytes, "ring", "wide"),
-    ), bucket_bytes)
-    return multi_channel_all_reduce(tree, axes, policy=policy, bidir=bidir,
-                                    ledger=ledger)
-
-
-def single_channel_all_reduce(tree: Any, axes: Sequence[tuple[str, int]],
-                              *, bidir: bool = False,
-                              ledger: Ledger | None = None) -> Any:
-    """DEPRECATED shim — ablation baseline: everything rides one wide
-    channel (paper's 'wide-only' configuration in Fig. 5); smalls are
-    packed together with bulk and serialized through the same ring
-    schedule. Use ``multi_channel_all_reduce(policy=SINGLE_POLICY)``."""
-    warnings.warn(
-        "single_channel_all_reduce is deprecated; use "
-        "multi_channel_all_reduce(policy=SINGLE_POLICY)",
-        DeprecationWarning, stacklevel=2)
-    return multi_channel_all_reduce(tree, axes, policy=SINGLE_POLICY,
-                                    bidir=bidir, ledger=ledger)

@@ -1,12 +1,12 @@
-"""Cycle-level NoC building blocks + legacy simulator surface.
+"""Cycle-level NoC building blocks.
 
-The router micro-architecture (``router.py``) and analytic paper model
-(``energy.py``) live here; the experiment surface moved to the
-declarative :mod:`repro.noc` API (``NocSpec``/``Workload``/``simulate``
-with vmapped sweeps). ``SimConfig``/``run_sim`` and the schedule
-generators in ``traffic.py`` remain as deprecation shims over it.
+The router micro-architecture (``router.py``: table-driven fabric step
++ reference arbiter) and the analytic paper model (``energy.py``) live
+here; the experiment surface is the declarative :mod:`repro.noc` API
+(``NocSpec``/``Workload``/``simulate`` with vmapped sweeps and
+pluggable backends).  The seed's legacy config/runner shims and ad-hoc
+schedule generators were migrated onto that API and deleted.
 """
 from .energy import PAPER, PAPER_CLAIMS, FlooNoCModel  # noqa: F401
-from .mesh_sim import SimConfig, run_sim  # noqa: F401
-from .router import NetState, init_state, network_step, xy_route  # noqa: F401
-from .traffic import fig5_traffic, uniform_random  # noqa: F401
+from .router import (NetState, arbiter_jnp, init_fabric_state,  # noqa: F401
+                     make_fabric_step)

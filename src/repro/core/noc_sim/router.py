@@ -7,39 +7,44 @@ Faithful to §III-C / §V of the paper:
   configuration the paper uses to close timing on the long physical routing
   channels (zero-load: 4 traversals x 2 cycles = 8 router cycles per
   round trip),
-* XY dimension-ordered routing on a (non-torus) mesh,
-* round-robin output arbitration,
+* deterministic table-driven routing — the fabric is described by three
+  static tables (neighbor / opposite-port / routing, see
+  ``repro.noc.topology``), so one step function covers the paper's XY
+  mesh, the torus wrap-around variant, and >5-port express-link routers,
+* round-robin output arbitration with wormhole burst locking,
 * no virtual channels — each physical link (narrow_req / narrow_rsp / wide)
   is its own complete network instance,
 * single-flit packets (header bits travel on parallel lines, no
   header/tail flits).
 
-State layout (R = nx*ny routers, P = 5 ports [N,E,S,W,Local], D fifo depth,
-F flit fields):
+State layout (R routers, P ports [directions..., Local last], D fifo
+depth, F flit fields):
   fifo    : (R, P, D, F) int32   input FIFOs, slot 0 = head
   count   : (R, P)       int32   input occupancy
   rr_ptr  : (R, P)       int32   round-robin pointer per OUT port
   oreg    : (R, P, F)    int32   output elastic buffer
   oreg_v  : (R, P)       bool
+  lock_in : (R, P)       int32   wormhole lock (input idx holding the
+                                 output, or -1)
 
-Flit fields: [dest_router, src_router, inject_time, kind, txn_id, beat]
-The per-cycle update (`network_step`) is the hot loop — mirrored by the
-Pallas kernel in ``kernels/noc_router.py``.
+Flit fields: [dest_router, src_router, inject_time, kind, txn_id, beat].
+The per-cycle update (`make_fabric_step`) is the hot loop; its phase-B
+arbitration is pluggable (``arbiter=``) so the Pallas kernel in
+``kernels/noc_router.py`` can replace the jnp reference
+(:func:`arbiter_jnp`) behind the same engine — see
+``repro.noc.backends``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-N_PORTS = 5
-PORT_N, PORT_E, PORT_S, PORT_W, PORT_L = range(5)
 F_DEST, F_SRC, F_TIME, F_KIND, F_TXN, F_BEAT = range(6)
 N_FIELDS = 6
-NO_PORT = 9
+NO_PORT = 99
 
 
 class NetState(NamedTuple):
@@ -51,151 +56,150 @@ class NetState(NamedTuple):
     lock_in: jax.Array  # (R, P) wormhole: input port holding each output (-1)
 
 
-def init_state(nx: int, ny: int, depth: int = 2) -> NetState:
-    R = nx * ny
+def init_fabric_state(R: int, P: int, depth: int = 2) -> NetState:
     return NetState(
-        fifo=jnp.zeros((R, N_PORTS, depth, N_FIELDS), jnp.int32),
-        count=jnp.zeros((R, N_PORTS), jnp.int32),
-        rr_ptr=jnp.zeros((R, N_PORTS), jnp.int32),
-        oreg=jnp.zeros((R, N_PORTS, N_FIELDS), jnp.int32),
-        oreg_v=jnp.zeros((R, N_PORTS), jnp.bool_),
-        lock_in=jnp.full((R, N_PORTS), -1, jnp.int32),
+        fifo=jnp.zeros((R, P, depth, N_FIELDS), jnp.int32),
+        count=jnp.zeros((R, P), jnp.int32),
+        rr_ptr=jnp.zeros((R, P), jnp.int32),
+        oreg=jnp.zeros((R, P, N_FIELDS), jnp.int32),
+        oreg_v=jnp.zeros((R, P), jnp.bool_),
+        lock_in=jnp.full((R, P), -1, jnp.int32),
     )
 
 
-def _geometry(nx: int, ny: int):
-    """Static neighbor tables: nbr[r, out_port] = neighbor router (or -1),
-    opp[out_port] = neighbor's input port."""
-    R = nx * ny
-    nbr = np.full((R, N_PORTS), -1, np.int64)
-    for r in range(R):
-        x, y = r % nx, r // nx
-        if y > 0:
-            nbr[r, PORT_N] = r - nx
-        if x < nx - 1:
-            nbr[r, PORT_E] = r + 1
-        if y < ny - 1:
-            nbr[r, PORT_S] = r + nx
-        if x > 0:
-            nbr[r, PORT_W] = r - 1
-    opp = np.array([PORT_S, PORT_W, PORT_N, PORT_E, PORT_L])
-    return nbr, opp
+def arbiter_jnp(out_port: jax.Array, beat: jax.Array, rr_ptr: jax.Array,
+                oreg_free: jax.Array, lock_in: jax.Array):
+    """Reference phase-B arbitration: round-robin over requesting input
+    heads into free output registers, honoring wormhole locks.
 
-
-def xy_route(dest: jax.Array, r_idx: jax.Array, nx: int) -> jax.Array:
-    """XY dimension-ordered output port for a flit at router r_idx."""
-    x, y = r_idx % nx, r_idx // nx
-    dx, dy = dest % nx, dest // nx
-    return jnp.where(
-        dx > x, PORT_E,
-        jnp.where(dx < x, PORT_W,
-                  jnp.where(dy > y, PORT_S,
-                            jnp.where(dy < y, PORT_N, PORT_L))))
-
-
-def network_step(state: NetState, inject_valid: jax.Array,
-                 inject_flit: jax.Array, nx: int, ny: int):
-    """One cycle of one network (two-cycle router: input FIFO -> output
-    register -> link).
-
-    inject_valid: (R,) bool — NI wants to push a flit into its Local port.
-    inject_flit:  (R, F) int32.
-    Returns (new_state, inject_ok (R,), deliver_valid (R,),
-             deliver_flit (R, F), link_moves scalar).
+    ``out_port[r, i]`` is the routed output port of input head ``i``
+    (``NO_PORT`` when the head slot is empty); ``beat`` its remaining
+    burst beats.  Returns ``(winner, pop, new_ptr, new_lock)`` with
+    ``winner[r, o]`` the granted input per output (-1: none) and
+    ``pop[r, i]`` bool.  The round-robin pointer only advances on
+    *unlocked* grants — a wormhole-held output keeps its arbitration
+    state, exactly like the engine always behaved (the seed Pallas
+    kernel advanced it on locked grants too; that parity bug is fixed
+    on both sides).
     """
-    R = nx * ny
-    D = state.fifo.shape[2]
-    nbr_np, opp_np = _geometry(nx, ny)
-    nbr = jnp.asarray(nbr_np)
+    R, P = out_port.shape
+    o_ids = jnp.arange(P)[None, None, :]
+    i_ids = jnp.arange(P)[None, :, None]
+    req = (out_port[:, :, None] == o_ids) & oreg_free.astype(bool)[:, None, :]
+    locked = lock_in[:, None, :] >= 0
+    req &= (~locked) | (i_ids == lock_in[:, None, :])
 
-    heads = state.fifo[:, :, 0, :]                    # (R, P, F)
-    head_valid = state.count > 0                      # (R, P)
+    prio = (i_ids - rr_ptr[:, None, :]) % P
+    score = jnp.where(req, prio, NO_PORT)
+    best = jnp.min(score, axis=1)                     # (R, P_out)
+    granted = best < NO_PORT
+    is_best = (score == best[:, None, :]) & req
+    winner = jnp.argmax(is_best.astype(jnp.int32), axis=1)
+    winner = jnp.where(granted, winner, -1)
+
+    pop = jnp.any((i_ids == winner[:, None, :]) & granted[:, None, :], axis=2)
+    new_ptr = jnp.where(granted & (lock_in < 0), (winner + 1) % P, rr_ptr)
+
+    w_beat = jnp.sum(jnp.where((i_ids == winner[:, None, :])
+                               & granted[:, None, :], beat[:, :, None], 0),
+                     axis=1)
+    new_lock = jnp.where(granted & (w_beat > 1), winner,
+                         jnp.where(granted, -1, lock_in))
+    return winner, pop, new_ptr, new_lock
+
+
+def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
+                     arbiter=None):
+    """Build the one-cycle update for a fabric described by static
+    tables (see ``repro.noc.topology``): ``nbr[r, p]`` neighbor router
+    per output port (-1 none, local port last), ``opp[r, p]`` the input
+    port the link feeds, ``route[r, d]`` the routed output port.
+
+    ``arbiter`` replaces the phase-B arbitration (same signature and
+    semantics as :func:`arbiter_jnp`) — the hook the Pallas backend
+    plugs into.
+
+    Returns ``step(state, inject_valid, inject_flit) -> (new_state,
+    inject_ok (R,), deliver_valid (R,), deliver_flit (R, F),
+    link_moves scalar)``.
+    """
+    R, P = nbr.shape
+    PORT_L = P - 1
+    nbr_j = jnp.asarray(nbr, jnp.int32)
+    opp_j = jnp.asarray(opp, jnp.int32)
+    route_j = jnp.asarray(route, jnp.int32)
+    arb = arbiter_jnp if arbiter is None else arbiter
     r_idx = jnp.arange(R)
 
-    # ---------------- phase A: drain output registers -----------------------
-    # downstream input-FIFO occupancy (registered, cycle start)
-    nbr_count = state.count[jnp.clip(nbr, 0, R - 1)]              # (R,P,P_in)
-    ds_count = jnp.stack(
-        [nbr_count[:, o, opp_np[o]] for o in range(N_PORTS)], axis=1)
-    can_drain = jnp.where(jnp.arange(N_PORTS)[None, :] == PORT_L,
-                          True,                     # Local: NI always sinks
-                          (nbr >= 0) & (ds_count < D))            # (R, P)
-    drain = state.oreg_v & can_drain
+    def step(state: NetState, inject_valid: jax.Array,
+             inject_flit: jax.Array):
+        D = state.fifo.shape[2]
+        heads = state.fifo[:, :, 0, :]                    # (R, P, F)
+        head_valid = state.count > 0                      # (R, P)
 
-    deliver_valid = drain[:, PORT_L]
-    deliver_flit = state.oreg[:, PORT_L, :]
+        # ---------------- phase A: drain output registers -------------------
+        # downstream input-FIFO occupancy (registered, cycle start)
+        ds_count = state.count[jnp.clip(nbr_j, 0, R - 1), opp_j]   # (R, P)
+        can_drain = jnp.where(jnp.arange(P)[None, :] == PORT_L,
+                              True,                     # Local: NI always sinks
+                              (nbr_j >= 0) & (ds_count < D))
+        drain = state.oreg_v & can_drain
 
-    # pushes into neighbor input FIFOs (one per input port max — one link)
-    recv_valid = jnp.zeros((R, N_PORTS), jnp.bool_)
-    recv_flit = jnp.zeros((R, N_PORTS, N_FIELDS), jnp.int32)
-    tgt_r = jnp.where(nbr >= 0, nbr, 0)
-    for o in range(N_PORTS - 1):   # N,E,S,W
-        v = drain[:, o]
-        recv_valid = recv_valid.at[tgt_r[:, o], opp_np[o]].max(v)
-        recv_flit = recv_flit.at[tgt_r[:, o], opp_np[o]].add(
-            jnp.where(v[:, None], state.oreg[:, o, :], 0))
+        deliver_valid = drain[:, PORT_L]
+        deliver_flit = state.oreg[:, PORT_L, :]
 
-    # NI injection into Local input port (cycle-start occupancy)
-    local_ready = state.count[:, PORT_L] < D
-    inj_ok = inject_valid & local_ready
-    recv_valid = recv_valid.at[:, PORT_L].set(inj_ok)
-    recv_flit = recv_flit.at[:, PORT_L].set(
-        jnp.where(inj_ok[:, None], inject_flit, 0))
+        # pushes into neighbor input FIFOs (one per input port max — one link)
+        recv_valid = jnp.zeros((R, P), jnp.bool_)
+        recv_flit = jnp.zeros((R, P, N_FIELDS), jnp.int32)
+        tgt_r = jnp.where(nbr_j >= 0, nbr_j, 0)
+        for o in range(P - 1):
+            v = drain[:, o]
+            recv_valid = recv_valid.at[tgt_r[:, o], opp_j[:, o]].max(v)
+            recv_flit = recv_flit.at[tgt_r[:, o], opp_j[:, o]].add(
+                jnp.where(v[:, None], state.oreg[:, o, :], 0))
 
-    # ---------------- phase B: arbitration into freed oregs -----------------
-    # Wormhole: a multi-flit packet (burst) locks its output port from the
-    # first beat until the tail beat (F_BEAT <= 1) has passed, so burst
-    # beats are never interleaved — exactly the paper's burst semantics.
-    oreg_free = (~state.oreg_v) | drain                           # (R, P)
-    out_port = xy_route(heads[:, :, F_DEST], r_idx[:, None], nx)  # (R, P_in)
-    out_port = jnp.where(head_valid, out_port, NO_PORT)
-    req = (out_port[:, :, None] == jnp.arange(N_PORTS)[None, None, :])
-    req = req & oreg_free[:, None, :]
+        # NI injection into Local input port (cycle-start occupancy)
+        local_ready = state.count[:, PORT_L] < D
+        inj_ok = inject_valid & local_ready
+        recv_valid = recv_valid.at[:, PORT_L].set(inj_ok)
+        recv_flit = recv_flit.at[:, PORT_L].set(
+            jnp.where(inj_ok[:, None], inject_flit, 0))
 
-    locked = state.lock_in >= 0                                   # (R, P_out)
-    lock_hot = jax.nn.one_hot(jnp.clip(state.lock_in, 0, N_PORTS - 1),
-                              N_PORTS, axis=1, dtype=jnp.bool_)   # (R,Pi,Po)
-    # when locked: only the locked input may win; others masked off
-    req = req & (~locked[:, None, :] | lock_hot)
+        # ---------------- phase B: arbitration into freed oregs -------------
+        # Wormhole: a multi-flit packet (burst) locks its output port from
+        # the first beat until the tail beat (F_BEAT <= 1) has passed, so
+        # burst beats are never interleaved — the paper's burst semantics.
+        oreg_free = (~state.oreg_v) | drain                        # (R, P)
+        out_port = route_j[r_idx[:, None], heads[:, :, F_DEST]]    # (R, P_in)
+        out_port = jnp.where(head_valid, out_port, NO_PORT)
+        winner, pop, new_ptr, new_lock = arb(
+            out_port, heads[:, :, F_BEAT], state.rr_ptr, oreg_free,
+            state.lock_in)
 
-    in_idx = jnp.arange(N_PORTS)
-    prio = (in_idx[None, :, None] - state.rr_ptr[:, None, :]) % N_PORTS
-    score = jnp.where(req, prio, 99)
-    winner = jnp.argmin(score, axis=1)                            # (R, P_out)
-    any_grant = jnp.min(score, axis=1) < 99
-    grant = (jax.nn.one_hot(winner, N_PORTS, axis=1, dtype=jnp.bool_)
-             & any_grant[:, None, :])                             # (R,Pi,Po)
-    new_ptr = jnp.where(any_grant & ~locked, (winner + 1) % N_PORTS,
-                        state.rr_ptr)
+        any_grant = winner >= 0
+        flit_to_oreg = heads[r_idx[:, None], jnp.clip(winner, 0)]  # (R, P, F)
+        new_oreg_v = (state.oreg_v & ~drain) | any_grant
+        new_oreg = jnp.where(any_grant[:, :, None], flit_to_oreg, state.oreg)
 
-    pop = jnp.any(grant, axis=2)                                  # (R, P_in)
-    flit_to_oreg = jnp.einsum("rio,rif->rof", grant.astype(jnp.int32), heads)
+        # ---------------- input FIFO update: pop then push ------------------
+        shifted = jnp.concatenate(
+            [state.fifo[:, :, 1:, :],
+             jnp.zeros_like(state.fifo[:, :, :1, :])], axis=2)
+        fifo = jnp.where(pop[:, :, None, None], shifted, state.fifo)
+        count = state.count - pop.astype(jnp.int32)
 
-    # lock update: granted non-tail flit locks; granted tail releases
-    granted_beat = flit_to_oreg[:, :, F_BEAT]                     # (R, P_out)
-    is_tail = granted_beat <= 1
-    new_lock = jnp.where(any_grant & ~is_tail, winner,
-                         jnp.where(any_grant & is_tail, -1, state.lock_in))
+        slot = jnp.clip(count, 0, D - 1)
+        write = recv_valid & (count < D)
+        onehot_slot = jax.nn.one_hot(slot, D, dtype=jnp.bool_)     # (R,P,D)
+        sel = write[:, :, None] & onehot_slot
+        fifo = jnp.where(sel[..., None], recv_flit[:, :, None, :], fifo)
+        count = count + write.astype(jnp.int32)
 
-    new_oreg_v = (state.oreg_v & ~drain) | any_grant
-    new_oreg = jnp.where(any_grant[:, :, None], flit_to_oreg, state.oreg)
+        new_state = NetState(fifo=fifo, count=count, rr_ptr=new_ptr,
+                             oreg=new_oreg, oreg_v=new_oreg_v,
+                             lock_in=new_lock)
+        link_moves = jnp.sum(drain.astype(jnp.int32)
+                             * (jnp.arange(P)[None, :] != PORT_L))
+        return new_state, inj_ok, deliver_valid, deliver_flit, link_moves
 
-    # ---------------- input FIFO update: pop then push ----------------------
-    shifted = jnp.concatenate(
-        [state.fifo[:, :, 1:, :], jnp.zeros_like(state.fifo[:, :, :1, :])],
-        axis=2)
-    fifo = jnp.where(pop[:, :, None, None], shifted, state.fifo)
-    count = state.count - pop.astype(jnp.int32)
-
-    slot = jnp.clip(count, 0, D - 1)
-    write = recv_valid & (count < D)
-    onehot_slot = jax.nn.one_hot(slot, D, dtype=jnp.bool_)        # (R,P,D)
-    sel = write[:, :, None] & onehot_slot
-    fifo = jnp.where(sel[..., None], recv_flit[:, :, None, :], fifo)
-    count = count + write.astype(jnp.int32)
-
-    new_state = NetState(fifo=fifo, count=count, rr_ptr=new_ptr,
-                         oreg=new_oreg, oreg_v=new_oreg_v, lock_in=new_lock)
-    link_moves = jnp.sum(drain.astype(jnp.int32)
-                         * (jnp.arange(N_PORTS)[None, :] != PORT_L))
-    return new_state, inj_ok, deliver_valid, deliver_flit, link_moves
+    return step

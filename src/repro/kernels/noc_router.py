@@ -1,24 +1,32 @@
 """Pallas kernel for the NoC router's combinational core (paper's hot spot).
 
-One simulation cycle of the router pipeline stage — XY route compute,
-round-robin arbitration into free output registers, pop/grant masks — for a
-TILE of routers held in VMEM. This is the integer/boolean analogue of the
-paper's 5x5 single-cycle router: route compute + RR arbiter + crossbar,
-evaluated for all routers in parallel (the mesh_sim's `network_step` is the
-jnp oracle; neighbor exchange stays outside the kernel, as links do outside
-the router).
+One simulation cycle of the router pipeline stage — round-robin
+arbitration of routed input heads into free output registers with
+wormhole burst locking — for a TILE of routers held in VMEM.  This is
+the integer/boolean analogue of the paper's single-cycle router
+arbiter + crossbar, evaluated for all routers in parallel.
 
-Layout (R routers padded to a multiple of block_r, P=5 ports, F=6 fields):
-  heads      (R, P, F) int32   input-FIFO heads
-  head_valid (R, P)    int32   0/1
-  rr_ptr     (R, P)    int32   per-output round-robin pointer
-  oreg_free  (R, P)    int32   output register accepts this cycle
-  lock_in    (R, P)    int32   wormhole lock (input idx or -1)
+Route compute happens *outside* the kernel (a static routing-table
+gather, see ``repro.noc.topology``), so the same kernel serves the XY
+mesh, the torus, and >5-port express-link routers: the port count is a
+static parameter.  ``repro.core.noc_sim.router.arbiter_jnp`` is the jnp
+oracle; ``repro.noc.backends`` plugs this kernel into the cycle engine
+as ``backend="pallas"``, equivalence-tested flit-for-flit against
+``backend="jnp"``.
+
+Layout (R routers, P ports, blocked over R):
+  out_port  (R, P) int32   routed output port per input head (99: empty)
+  beat      (R, P) int32   remaining burst beats per input head
+  rr_ptr    (R, P) int32   per-output round-robin pointer
+  oreg_free (R, P) int32   output register accepts this cycle
+  lock_in   (R, P) int32   wormhole lock (input idx or -1)
 outputs:
-  grant_in   (R, P)    int32   which input each output granted (-1 none)
-  pop        (R, P)    int32   input head consumed
-  new_ptr    (R, P)    int32
-  new_lock   (R, P)    int32
+  winner    (R, P) int32   granted input per output (-1: none)
+  pop       (R, P) int32   input head consumed
+  new_ptr   (R, P) int32   (advances only on unlocked grants — matching
+                           the engine; the seed kernel advanced it on
+                           locked grants too, breaking parity)
+  new_lock  (R, P) int32
 """
 from __future__ import annotations
 
@@ -27,120 +35,93 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-N_PORTS = 5
-F_DEST, F_SRC, F_TIME, F_KIND, F_TXN, F_BEAT = range(6)
 NO = 99
 
 
-def _kernel(heads_ref, valid_ref, ptr_ref, free_ref, lock_ref,
-            grant_ref, pop_ref, nptr_ref, nlock_ref, *, nx: int, block_r: int,
-            r0_stride: int):
-    rblk = pl.program_id(0)
-    r_base = rblk * block_r
-
-    dest = heads_ref[:, :, F_DEST]                    # (bR, P)
-    beat = heads_ref[:, :, F_BEAT]
-    valid = valid_ref[...] > 0
-    r_idx = r_base + jax.lax.broadcasted_iota(jnp.int32, dest.shape, 0)
-
-    # XY dimension-ordered route per input head
-    x, y = r_idx % nx, r_idx // nx
-    dx, dy = dest % nx, dest // nx
-    route = jnp.where(dx > x, 1,
-             jnp.where(dx < x, 3,
-              jnp.where(dy > y, 2, jnp.where(dy < y, 0, 4))))
-    route = jnp.where(valid, route, NO)               # (bR, P_in)
-
+def _kernel(oport_ref, beat_ref, ptr_ref, free_ref, lock_ref,
+            win_ref, pop_ref, nptr_ref, nlock_ref, *, n_ports: int,
+            block_r: int):
+    P = n_ports
+    out_port = oport_ref[...]                         # (bR, P)
+    beat = beat_ref[...]
     ptr = ptr_ref[...]
     free = free_ref[...] > 0
     lock = lock_ref[...]
 
     # request[r, i, o] with wormhole lock masking
-    o_ids = jax.lax.broadcasted_iota(jnp.int32, (block_r, N_PORTS, N_PORTS), 2)
-    i_ids = jax.lax.broadcasted_iota(jnp.int32, (block_r, N_PORTS, N_PORTS), 1)
-    req = (route[:, :, None] == o_ids) & free[:, None, :]
+    o_ids = jax.lax.broadcasted_iota(jnp.int32, (block_r, P, P), 2)
+    i_ids = jax.lax.broadcasted_iota(jnp.int32, (block_r, P, P), 1)
+    req = (out_port[:, :, None] == o_ids) & free[:, None, :]
     locked = lock[:, None, :] >= 0
     req &= (~locked) | (i_ids == lock[:, None, :])
 
-    prio = (i_ids - ptr[:, None, :]) % N_PORTS
+    prio = (i_ids - ptr[:, None, :]) % P
     score = jnp.where(req, prio, NO)
     best = jnp.min(score, axis=1)                     # (bR, P_out)
     granted = best < NO
-    # winner = first input matching best score
+    # winner = first input matching best score (scores are distinct)
     is_best = (score == best[:, None, :]) & req
     winner = jnp.argmax(is_best.astype(jnp.int32), axis=1)
     winner = jnp.where(granted, winner, -1)
 
-    grant_ref[...] = winner
+    win_ref[...] = winner
     pop = jnp.any((i_ids == winner[:, None, :]) & granted[:, None, :], axis=2)
     pop_ref[...] = pop.astype(jnp.int32)
-    nptr_ref[...] = jnp.where(granted, (winner + 1) % N_PORTS, ptr)
+    # rr pointer holds while an output is wormhole-locked
+    nptr_ref[...] = jnp.where(granted & (lock < 0), (winner + 1) % P, ptr)
 
     # lock update from granted flit's beat field
     w_beat = jnp.sum(jnp.where((i_ids == winner[:, None, :])
                                & granted[:, None, :],
                                beat[:, :, None], 0), axis=1)
-    is_tail = w_beat <= 1
-    nlock_ref[...] = jnp.where(granted & ~is_tail, winner,
-                               jnp.where(granted & is_tail, -1, lock))
+    nlock_ref[...] = jnp.where(granted & (w_beat > 1), winner,
+                               jnp.where(granted, -1, lock))
 
 
-def router_arbiter_pallas(heads, head_valid, rr_ptr, oreg_free, lock_in,
-                          *, nx: int, block_r: int = 8, interpret=False):
-    R = heads.shape[0]
-    assert R % block_r == 0 or R < block_r
-    block_r = min(block_r, R)
-    grid = (pl.cdiv(R, block_r),)
+def _pick_block(R: int, block_r: int) -> int:
+    """Largest block size <= block_r that divides R (R is never padded:
+    a partial tile would arbitrate garbage head state)."""
+    b = min(block_r, R)
+    while R % b:
+        b -= 1
+    return b
 
-    kernel = functools.partial(_kernel, nx=nx, block_r=block_r, r0_stride=0)
-    specs2 = pl.BlockSpec((block_r, N_PORTS), lambda i: (i, 0))
+
+def router_arbiter_pallas(out_port, beat, rr_ptr, oreg_free, lock_in,
+                          *, block_r: int = 8, interpret: bool | None = None):
+    """Phase-B arbitration for all routers; same contract as
+    :func:`repro.core.noc_sim.router.arbiter_jnp` (``oreg_free`` may be
+    bool or int mask; ``pop`` comes back as int32 0/1).
+
+    ``interpret=None`` auto-selects interpreter mode off-TPU.
+    """
+    R, P = out_port.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_r = _pick_block(R, block_r)
+    grid = (R // block_r,)
+
+    kernel = functools.partial(_kernel, n_ports=P, block_r=block_r)
+    spec = pl.BlockSpec((block_r, P), lambda i: (i, 0))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_r, N_PORTS, 6), lambda i: (i, 0, 0)),
-            specs2, specs2, specs2, specs2,
-        ],
-        out_specs=[specs2, specs2, specs2, specs2],
-        out_shape=[jax.ShapeDtypeStruct((R, N_PORTS), jnp.int32)] * 4,
+        in_specs=[spec] * 5,
+        out_specs=[spec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((R, P), jnp.int32)] * 4,
         interpret=interpret,
-    )(heads, head_valid.astype(jnp.int32), rr_ptr,
-      oreg_free.astype(jnp.int32), lock_in)
+    )(out_port.astype(jnp.int32), beat.astype(jnp.int32),
+      rr_ptr.astype(jnp.int32), oreg_free.astype(jnp.int32),
+      lock_in.astype(jnp.int32))
 
 
-def router_arbiter_ref(heads, head_valid, rr_ptr, oreg_free, lock_in, *, nx):
-    """jnp oracle mirroring router.network_step's phase-B arbitration."""
-    R = heads.shape[0]
-    dest = heads[:, :, F_DEST]
-    beat = heads[:, :, F_BEAT]
-    valid = head_valid.astype(bool)
-    r_idx = jnp.arange(R)[:, None]
-    x, y = r_idx % nx, r_idx // nx
-    dx, dy = dest % nx, dest // nx
-    route = jnp.where(dx > x, 1,
-             jnp.where(dx < x, 3,
-              jnp.where(dy > y, 2, jnp.where(dy < y, 0, 4))))
-    route = jnp.where(valid, route, NO)
-    o_ids = jnp.arange(N_PORTS)[None, None, :]
-    i_ids = jnp.arange(N_PORTS)[None, :, None]
-    req = (route[:, :, None] == o_ids) & oreg_free.astype(bool)[:, None, :]
-    locked = lock_in[:, None, :] >= 0
-    req &= (~locked) | (i_ids == lock_in[:, None, :])
-    prio = (i_ids - rr_ptr[:, None, :]) % N_PORTS
-    score = jnp.where(req, prio, NO)
-    best = jnp.min(score, axis=1)
-    granted = best < NO
-    is_best = (score == best[:, None, :]) & req
-    winner = jnp.argmax(is_best.astype(jnp.int32), axis=1)
-    winner = jnp.where(granted, winner, -1)
-    pop = jnp.any((i_ids == winner[:, None, :]) & granted[:, None, :], axis=2)
-    nptr = jnp.where(granted, (winner + 1) % N_PORTS, rr_ptr)
-    w_beat = jnp.sum(jnp.where((i_ids == winner[:, None, :])
-                               & granted[:, None, :], beat[:, :, None], 0),
-                     axis=1)
-    is_tail = w_beat <= 1
-    nlock = jnp.where(granted & ~is_tail, winner,
-                      jnp.where(granted & is_tail, -1, lock_in))
-    return winner, pop.astype(jnp.int32), nptr, nlock
+def router_arbiter_ref(out_port, beat, rr_ptr, oreg_free, lock_in):
+    """jnp oracle — the engine's own arbitration, int-typed like the
+    kernel outputs."""
+    from repro.core.noc_sim.router import arbiter_jnp
+    winner, pop, new_ptr, new_lock = arbiter_jnp(
+        jnp.asarray(out_port, jnp.int32), jnp.asarray(beat, jnp.int32),
+        jnp.asarray(rr_ptr, jnp.int32), jnp.asarray(oreg_free),
+        jnp.asarray(lock_in, jnp.int32))
+    return winner, pop.astype(jnp.int32), new_ptr, new_lock

@@ -1,23 +1,29 @@
 """repro.noc — declarative NoC experiment API.
 
-    from repro.noc import NocSpec, Workload, simulate
+    from repro.noc import Mesh, Torus, NocSpec, Workload, simulate
 
     spec = NocSpec.narrow_wide(nx=4, ny=4, cycles=8000)
     wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
                        counts={"narrow": 100, "wide": 200}, bidir=True)
-    result = simulate(spec, wl)
+    result = simulate(spec, wl)                      # pure-jnp reference
+    result = simulate(spec, wl, backend="pallas")    # Pallas router kernel
     print(result.classes["narrow"].avg_lat)
 
-Specs declare channel topology (any number of physical networks with a
-class->channel map); workloads declare typed traffic patterns; sweeps
-vmap over rates/seeds/latencies in one jit (`simulate_batch`, `sweep`).
-The legacy ``repro.core.noc_sim.SimConfig``/``run_sim`` names remain as
-deprecation shims over this API.
+Specs declare a first-class topology (``Mesh(nx, ny)``, ``Torus(nx,
+ny)``, ``Mesh(nx, ny, express=(2,))`` for >5-port express routers) and
+channel layout (any number of physical networks with a class->channel
+map); workloads declare typed traffic patterns; sweeps vmap over
+rates/seeds/latencies in one jit (``simulate_batch``, ``sweep``).  The
+router hot loop is a pluggable backend (``backends.list_backends()``)
+behind the identical surface — every backend is flit-for-flit
+equivalent.
 """
 from .api import (simulate, simulate_batch, simulate_schedules,  # noqa: F401
                   stack_schedules, sweep)
-from .engine import build_topology, compiled_sim  # noqa: F401
+from .backends import (get_backend, list_backends,  # noqa: F401
+                       register_backend)
+from .engine import build_channel_plan, compiled_sim  # noqa: F401
 from .result import ChannelStats, ClassStats, SimResult  # noqa: F401
 from .spec import NocSpec, PhysicalChannel, TrafficClass  # noqa: F401
-from .workload import (PATTERNS, Workload, from_legacy_traffic,  # noqa: F401
-                       register_pattern)
+from .topology import Mesh, Topology, Torus, hop_table  # noqa: F401
+from .workload import PATTERNS, Workload, register_pattern  # noqa: F401

@@ -66,33 +66,38 @@ def simulate_schedules(spec: NocSpec,
                        schedules: Mapping[str, tuple[np.ndarray, np.ndarray]],
                        *, service_lat: int | None = None,
                        max_outstanding: Sequence[int] | None = None,
-                       burst_beats: Sequence[int] | None = None
-                       ) -> SimResult:
-    """Run one experiment from raw per-class schedules (the layer the
-    Workload-less legacy shim and custom schedule sources go through)."""
+                       burst_beats: Sequence[int] | None = None,
+                       backend: str = "jnp") -> SimResult:
+    """Run one experiment from raw per-class schedules (the layer custom
+    schedule sources go through)."""
     times, dests = stack_schedules(spec, schedules)
     sl, mo, bb = _dyn_scalars(spec, service_lat, max_outstanding,
                               burst_beats)
-    raw = compiled_sim(spec, times.shape[-1])(times, dests, sl, mo, bb)
+    raw = compiled_sim(spec, times.shape[-1], backend)(times, dests, sl, mo,
+                                                       bb)
     return SimResult.from_raw(spec, raw)
 
 
 def simulate(spec: NocSpec, workload: Workload, *,
              service_lat: int | None = None,
              max_outstanding: Sequence[int] | None = None,
-             burst_beats: Sequence[int] | None = None) -> SimResult:
+             burst_beats: Sequence[int] | None = None,
+             backend: str = "jnp") -> SimResult:
     """Run one experiment; scalar keyword overrides shadow the spec's
-    declared values without recompiling (they are traced operands)."""
+    declared values without recompiling (they are traced operands).
+    ``backend`` picks the router hot-loop implementation ("jnp"
+    reference or the "pallas" arbiter kernel — see
+    :mod:`repro.noc.backends`); results are backend-invariant."""
     return simulate_schedules(spec, workload.schedules(spec),
                               service_lat=service_lat,
                               max_outstanding=max_outstanding,
-                              burst_beats=burst_beats)
+                              burst_beats=burst_beats, backend=backend)
 
 
 def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
                    service_lat: Sequence[int] | int | None = None,
                    max_outstanding=None,
-                   burst_beats=None) -> SimResult:
+                   burst_beats=None, backend: str = "jnp") -> SimResult:
     """Run N operating points in ONE vmapped jit call.
 
     ``workloads`` supplies per-point schedules (rate/seed/pattern
@@ -148,14 +153,15 @@ def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
     bb, bb_ax = per_class_axis(
         burst_beats, [c.burst_beats for c in spec.classes], "burst_beats")
 
-    fn = compiled_sim(spec, T)
+    fn = compiled_sim(spec, T, backend)
     raw = jax.vmap(fn, in_axes=(0, 0, sl_ax, mo_ax, bb_ax))(
         jnp.asarray(times), jnp.asarray(dests), jnp.asarray(sl),
         jnp.asarray(mo), jnp.asarray(bb))
     return SimResult.from_raw(spec, raw)
 
 
-def sweep(points: Sequence[tuple[NocSpec, Workload]]) -> list[SimResult]:
+def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
+          backend: str = "jnp") -> list[SimResult]:
     """Simulate arbitrary (spec, workload) points, vmapping every group
     of points that shares a static spec. Results come back in input
     order, one unbatched SimResult per point."""
@@ -166,9 +172,9 @@ def sweep(points: Sequence[tuple[NocSpec, Workload]]) -> list[SimResult]:
     for spec, idxs in groups.items():
         wls = [points[i][1] for i in idxs]
         if len(idxs) == 1:
-            out[idxs[0]] = simulate(spec, wls[0])
+            out[idxs[0]] = simulate(spec, wls[0], backend=backend)
         else:
-            batched = simulate_batch(spec, wls)
+            batched = simulate_batch(spec, wls, backend=backend)
             for j, i in enumerate(idxs):
                 out[i] = batched.point(j)
     return out  # type: ignore[return-value]

@@ -1,0 +1,85 @@
+"""Pluggable engine backends behind the one ``simulate()`` surface.
+
+A backend turns a :class:`~repro.noc.topology.Topology` into the
+network-level primitives the cycle engine consumes: an ``init(depth)``
+producing a fresh :class:`~repro.core.noc_sim.router.NetState` and a
+``step(state, inject_valid, inject_flit)`` advancing one physical
+network one cycle.  Both built-ins share the table-driven fabric update
+(:func:`~repro.core.noc_sim.router.make_fabric_step`); they differ only
+in who runs the hot phase-B arbitration loop:
+
+* ``"jnp"``    — the pure-jnp reference (:func:`arbiter_jnp`),
+* ``"pallas"`` — the Pallas router-arbiter kernel
+  (``kernels/noc_router.py``), auto-interpreted off-TPU.
+
+Backends are equivalence-tested flit-for-flit on the paper presets
+(``tests/test_noc_api.py -k backend``).  Register custom engines with
+:func:`register_backend`; select one with
+``simulate(spec, wl, backend="pallas")``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.noc_sim.router import (NetState, init_fabric_state,
+                                       make_fabric_step)
+from .topology import Topology
+
+__all__ = ["Network", "BACKENDS", "register_backend", "get_backend",
+           "list_backends"]
+
+
+class Network(NamedTuple):
+    """One physical network instance as the engine sees it."""
+    init: Callable[[int], NetState]      # depth -> fresh state
+    step: Callable                       # (state, inject_valid, flit) -> ...
+
+
+BACKENDS: dict[str, Callable[[Topology], Network]] = {}
+
+
+def register_backend(name: str):
+    """Register ``fn(topology) -> Network`` under ``name``."""
+    def deco(fn):
+        BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def list_backends() -> list[str]:
+    return sorted(BACKENDS)
+
+
+def get_backend(name: str) -> Callable[[Topology], Network]:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; have {list_backends()}") from None
+
+
+def _network(topo: Topology, arbiter=None) -> Network:
+    nbr, opp, route = topo.tables()
+    R, P = nbr.shape
+    return Network(
+        init=lambda depth: init_fabric_state(R, P, depth),
+        step=make_fabric_step(nbr, opp, route, arbiter=arbiter))
+
+
+@register_backend("jnp")
+def _jnp_backend(topo: Topology) -> Network:
+    return _network(topo)
+
+
+@register_backend("pallas")
+def _pallas_backend(topo: Topology) -> Network:
+    from repro.kernels.noc_router import router_arbiter_pallas
+
+    def arbiter(out_port, beat, rr_ptr, oreg_free, lock_in):
+        winner, pop, new_ptr, new_lock = router_arbiter_pallas(
+            out_port, beat, rr_ptr, oreg_free, lock_in)
+        return winner, pop.astype(jnp.bool_), new_ptr, new_lock
+
+    return _network(topo, arbiter=arbiter)

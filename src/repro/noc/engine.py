@@ -24,12 +24,17 @@ cycle-exact with the seed simulator (golden-checked by the test suite).
 NI model (paper §III-A) is unchanged: end-to-end ROB flow control,
 read transactions req -> target NI -> after ``service_lat`` cycles a
 response of ``burst_beats`` beats streams back atomically, in-order
-delivery via deterministic XY routing.
+delivery via deterministic table-driven routing (XY on the mesh,
+minimal-wrap dimension-ordered on the torus, greedy largest-stride on
+express meshes — see ``repro.noc.topology``).
 
-Static structure (mesh dims, channel list, FIFO depths, class->channel
-map, horizon) lives in the spec and keys one jitted simulator; dynamic
-knobs (schedules, service latency, outstanding limits, burst lengths)
-are traced operands so ``jax.vmap`` batches whole sweeps in one jit.
+Static structure (topology, channel list, FIFO depths, class->channel
+map, horizon) lives in the spec and keys one jitted simulator per
+backend; dynamic knobs (schedules, service latency, outstanding limits,
+burst lengths) are traced operands so ``jax.vmap`` batches whole sweeps
+in one jit.  The router hot loop itself is pluggable
+(``repro.noc.backends``: pure-jnp reference vs the Pallas arbiter
+kernel) behind the identical ``simulate()``/``SimResult`` surface.
 """
 from __future__ import annotations
 
@@ -40,8 +45,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.noc_sim.router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME,
-                                       F_TXN, N_FIELDS, init_state,
-                                       network_step)
+                                       F_TXN, N_FIELDS)
+from .backends import get_backend
 from .spec import NocSpec
 
 RESP_Q_CAP = 256
@@ -56,8 +61,10 @@ def rsp_kind(cls_idx: int) -> int:
     return 2 * cls_idx + 1
 
 
-class Topology(NamedTuple):
-    """Static routing of flows onto channels, derived from a NocSpec."""
+class ChannelPlan(NamedTuple):
+    """Static routing of flows onto channels, derived from a NocSpec
+    (the *logical* half of the fabric; the physical half is the spec's
+    :class:`~repro.noc.topology.Topology`)."""
     n_cls: int
     n_ch: int
     n_q: int
@@ -66,7 +73,7 @@ class Topology(NamedTuple):
     queues_on: tuple[tuple[int, ...], ...]  # channel -> rsp queue ids
 
 
-def build_topology(spec: NocSpec) -> Topology:
+def build_channel_plan(spec: NocSpec) -> ChannelPlan:
     n_cls, n_ch = len(spec.classes), len(spec.channels)
     # queues: one per distinct response channel, in first-appearance order
     rsp_ch_of_q: list[int] = []
@@ -86,8 +93,8 @@ def build_topology(spec: NocSpec) -> Topology:
     queues_on = tuple(
         tuple(q for q, ch in enumerate(rsp_ch_of_q) if ch == c)
         for c in range(n_ch))
-    return Topology(n_cls, n_ch, len(rsp_ch_of_q), tuple(queue_of_class),
-                    tuple(reqs_on), queues_on)
+    return ChannelPlan(n_cls, n_ch, len(rsp_ch_of_q),
+                       tuple(queue_of_class), tuple(reqs_on), queues_on)
 
 
 class NIState(NamedTuple):
@@ -120,7 +127,7 @@ class SimState(NamedTuple):
     moves: jax.Array        # (n_ch,) link traversals per channel
 
 
-def init_ni(R: int, topo: Topology) -> NIState:
+def init_ni(R: int, topo: ChannelPlan) -> NIState:
     zc = jnp.zeros((R, topo.n_cls), jnp.int32)
     zq = jnp.zeros((R, topo.n_q), jnp.int32)
     zqc = jnp.zeros((R, topo.n_q, RESP_Q_CAP), jnp.int32)
@@ -183,11 +190,12 @@ def _q_sent(ni: NIState, q: int, sent):
     )
 
 
-def make_step(spec: NocSpec, topo: Topology, T: int):
+def make_step(spec: NocSpec, topo: ChannelPlan, T: int, net_step):
     """Build the per-cycle transition. Dynamic operands arrive via the
-    carried closure-free ``dyn`` dict (schedules + scalar knobs)."""
+    carried closure-free ``dyn`` dict (schedules + scalar knobs);
+    ``net_step`` is the backend's one-network one-cycle update
+    (:class:`repro.noc.backends.Network`)."""
     R = spec.n_routers
-    nx, ny = spec.nx, spec.ny
     rows = jnp.arange(R)
 
     def mk_flit(valid, dest, src, time, kind, txn, beat):
@@ -223,17 +231,16 @@ def make_step(spec: NocSpec, topo: Topology, T: int):
         for c in range(topo.n_ch):
             reqs, qs = topo.reqs_on[c], topo.queues_on[c]
             if not reqs and not qs:          # idle channel: still steps
-                net, _, dv, df, lm = network_step(
+                net, _, dv, df, lm = net_step(
                     state.nets[c], jnp.zeros((R,), jnp.bool_),
-                    jnp.zeros((R, N_FIELDS), jnp.int32), nx, ny)
+                    jnp.zeros((R, N_FIELDS), jnp.int32))
             elif not reqs and len(qs) == 1:
                 # dedicated response channel: stream the queue head
                 q = qs[0]
                 h = heads[q]
                 f = mk_flit(h["ready"], h["dest"], rows, h["time0"],
                             h["kind"], h["txn"], h["beats"])
-                net, ok, dv, df, lm = network_step(state.nets[c],
-                                                   h["ready"], f, nx, ny)
+                net, ok, dv, df, lm = net_step(state.nets[c], h["ready"], f)
                 sent[q] = ok & h["ready"]
             elif reqs and not qs:
                 # request-only channel: static priority, smalls first
@@ -249,8 +256,7 @@ def make_step(spec: NocSpec, topo: Topology, T: int):
                     kind = jnp.where(s, req_kind(i), kind)
                     txn = jnp.where(s, ni.ptr[:, i], txn)
                 f = mk_flit(taken, dest, rows, now, kind, txn, 1)
-                net, ok, dv, df, lm = network_step(state.nets[c], taken, f,
-                                                   nx, ny)
+                net, ok, dv, df, lm = net_step(state.nets[c], taken, f)
                 for i, s in sel:
                     injected[i] = ok & s
             else:
@@ -298,8 +304,7 @@ def make_step(spec: NocSpec, topo: Topology, T: int):
                         txn = jnp.where(s, ni.ptr[:, idx], txn)
                         beat = jnp.where(s, 1, beat)
                 f = mk_flit(valid, dest, rows, time, kind, txn, beat)
-                net, ok, dv, df, lm = network_step(state.nets[c], valid, f,
-                                                   nx, ny)
+                net, ok, dv, df, lm = net_step(state.nets[c], valid, f)
                 for (tag, idx), s in zip(cand, sel_masks):
                     if tag == "rsp":
                         sent[idx] = sent[idx] | (ok & s)
@@ -360,21 +365,25 @@ def make_step(spec: NocSpec, topo: Topology, T: int):
 
 
 @functools.lru_cache(maxsize=64)
-def compiled_sim(spec: NocSpec, T: int):
-    """One jitted simulator per (static spec, horizon) pair.
+def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp"):
+    """One jitted simulator per (static spec, horizon, backend) triple.
 
     Returns ``fn(times, dests, service_lat, max_out, burst_beats)`` where
     ``times``/``dests`` are (n_cls, R, T) int32 schedules and the scalar
     knobs are traced — so the whole function is vmappable over a leading
     batch axis for rate/seed/latency sweeps in a single jit.
+
+    ``backend`` selects who runs the router hot loop (see
+    :mod:`repro.noc.backends`); every backend must produce flit-for-flit
+    identical results behind this one surface.
     """
-    topo = build_topology(spec)
-    step = make_step(spec, topo, T)
+    topo = build_channel_plan(spec)
+    network = get_backend(backend)(spec.topology)
+    step = make_step(spec, topo, T, network.step)
 
     @jax.jit
     def run(times, dests, service_lat, max_out, burst_beats):
-        nets = tuple(init_state(spec.nx, spec.ny, ch.depth)
-                     for ch in spec.channels)
+        nets = tuple(network.init(ch.depth) for ch in spec.channels)
         state = SimState(nets, init_ni(spec.n_routers, topo), jnp.int32(0),
                          jnp.zeros((topo.n_ch,), jnp.int32))
         dyn = {"times": times, "dests": dests,

@@ -1,10 +1,9 @@
 """Structured simulation results.
 
-Replaces the seed's ad-hoc result dicts (``run_sim`` / ``benchmarks`` /
-``examples`` each reshaping raw keys differently) with one typed
-:class:`SimResult`: per-class latency/bandwidth stats, per-channel link
-activity + energy (paper Fig. 6 pJ/B/hop model), and a ``to_legacy``
-view feeding the deprecation shims.
+Replaces the seed's ad-hoc result dicts (benchmarks / examples each
+reshaping raw keys differently) with one typed :class:`SimResult`:
+per-class latency/bandwidth stats, per-channel link activity + energy
+(paper Fig. 6 pJ/B/hop model).
 
 All arrays keep whatever leading batch dimensions the engine produced,
 so a vmapped sweep returns ONE ``SimResult`` whose stats have a leading
@@ -105,23 +104,6 @@ class SimResult:
     def total_energy_pj(self) -> np.ndarray:
         return np.sum(np.stack(
             [c.energy_pj for c in self.channels.values()]), axis=0)
-
-    def to_legacy(self) -> dict[str, Any]:
-        """Seed ``run_sim`` result-dict view (narrow_*/wide_* keys)."""
-        if self.batch_shape:
-            raise ValueError("to_legacy needs an unbatched result")
-        n, w = self.classes["narrow"], self.classes["wide"]
-        return {
-            "narrow_done": n.done,
-            "narrow_avg_lat": n.avg_lat,
-            "narrow_max_lat": n.max_lat,
-            "wide_done": w.done,
-            "wide_beats_rx": w.beats_rx,
-            "wide_avg_lat": w.avg_lat,
-            "wide_eff_bw": w.eff_bw,
-            "cycles": self.cycles,
-            "total_link_moves": int(self.total_link_moves),
-        }
 
     def summary(self) -> dict[str, Any]:
         """Compact scalars (means over NIs with traffic) for reports."""

@@ -1,10 +1,11 @@
 """Declarative NoC experiment specification.
 
-A :class:`NocSpec` declares *what the network is* — mesh dimensions, an
-arbitrary list of physical channels (each its own complete network
-instance, per the paper's no-VC design), the traffic classes riding on
-them, and a ``class_map`` assigning every traffic flow
-(``"<class>.req"`` / ``"<class>.rsp"``) to a channel.  The paper's two
+A :class:`NocSpec` declares *what the network is* — a first-class
+:class:`~repro.noc.topology.Topology` (XY mesh, torus, express-link
+mesh), an arbitrary list of physical channels (each its own complete
+network instance of that topology, per the paper's no-VC design), the
+traffic classes riding on them, and a ``class_map`` assigning every
+traffic flow (``"<class>.req"`` / ``"<class>.rsp"``) to a channel.  The paper's two
 configurations are presets:
 
 * :meth:`NocSpec.narrow_wide` — three physical networks (narrow_req /
@@ -25,6 +26,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 from typing import Mapping, Sequence
+
+from .topology import Mesh, Topology, Torus  # noqa: F401  (re-exported)
 
 
 @dataclass(frozen=True)
@@ -49,11 +52,28 @@ class PhysicalChannel:
     width_bits: int = 603          # link width incl. header lines (accounting)
 
 
+def _resolve_topology(nx: int, ny: int,
+                      topology: "Topology | None") -> "Topology":
+    """Preset helper: default to the paper's mesh; an explicit override
+    must agree with the nx/ny arguments so a sweep can't silently
+    simulate the wrong fabric."""
+    if topology is None:
+        return Mesh(nx, ny)
+    if (topology.nx, topology.ny) != (nx, ny):
+        raise ValueError(
+            f"topology {topology!r} does not match nx={nx}, ny={ny}")
+    return topology
+
+
 @dataclass(frozen=True)
 class NocSpec:
-    """Static description of one NoC experiment configuration."""
-    nx: int = 4
-    ny: int = 4
+    """Static description of one NoC experiment configuration.
+
+    ``topology`` is a first-class value (:class:`Mesh`, :class:`Torus`,
+    or ``Mesh(..., express=...)`` for >5-port express-link routers) —
+    every physical channel is one complete network instance of it.
+    """
+    topology: Topology = Mesh(4, 4)
     classes: tuple[TrafficClass, ...] = (
         TrafficClass("narrow", burst_beats=1, max_outstanding=8,
                      payload_bits=64),
@@ -74,6 +94,11 @@ class NocSpec:
     cycles: int = 4000
 
     def __post_init__(self):
+        if not (callable(getattr(self.topology, "tables", None))
+                and getattr(self.topology, "__hash__", None)):
+            raise TypeError(
+                f"topology must be a hashable Topology (Mesh/Torus) with "
+                f"static tables(), got {self.topology!r}")
         if isinstance(self.classes, Sequence) and not isinstance(
                 self.classes, tuple):
             object.__setattr__(self, "classes", tuple(self.classes))
@@ -111,8 +136,16 @@ class NocSpec:
 
     # ------------------------------------------------------------------ #
     @property
+    def nx(self) -> int:
+        return self.topology.nx
+
+    @property
+    def ny(self) -> int:
+        return self.topology.ny
+
+    @property
     def n_routers(self) -> int:
-        return self.nx * self.ny
+        return self.topology.n_routers
 
     @property
     def flow_map(self) -> dict[str, str]:
@@ -151,13 +184,17 @@ class NocSpec:
     # paper presets
     # ---------------------------------------------------------------- #
     @classmethod
-    def narrow_wide(cls, nx: int = 4, ny: int = 4, *, depth: int = 2,
+    def narrow_wide(cls, nx: int = 4, ny: int = 4, *,
+                    topology: Topology | None = None, depth: int = 2,
                     burstlen: int = 16, service_lat: int = 10,
                     cycles: int = 4000, max_narrow_outstanding: int = 8,
                     max_wide_outstanding: int = 8) -> "NocSpec":
-        """Paper §III-B: three independent physical networks."""
+        """Paper §III-B: three independent physical networks.
+
+        ``topology`` overrides the default XY mesh (e.g. ``Torus(nx,
+        ny)`` or ``Mesh(nx, ny, express=(2,))``)."""
         return cls(
-            nx=nx, ny=ny,
+            topology=_resolve_topology(nx, ny, topology),
             classes=(
                 TrafficClass("narrow", 1, max_narrow_outstanding, 64),
                 TrafficClass("wide", burstlen, max_wide_outstanding, 512),
@@ -172,14 +209,15 @@ class NocSpec:
             service_lat=service_lat, cycles=cycles)
 
     @classmethod
-    def wide_only(cls, nx: int = 4, ny: int = 4, *, depth: int = 2,
+    def wide_only(cls, nx: int = 4, ny: int = 4, *,
+                  topology: Topology | None = None, depth: int = 2,
                   burstlen: int = 16, service_lat: int = 10,
                   cycles: int = 4000, max_narrow_outstanding: int = 8,
                   max_wide_outstanding: int = 8) -> "NocSpec":
         """Fig. 5 ablation: ONE network carries every flow; narrow flits
         burn full wide-link cycles and bursts hold links end-to-end."""
         return cls(
-            nx=nx, ny=ny,
+            topology=_resolve_topology(nx, ny, topology),
             classes=(
                 TrafficClass("narrow", 1, max_narrow_outstanding, 64),
                 TrafficClass("wide", burstlen, max_wide_outstanding, 512),
@@ -191,6 +229,7 @@ class NocSpec:
 
     @classmethod
     def multi_stream(cls, nx: int = 4, ny: int = 4, *, n_wide: int = 2,
+                     topology: Topology | None = None,
                      depth: int = 2, burstlen: int = 16,
                      service_lat: int = 10, cycles: int = 4000
                      ) -> "NocSpec":
@@ -205,6 +244,7 @@ class NocSpec:
             classes.append(TrafficClass(f"wide{i}", burstlen, 8, 512))
             channels.append(PhysicalChannel(f"wide{i}", depth, 603))
             cmap += [(f"wide{i}.req", "req"), (f"wide{i}.rsp", f"wide{i}")]
-        return cls(nx=nx, ny=ny, classes=tuple(classes),
-                   channels=tuple(channels), class_map=tuple(sorted(cmap)),
+        return cls(topology=_resolve_topology(nx, ny, topology),
+                   classes=tuple(classes), channels=tuple(channels),
+                   class_map=tuple(sorted(cmap)),
                    service_lat=service_lat, cycles=cycles)

@@ -1,0 +1,240 @@
+"""First-class physical fabric topologies.
+
+A :class:`Topology` describes the router graph one physical channel is
+instantiated on: how many routers, how many ports per router, which
+router each output port links to, and which output port a flit bound
+for ``dest`` takes at every router.  Everything is reduced to three
+static tables consumed by the cycle engine
+(:func:`repro.core.noc_sim.router.make_fabric_step`):
+
+* ``nbr[r, p]``   — neighbor router reached by output port ``p`` of
+  router ``r`` (``-1``: no link; the local/NI port is always the last
+  port index),
+* ``opp[r, p]``   — the *input* port on that neighbor the link feeds,
+* ``route[r, d]`` — the output port a flit for destination ``d`` takes
+  at router ``r`` (deterministic, so AXI-style in-order delivery holds
+  per source/destination pair).
+
+Topologies are frozen/hashable — they live inside a
+:class:`~repro.noc.spec.NocSpec` and key the cached jitted simulator.
+
+Provided fabrics:
+
+* :class:`Mesh`  — the paper's 2D mesh with XY dimension-ordered
+  routing; ``express=(s, ...)`` adds express links of stride ``s`` in
+  both dimensions (>5-port routers), with greedy largest-stride-first
+  dimension-ordered routing (never overshoots, still deterministic),
+* :class:`Torus` — 2D torus with minimal-wrap dimension-ordered
+  routing (ties break to the positive direction).  Note the engine has
+  no virtual channels, so like real VC-less tori the wrap links can in
+  principle deadlock under sustained wormhole bursts; the journal
+  FlooNoC and PATRONoC both study such fabrics at the loads we model.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Union
+
+import numpy as np
+
+# direction order within each stride group (matches the seed's
+# N,E,S,W,Local port convention; Local is always the last port)
+_DIRS = ((0, -1), (1, 0), (0, 1), (-1, 0))      # N, E, S, W as (dx, dy)
+_OPP_DIR = (2, 3, 0, 1)                         # N<->S, E<->W
+
+
+def _check_dims(nx: int, ny: int) -> None:
+    if nx < 1 or ny < 1:
+        raise ValueError(f"mesh dims must be >= 1, got {nx}x{ny}")
+    if nx * ny < 2:
+        raise ValueError("topology needs at least 2 routers")
+
+
+@dataclass(frozen=True)
+class Mesh:
+    """2D mesh, XY routing; ``express`` strides add >5-port routers."""
+    nx: int
+    ny: int
+    express: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        _check_dims(self.nx, self.ny)
+        ex = tuple(self.express)
+        object.__setattr__(self, "express", ex)
+        for s in ex:
+            if not 2 <= s < max(self.nx, self.ny):
+                raise ValueError(
+                    f"express stride {s} invalid for {self.nx}x{self.ny} "
+                    f"mesh (need 2 <= stride < max dim)")
+        if len(set(ex)) != len(ex):
+            raise ValueError("duplicate express strides")
+
+    @property
+    def n_routers(self) -> int:
+        return self.nx * self.ny
+
+    @property
+    def strides(self) -> tuple[int, ...]:
+        """Link strides, base mesh first then ascending express."""
+        return (1, *sorted(self.express))
+
+    @property
+    def n_ports(self) -> int:
+        return 4 * len(self.strides) + 1
+
+    def tables(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return _mesh_tables(self)
+
+    def hops(self) -> np.ndarray:
+        return hop_table(self)
+
+
+@dataclass(frozen=True)
+class Torus(Mesh):
+    """2D torus: wrap-around links, minimal-wrap dimension-ordered
+    routing. Express links are not supported on the torus."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.express:
+            raise ValueError("Torus does not support express links")
+
+    def tables(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return _torus_tables(self)
+
+
+Topology = Union[Mesh, Torus]
+
+
+def _port(stride_idx: int, d: int) -> int:
+    return 4 * stride_idx + d
+
+
+def _mesh_step(dx_target: int, strides: tuple[int, ...]) -> tuple[int, int]:
+    """(port direction index, stride index) for one dimension-ordered hop
+    toward ``dx_target`` (signed remaining distance), largest non-
+    overshooting stride first — which also can never leave the mesh."""
+    mag = abs(dx_target)
+    for si in range(len(strides) - 1, -1, -1):
+        if strides[si] <= mag:
+            return (1 if dx_target > 0 else 3), si   # E else W
+    raise AssertionError("stride 1 always fits")     # pragma: no cover
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_tables(topo: Mesh):
+    nx, ny, strides = topo.nx, topo.ny, topo.strides
+    R, P = topo.n_routers, topo.n_ports
+    nbr = np.full((R, P), -1, np.int64)
+    opp = np.full((R, P), P - 1, np.int64)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for si, s in enumerate(strides):
+            for d, (dx, dy) in enumerate(_DIRS):
+                tx, ty = x + dx * s, y + dy * s
+                if 0 <= tx < nx and 0 <= ty < ny:
+                    p = _port(si, d)
+                    nbr[r, p] = ty * nx + tx
+                    opp[r, p] = _port(si, _OPP_DIR[d])
+
+    route = np.full((R, R), P - 1, np.int64)         # default: local port
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for dest in range(R):
+            dx, dy = dest % nx - x, dest // nx - y
+            if dx != 0:
+                d, si = _mesh_step(dx, strides)
+            elif dy != 0:
+                d, si = _mesh_step(dy, strides)
+                d = {1: 2, 3: 0}[d]                  # E->S, W->N
+            else:
+                continue
+            route[r, dest] = _port(si, d)
+    return _freeze_tables(nbr, opp, route)
+
+
+def _wrap_delta(a: int, b: int, size: int) -> int:
+    """Signed minimal wrap distance a -> b on a ring (ties positive)."""
+    d = (b - a) % size
+    return d if d <= size - d else d - size
+
+
+@functools.lru_cache(maxsize=64)
+def _torus_tables(topo: Torus):
+    nx, ny = topo.nx, topo.ny
+    R, P = topo.n_routers, topo.n_ports
+    nbr = np.full((R, P), -1, np.int64)
+    opp = np.full((R, P), P - 1, np.int64)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for d, (dx, dy) in enumerate(_DIRS):
+            # dims of size 1 have no ring; leave those ports unwired
+            if (dx and nx == 1) or (dy and ny == 1):
+                continue
+            tx, ty = (x + dx) % nx, (y + dy) % ny
+            nbr[r, d] = ty * nx + tx
+            opp[r, d] = _OPP_DIR[d]
+
+    route = np.full((R, R), P - 1, np.int64)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for dest in range(R):
+            dx = _wrap_delta(x, dest % nx, nx)
+            dy = _wrap_delta(y, dest // nx, ny)
+            if dx != 0:
+                route[r, dest] = 1 if dx > 0 else 3          # E / W
+            elif dy != 0:
+                route[r, dest] = 2 if dy > 0 else 0          # S / N
+    return _freeze_tables(nbr, opp, route)
+
+
+def _freeze_tables(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray):
+    """Validate then mark read-only: the tables are cached and shared
+    with every caller, so a mutation would corrupt all later sims."""
+    _check_tables(nbr, opp, route)
+    for a in (nbr, opp, route):
+        a.setflags(write=False)
+    return nbr, opp, route
+
+
+def _check_tables(nbr: np.ndarray, opp: np.ndarray,
+                  route: np.ndarray) -> None:
+    """Structural invariants every topology must satisfy (real raises,
+    not asserts — these guard simulation correctness under ``-O`` too:
+    a port index reaching the arbiter's NO-ROUTE sentinel would make
+    valid heads silently never granted)."""
+    R, P = nbr.shape
+    if P >= 99:
+        raise ValueError(
+            f"{P} ports collides with the NO-ROUTE sentinel (99)")
+    for r in range(R):
+        for p in range(P - 1):
+            t = nbr[r, p]
+            if t >= 0 and nbr[t, opp[r, p]] != r:
+                raise ValueError(f"link {r}:{p} is not duplex")
+    rr = np.arange(R)[:, None].repeat(R, axis=1)         # (R, R) row index
+    off_diag = rr != rr.T
+    if not np.all(nbr[rr[off_diag], route[off_diag]] >= 0):
+        raise ValueError("route uses a missing link")
+
+
+@functools.lru_cache(maxsize=64)
+def hop_table(topo: Topology) -> np.ndarray:
+    """(R, R) hop counts along each deterministic route (0 on the
+    diagonal). Also proves every route terminates (no livelock)."""
+    nbr, _, route = topo.tables()
+    R = nbr.shape[0]
+    src = np.arange(R)[:, None].repeat(R, axis=1)
+    dest = np.arange(R)[None, :].repeat(R, axis=0)
+    cur = src.copy()
+    hops = np.zeros((R, R), np.int64)
+    for _ in range(4 * R + 4):
+        live = cur != dest
+        if not live.any():
+            hops.setflags(write=False)       # cached + shared with callers
+            return hops
+        step = nbr[cur, route[cur, dest]]
+        cur = np.where(live, step, cur)
+        hops += live
+    raise ValueError(f"routing on {topo} does not terminate")

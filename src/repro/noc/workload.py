@@ -4,16 +4,15 @@ A :class:`Workload` names a registered *pattern* plus per-class
 parameters (rates in flits/cycle, transaction counts).  Patterns
 produce, for every declared :class:`~repro.noc.spec.TrafficClass`, a
 dense ``(R, T)`` schedule of desired inject times (sorted per NI; an
-entry at/after ``BIG`` disables the slot) and destinations — the same
-schedule contract the seed ``traffic.py`` used, generalized from the
-hardcoded narrow/wide pair to the spec's declared class list.
+entry at/after ``BIG`` disables the slot) and destinations, generalized
+from the seed's hardcoded narrow/wide pair to the spec's declared class
+list.
 
 Built-in patterns:
 
-* ``fig5``           — paper Fig. 5 cluster-to-cluster pair traffic
-  (wraps the seed ``fig5_traffic`` semantics),
-* ``uniform_random`` — uniform-random background from every NI (wraps
-  the seed ``uniform_random``, with the self-traffic remap fixed),
+* ``fig5``           — paper Fig. 5 cluster-to-cluster pair traffic,
+* ``uniform_random`` — uniform-random background from every NI (with
+  the seed's self-traffic remap bug fixed),
 * ``hotspot``        — a fraction of traffic converges on one hot tile,
 * ``transpose``      — tile (x, y) talks to tile (y, x),
 * ``all_to_all``     — every NI sweeps all other tiles round-robin
@@ -304,13 +303,3 @@ def all_to_all(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
     return out
 
 
-def from_legacy_traffic(spec: NocSpec, traffic: Mapping[str, np.ndarray]
-                        ) -> dict[str, tuple[np.ndarray, np.ndarray]]:
-    """Adapt a seed-format schedule dict (nar_*/wide_* keys) to the
-    per-class schedule mapping the engine consumes."""
-    return {
-        "narrow": (np.asarray(traffic["nar_time"], np.int32),
-                   np.asarray(traffic["nar_dest"], np.int32)),
-        "wide": (np.asarray(traffic["wide_time"], np.int32),
-                 np.asarray(traffic["wide_dest"], np.int32)),
-    }

@@ -53,7 +53,8 @@ def sync_axes_for(pspec: P, mesh: MeshConfig) -> tuple[str, ...]:
 
 
 def sync_grads(grads: Any, pspecs: Any, bk: Backend) -> Any:
-    """Group leaves by sync-axes set; dual-channel all-reduce each group."""
+    """Group leaves by sync-axes set; policy-driven multi-channel
+    all-reduce per group (paper's narrow/wide separation)."""
     from ..core import channels
     g_leaves, treedef = jax.tree.flatten(grads)
     s_leaves = treedef.flatten_up_to(pspecs)
@@ -74,8 +75,9 @@ def sync_grads(grads: Any, pspecs: Any, bk: Backend) -> Any:
                 sub, sizes, ledger=bk.ledger,
                 wide_flit_bytes=bk.cfg.wide_flit_bytes)
         elif bk.is_floo:
-            red = channels.dual_channel_all_reduce(
-                sub, sizes, wide_flit_bytes=bk.cfg.wide_flit_bytes,
+            red = channels.multi_channel_all_reduce(
+                sub, sizes,
+                policy=channels.dual_policy(bk.cfg.wide_flit_bytes),
                 bidir=bk.cfg.bidir_rings, ledger=bk.ledger)
         else:
             names = tuple(a for a, _ in sizes)

@@ -108,23 +108,56 @@ def test_expert_gemm(E, C, d, f, dtype):
                                want.astype(np.float32), **TOL)
 
 
-@pytest.mark.parametrize("seed", range(4))
-def test_router_arbiter(seed):
-    """Random router states: kernel == jnp oracle (exact int match)."""
-    rng = np.random.default_rng(seed)
-    R, P = 16, 5
-    heads = rng.integers(0, 16, size=(R, P, 6)).astype(np.int32)
-    heads[:, :, 5] = rng.integers(1, 4, size=(R, P))  # beats
-    valid = rng.integers(0, 2, size=(R, P)).astype(np.int32)
+def _rand_arbiter_state(rng, R, P, lock_frac=0.2):
+    """Random routed head state (the arbiter's post-route-lookup view)."""
+    out_port = np.where(rng.random((R, P)) < 0.7,
+                        rng.integers(0, P, size=(R, P)), 99).astype(np.int32)
+    beat = rng.integers(1, 5, size=(R, P)).astype(np.int32)
     ptr = rng.integers(0, P, size=(R, P)).astype(np.int32)
     free = rng.integers(0, 2, size=(R, P)).astype(np.int32)
-    lock = np.where(rng.random((R, P)) < 0.2,
+    lock = np.where(rng.random((R, P)) < lock_frac,
                     rng.integers(0, P, size=(R, P)), -1).astype(np.int32)
-    got = router_arbiter_pallas(jnp.asarray(heads), jnp.asarray(valid),
-                                jnp.asarray(ptr), jnp.asarray(free),
-                                jnp.asarray(lock), nx=4, interpret=True)
-    want = router_arbiter_ref(jnp.asarray(heads), jnp.asarray(valid),
-                              jnp.asarray(ptr), jnp.asarray(free),
-                              jnp.asarray(lock), nx=4)
-    for g, w in zip(got, want):
-        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    return out_port, beat, ptr, free, lock
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("R,P,lock_frac", [
+    (16, 5, 0.2),    # paper 5-port router, block-aligned
+    (12, 5, 0.2),    # 3x4 mesh: R not divisible by the default block
+    (16, 9, 0.2),    # express-link radix (Mesh(express=(2,)))
+    (16, 5, 0.8),    # lock-heavy: the seed kernel's rr_ptr parity bug
+])
+def test_router_arbiter(seed, R, P, lock_frac):
+    """Random router states: kernel == engine arbiter (exact int match).
+
+    The lock-heavy cases are a regression for the seed kernel, which
+    advanced the round-robin pointer on wormhole-locked grants while
+    the engine held it — breaking flit-level backend parity."""
+    rng = np.random.default_rng(seed)
+    args = [jnp.asarray(a) for a in _rand_arbiter_state(rng, R, P,
+                                                        lock_frac)]
+    got = router_arbiter_pallas(*args, interpret=True)
+    want = router_arbiter_ref(*args)
+    for g, w, name in zip(got, want, ("winner", "pop", "ptr", "lock")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_router_arbiter_holds_ptr_under_lock():
+    """Directed case: a locked output grants its locked input but must
+    NOT advance the round-robin pointer (engine semantics)."""
+    R, P = 1, 5
+    out_port = np.full((R, P), 99, np.int32)
+    out_port[0, 2] = 0                       # input 2 requests output 0
+    beat = np.full((R, P), 3, np.int32)      # mid-burst
+    ptr = np.zeros((R, P), np.int32)
+    free = np.ones((R, P), np.int32)
+    lock = np.full((R, P), -1, np.int32)
+    lock[0, 0] = 2                           # output 0 locked to input 2
+    winner, pop, nptr, nlock = [
+        np.asarray(x) for x in router_arbiter_pallas(
+            jnp.asarray(out_port), jnp.asarray(beat), jnp.asarray(ptr),
+            jnp.asarray(free), jnp.asarray(lock), interpret=True)]
+    assert winner[0, 0] == 2 and pop[0, 2] == 1
+    assert nptr[0, 0] == 0                   # held, not advanced
+    assert nlock[0, 0] == 2                  # burst continues

@@ -8,8 +8,9 @@ the NocSpec -> ChannelPolicy derivation shared with the collectives.
 import numpy as np
 import pytest
 
-from repro.noc import (NocSpec, PhysicalChannel, TrafficClass, Workload,
-                       build_topology, simulate, simulate_batch, sweep)
+from repro.noc import (Mesh, NocSpec, PhysicalChannel, Torus,  # noqa: F401
+                       TrafficClass, Workload, build_channel_plan, hop_table,
+                       simulate, simulate_batch, sweep)
 
 
 # --------------------------------------------------------------------- #
@@ -24,15 +25,15 @@ def test_spec_validates_class_map():
                            ("wide.req", "req"), ("wide.rsp", "wide")))
 
 
-def test_topology_presets():
-    nw = build_topology(NocSpec.narrow_wide())
+def test_channel_plan_presets():
+    nw = build_channel_plan(NocSpec.narrow_wide())
     assert nw.n_ch == 3 and nw.n_q == 2
     assert nw.reqs_on == ((0, 1), (), ())        # shared req, narrow first
     assert nw.queues_on == ((), (0,), (1,))      # dedicated rsp networks
-    wo = build_topology(NocSpec.wide_only())
+    wo = build_channel_plan(NocSpec.wide_only())
     assert wo.n_ch == 1 and wo.n_q == 1          # shared-FIFO ablation
     assert wo.queue_of_class == (0, 0)
-    ms = build_topology(NocSpec.multi_stream(n_wide=3))
+    ms = build_channel_plan(NocSpec.multi_stream(n_wide=3))
     assert ms.n_ch == 5 and ms.n_q == 4
 
 
@@ -164,21 +165,6 @@ def test_uniform_random_never_self():
             assert not np.any((dests == srcs) & live), (name, seed)
 
 
-def test_legacy_uniform_random_never_self():
-    from repro.core.noc_sim.traffic import uniform_random
-    from repro.core.noc_sim import SimConfig
-    cfg = SimConfig(nx=4, ny=4)
-    for seed in range(8):
-        tr = uniform_random(cfg, narrow_per_ni=200, wide_per_ni=50,
-                            narrow_rate=0.5, wide_rate=0.5, seed=seed)
-        for kind in ("nar", "wide"):
-            dests = tr[f"{kind}_dest"]
-            live = tr[f"{kind}_time"] < (1 << 30)
-            srcs = np.broadcast_to(np.arange(cfg.n_routers)[:, None],
-                                   dests.shape)
-            assert not np.any((dests == srcs) & live), (kind, seed)
-
-
 def test_patterns_produce_valid_schedules():
     spec = NocSpec.narrow_wide(4, 4, cycles=100)
     wls = [
@@ -230,32 +216,6 @@ def test_multi_stream_completes_and_isolates():
     assert float(r.channels["req"].energy_pj) > 0
 
 
-def test_shim_matches_new_api():
-    """The deprecated SimConfig/run_sim shim and the declarative API
-    agree exactly on the same deterministic workload."""
-    import warnings
-    from repro.core.noc_sim import SimConfig, fig5_traffic, run_sim
-    cfg = SimConfig(nx=3, ny=3, cycles=1500, narrow_wide=True)
-    tr = fig5_traffic(cfg, num_narrow=20, num_wide=8, wide_rate=1.0,
-                      narrow_rate=0.05, src=0, dst=8)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = run_sim(cfg, tr)
-    r = simulate(cfg.to_spec(),
-                 Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
-                               counts={"narrow": 20, "wide": 8},
-                               src=0, dst=8))
-    np.testing.assert_array_equal(legacy["narrow_done"],
-                                  r.classes["narrow"].done)
-    np.testing.assert_allclose(legacy["narrow_avg_lat"],
-                               r.classes["narrow"].avg_lat)
-    np.testing.assert_array_equal(legacy["wide_beats_rx"],
-                                  r.classes["wide"].beats_rx)
-    np.testing.assert_allclose(legacy["wide_eff_bw"],
-                               r.classes["wide"].eff_bw)
-    assert legacy["total_link_moves"] == int(r.total_link_moves)
-
-
 # --------------------------------------------------------------------- #
 # NocSpec -> ChannelPolicy (shared vocabulary with collectives)
 # --------------------------------------------------------------------- #
@@ -269,3 +229,141 @@ def test_channel_policy_from_spec():
     ms = ChannelPolicy.from_spec(NocSpec.multi_stream(n_wide=2))
     assert [c.channel for c in ms.classes] == ["rsp", "wide0", "wide1"]
     assert ms.classes[1].min_bytes < ms.classes[2].min_bytes
+
+
+# --------------------------------------------------------------------- #
+# first-class Topology (mesh / torus / express)
+# --------------------------------------------------------------------- #
+def test_topology_validation():
+    with pytest.raises(ValueError, match="at least 2 routers"):
+        Mesh(1, 1)
+    with pytest.raises(ValueError, match="express stride"):
+        Mesh(4, 4, express=(5,))
+    with pytest.raises(ValueError, match="express"):
+        Torus(4, 4, express=(2,))
+    with pytest.raises(TypeError, match="topology"):
+        NocSpec(topology="4x4")
+    with pytest.raises(ValueError, match="does not match"):
+        NocSpec.narrow_wide(8, 8, topology=Torus(4, 4))
+    assert Mesh(4, 4, express=(2,)).n_ports == 9   # 5-port + 4 express
+    assert Torus(4, 4).n_ports == 5
+
+
+@pytest.mark.parametrize("nx,ny", [(4, 4), (5, 3), (2, 2)])
+def test_topology_torus_hops_leq_mesh(nx, ny):
+    """Wrap-around links never lengthen a deterministic route."""
+    hm, ht = hop_table(Mesh(nx, ny)), hop_table(Torus(nx, ny))
+    assert np.all(ht <= hm)
+    if max(nx, ny) >= 4:
+        assert ht.max() < hm.max()     # corners actually get closer
+
+
+def test_topology_express_hops_and_ports():
+    """Express strides shorten routes without breaking duplex links."""
+    hm = hop_table(Mesh(8, 8))
+    he = hop_table(Mesh(8, 8, express=(2,)))
+    assert np.all(he <= hm)
+    assert he.max() < hm.max()
+
+
+def test_topology_express_reduces_latency_at_equal_load():
+    """Same injected workload, same channel layout: express links cut
+    average narrow latency."""
+    wl = Workload.make("fig5", rates={"narrow": 0.2},
+                       counts={"narrow": 30}, src=0, dst=7)
+    lats = {}
+    for tag, topo in (("mesh", Mesh(8, 1)), ("express", Mesh(8, 1,
+                                                             express=(3,)))):
+        spec = NocSpec.narrow_wide(8, 1, topology=topo, cycles=1500)
+        r = simulate(spec, wl)
+        assert int(r.classes["narrow"].done[0]) == 30
+        lats[tag] = float(r.classes["narrow"].avg_lat[0])
+    assert lats["express"] < lats["mesh"], lats
+
+
+def test_topology_torus_end_to_end():
+    """Torus spec runs the full engine with per-class metrics; the
+    wrap route beats the mesh on corner-to-corner traffic."""
+    wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
+                       counts={"narrow": 20, "wide": 8}, src=0, dst=15)
+    res = {}
+    for tag, topo in (("mesh", Mesh(4, 4)), ("torus", Torus(4, 4))):
+        spec = NocSpec.narrow_wide(4, 4, topology=topo, cycles=3000)
+        r = simulate(spec, wl)
+        assert int(r.classes["narrow"].done[0]) == 20
+        assert int(r.classes["wide"].beats_rx[0]) == 8 * spec.burstlen
+        assert float(r.channels["wide"].energy_pj) > 0
+        res[tag] = r
+    assert (float(res["torus"].classes["narrow"].avg_lat[0])
+            < float(res["mesh"].classes["narrow"].avg_lat[0]))
+    # fewer hops -> fewer link traversals for identical traffic
+    assert (int(res["torus"].total_link_moves)
+            < int(res["mesh"].total_link_moves))
+
+
+def test_topology_is_static_cache_key():
+    """Same spec fields + different topology must not share a compiled
+    simulator (specs compare unequal, so the lru_cache keys differ even
+    where dataclass field-hashes collide across Mesh/Torus)."""
+    a = NocSpec.narrow_wide(4, 4)
+    assert a != NocSpec.narrow_wide(4, 4, topology=Torus(4, 4))
+    assert a != NocSpec.narrow_wide(4, 4, topology=Mesh(4, 4, express=(2,)))
+    assert a == NocSpec.narrow_wide(4, 4, topology=Mesh(4, 4))
+
+
+# --------------------------------------------------------------------- #
+# pluggable backends behind the same simulate() surface
+# --------------------------------------------------------------------- #
+def test_backend_registry():
+    from repro.noc import get_backend, list_backends
+    assert {"jnp", "pallas"} <= set(list_backends())
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("fpga")
+
+
+def _assert_results_equal(a, b):
+    for cname in a.classes:
+        for f in ("done", "avg_lat", "max_lat", "beats_rx", "eff_bw"):
+            np.testing.assert_array_equal(
+                getattr(a.classes[cname], f), getattr(b.classes[cname], f),
+                err_msg=f"{cname}.{f}")
+    for ch in a.channels:
+        np.testing.assert_array_equal(a.channels[ch].link_moves,
+                                      b.channels[ch].link_moves)
+
+
+@pytest.mark.parametrize("preset", [NocSpec.narrow_wide, NocSpec.wide_only])
+def test_backend_pallas_matches_jnp_on_paper_presets(preset):
+    """simulate(spec, wl, backend="pallas") is flit-for-flit identical
+    to the jnp reference on both paper presets, under interference load
+    that exercises wormhole locks and round-robin state."""
+    spec = preset(4, 4, cycles=2000)
+    wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
+                       counts={"narrow": 40, "wide": 24},
+                       src=0, dst=15, bidir=True)
+    _assert_results_equal(simulate(spec, wl),
+                          simulate(spec, wl, backend="pallas"))
+
+
+def test_backend_pallas_matches_jnp_on_torus():
+    """Backend equivalence is not mesh-specific: the arbiter kernel
+    sees only routed ports, so the torus agrees too."""
+    spec = NocSpec.wide_only(3, 3, topology=Torus(3, 3), cycles=1200)
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.2, "wide": 0.5},
+                       counts={"narrow": 20, "wide": 6}, seed=3)
+    _assert_results_equal(simulate(spec, wl),
+                          simulate(spec, wl, backend="pallas"))
+
+
+def test_backend_batch_and_sweep_accept_backend():
+    spec = NocSpec.narrow_wide(2, 2, cycles=400)
+    wl = Workload.make("fig5", rates={"narrow": 0.1},
+                       counts={"narrow": 5}, src=0, dst=3)
+    b = simulate_batch(spec, [wl, wl], backend="pallas")
+    s = simulate(spec, wl)
+    np.testing.assert_array_equal(b.point(0).classes["narrow"].done,
+                                  s.classes["narrow"].done)
+    (r,) = sweep([(spec, wl)], backend="pallas")
+    np.testing.assert_array_equal(r.classes["narrow"].done,
+                                  s.classes["narrow"].done)

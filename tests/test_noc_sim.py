@@ -1,41 +1,44 @@
-"""NoC simulator: paper-claim validation at test scale."""
-import numpy as np
-import pytest
+"""NoC simulator: paper-claim validation at test scale.
 
-from repro.core.noc_sim import (PAPER, PAPER_CLAIMS, SimConfig, fig5_traffic,
-                                run_sim)
+Seed-era claims, expressed through the declarative ``repro.noc`` API
+(the legacy config/runner surface these tests used to drive was
+migrated off and deleted).
+"""
+from repro.core.noc_sim import PAPER, PAPER_CLAIMS
+from repro.noc import NocSpec, Workload, simulate
+
+
+def _fig5(rates, counts, **kw):
+    return Workload.make("fig5", rates=rates, counts=counts, **kw)
 
 
 def test_zero_load_latency_matches_paper():
-    cfg = SimConfig(nx=2, ny=1, cycles=200, narrow_wide=True, service_lat=10)
-    tr = fig5_traffic(cfg, num_narrow=1, num_wide=0, narrow_rate=0.01,
-                      src=0, dst=1)
-    m = run_sim(cfg, tr)
-    assert int(m["narrow_done"][0]) == 1
-    assert float(m["narrow_avg_lat"][0]) == \
+    spec = NocSpec.narrow_wide(2, 1, cycles=200)
+    m = simulate(spec, _fig5({"narrow": 0.01}, {"narrow": 1}, src=0, dst=1))
+    assert int(m.classes["narrow"].done[0]) == 1
+    assert float(m.classes["narrow"].avg_lat[0]) == \
         PAPER_CLAIMS["zero_load_round_trip_cycles"]
 
 
 def test_all_transactions_complete():
-    cfg = SimConfig(nx=4, ny=4, cycles=6000)
-    tr = fig5_traffic(cfg, num_narrow=100, num_wide=32, wide_rate=1.0,
-                      narrow_rate=0.05, src=0, dst=15)
-    m = run_sim(cfg, tr)
-    assert int(m["narrow_done"][0]) == 100
-    assert int(m["wide_done"][0]) == 32
-    assert int(m["wide_beats_rx"][0]) == 32 * cfg.burstlen
+    spec = NocSpec.narrow_wide(4, 4, cycles=6000)
+    m = simulate(spec, _fig5({"narrow": 0.05, "wide": 1.0},
+                             {"narrow": 100, "wide": 32}, src=0, dst=15))
+    assert int(m.classes["narrow"].done[0]) == 100
+    assert int(m.classes["wide"].done[0]) == 32
+    assert int(m.classes["wide"].beats_rx[0]) == 32 * spec.burstlen
 
 
 def test_narrow_wide_isolation():
     """Fig 5a core claim: narrow latency flat under wide interference."""
     lat = {}
     for rate in (0.0, 1.0):
-        cfg = SimConfig(nx=4, ny=4, cycles=8000, narrow_wide=True,
-                        service_lat=10)
-        tr = fig5_traffic(cfg, num_narrow=100, num_wide=128 if rate else 0,
-                          wide_rate=rate, narrow_rate=0.05, src=0, dst=15,
-                          bidir=True)
-        lat[rate] = float(run_sim(cfg, tr)["narrow_avg_lat"][0])
+        spec = NocSpec.narrow_wide(4, 4, cycles=8000)
+        m = simulate(spec, _fig5(
+            {"narrow": 0.05, "wide": rate},
+            {"narrow": 100, "wide": 128 if rate else 0},
+            src=0, dst=15, bidir=True))
+        lat[rate] = float(m.classes["narrow"].avg_lat[0])
     assert lat[1.0] / lat[0.0] < 1.1, lat
 
 
@@ -43,34 +46,32 @@ def test_wide_only_degrades():
     """Fig 5a ablation: shared link degrades narrow latency >= 2x."""
     lat = {}
     for rate in (0.0, 1.0):
-        cfg = SimConfig(nx=4, ny=4, cycles=8000, narrow_wide=False,
-                        service_lat=10)
-        tr = fig5_traffic(cfg, num_narrow=100, num_wide=128 if rate else 0,
-                          wide_rate=rate, narrow_rate=0.05, src=0, dst=15,
-                          bidir=True)
-        lat[rate] = float(run_sim(cfg, tr)["narrow_avg_lat"][0])
+        spec = NocSpec.wide_only(4, 4, cycles=8000)
+        m = simulate(spec, _fig5(
+            {"narrow": 0.05, "wide": rate},
+            {"narrow": 100, "wide": 128 if rate else 0},
+            src=0, dst=15, bidir=True))
+        lat[rate] = float(m.classes["narrow"].avg_lat[0])
     assert lat[1.0] / lat[0.0] > 2.0, lat
 
 
 def test_wide_bandwidth_robust_with_separation():
     utils = []
     for nrate in (0.0, 1.0):
-        cfg = SimConfig(nx=4, ny=4, cycles=6000, narrow_wide=True,
-                        service_lat=10)
-        tr = fig5_traffic(cfg, num_narrow=2000 if nrate else 0, num_wide=128,
-                          wide_rate=1.0, narrow_rate=nrate, src=0, dst=5)
-        utils.append(float(run_sim(cfg, tr)["wide_eff_bw"][0]))
+        spec = NocSpec.narrow_wide(4, 4, cycles=6000)
+        m = simulate(spec, _fig5(
+            {"narrow": nrate, "wide": 1.0},
+            {"narrow": 2000 if nrate else 0, "wide": 128}, src=0, dst=5))
+        utils.append(float(m.classes["wide"].eff_bw[0]))
     assert utils[1] >= 0.85 * utils[0], utils
     assert utils[1] >= PAPER_CLAIMS["eff_bandwidth_utilization"], utils
 
 
 def test_rob_flow_control_limits_outstanding():
     """End-to-end flow control: wide txns never exceed the ROB budget."""
-    cfg = SimConfig(nx=2, ny=2, cycles=2000, max_wide_outstanding=2)
-    tr = fig5_traffic(cfg, num_narrow=0, num_wide=64, wide_rate=1.0,
-                      src=0, dst=3)
-    m = run_sim(cfg, tr)
-    assert int(m["wide_done"][0]) == 64     # all complete despite tiny ROB
+    spec = NocSpec.narrow_wide(2, 2, cycles=2000, max_wide_outstanding=2)
+    m = simulate(spec, _fig5({"wide": 1.0}, {"wide": 64}, src=0, dst=3))
+    assert int(m.classes["wide"].done[0]) == 64  # all complete, tiny ROB
 
 
 def test_analytic_model_matches_paper_numbers():
