@@ -218,18 +218,45 @@ def bench_fig6_area_energy(smoke: bool = False):
 
 def bench_straggler_sim(smoke: bool = False):
     """Straggler mitigation at 1024 hosts (DESIGN section 7)."""
-    try:
-        from repro.train.straggler import SimulatedCluster
-    except ImportError as e:   # seed gap: repro.train pulls in repro.dist
-        print(f"straggler,0,SKIPPED ({e})")
-        _record("straggler", 0, skipped=str(e))
-        return None
+    from repro.train.straggler import SimulatedCluster
     sim = SimulatedCluster(n_hosts=128 if smoke else 1024)
     rep, us = _timed(sim.report)
     for pol, r in rep.items():
         print(f"straggler_{pol},{us:.0f},p50={r['p50']:.3f} p99={r['p99']:.3f}")
         _record(f"straggler_{pol}", us, p50=r["p50"], p99=r["p99"])
     return rep
+
+
+def bench_train_step(smoke: bool = False):
+    """End-to-end smoke train step through repro.dist (wide grad bulk +
+    narrow flit-packed metrics riding the dual-channel policy)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch, ShapeConfig
+    from repro.configs.base import MeshConfig, RunConfig
+    from repro.dist import params as params_lib, step as step_lib
+    from repro.models import build_model
+
+    mcfg = get_arch("llama3.2-1b").smoke(num_layers=2, d_model=64, d_ff=128,
+                                         vocab_size=256)
+    shape = ShapeConfig("bench", 64, 4, "train")
+    cfg = RunConfig(model=mcfg, shape=shape, mesh=MeshConfig(1, 1, 1))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    model = build_model(mcfg, cfg)
+    art = step_lib.build_train_step(model, shape, mesh)
+    key = jax.random.key(0)
+    params = params_lib.materialize_sharded(art.param_specs, key, mesh)
+    opt = params_lib.materialize_sharded(art.opt_specs, key, mesh)
+    toks = jax.random.randint(key, (4, 64), 0, mcfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    params, opt, m = art.fn(params, opt, jnp.int32(0), batch)   # compile
+    (_, _, m), us = _timed(art.fn, params, opt, jnp.int32(1), batch,
+                           repeat=2 if smoke else 5)
+    loss = float(m["loss"])
+    gnorm = float(m["grad_norm"])
+    print(f"train_step,{us:.0f},loss={loss:.3f} grad_norm={gnorm:.3f}")
+    _record("train_step", us, loss=loss, grad_norm=gnorm)
+    return loss
 
 
 def bench_channels_ablation(smoke: bool = False):
@@ -287,6 +314,7 @@ def main() -> None:
     bench_rate_sweep(args.smoke)
     bench_backend_channels(args.smoke)
     bench_straggler_sim(args.smoke)
+    bench_train_step(args.smoke)
     bench_channels_ablation(args.smoke)
     wall_s = time.perf_counter() - t0
 

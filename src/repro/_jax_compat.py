@@ -1,0 +1,61 @@
+"""Version-compat backfills for the installed JAX.
+
+The codebase (and its test suite) is written against the current JAX
+surface; the container bakes in an older jax. Rather than scatter
+version branches through every call site, this module backfills the
+handful of renamed/moved entry points once, at ``import repro`` time.
+Every shim is a no-op on a JAX that already provides the modern name,
+so nothing here needs to change when the toolchain moves forward.
+
+Backfills (old JAX only):
+
+* ``jax.sharding.AxisType``        — enum added with explicit sharding;
+  older meshes are implicitly Auto, so a placeholder enum suffices.
+* ``jax.make_mesh(axis_types=...)`` — older signature lacks the kwarg;
+  we accept and drop it (Auto was the only behaviour back then).
+* ``jax.shard_map(... check_vma=)`` — older JAX has
+  ``jax.experimental.shard_map.shard_map`` with the kwarg spelled
+  ``check_rep``.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # implicitly Auto on this JAX version
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      check_rep=None, **kwargs):
+            if check_rep is None:
+                check_rep = True if check_vma is None else check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              **kwargs)
+
+        jax.shard_map = shard_map
+
+
+_install()

@@ -1,0 +1,14 @@
+"""Distributed substrate: mesh-facing backend, parameter specs, step
+builders, the pipeline schedule, and gradient compression.
+
+This package is the seam between the model/optimizer code (which runs
+INSIDE ``jax.shard_map`` on local shards) and the FlooNoC collective
+layer (``repro.core``): every cross-device byte a training or serving
+step moves goes through :class:`repro.dist.backend.Backend`, which
+classifies it narrow/wide and logs it to the collective ledger — the
+same channel vocabulary the cycle-accurate ``repro.noc`` simulator
+speaks.
+"""
+from . import backend, compression, params, pipeline, step  # noqa: F401
+from .backend import Backend  # noqa: F401
+from .params import ParamSpec, is_spec, materialize_sharded, tree_sds  # noqa: F401

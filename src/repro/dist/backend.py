@@ -1,0 +1,219 @@
+"""The mesh-facing collective backend used INSIDE ``jax.shard_map``.
+
+Every cross-device byte of a train/prefill/decode step goes through one
+of these methods, which (a) dispatches to the FlooNoC software
+collectives (``core/routing.py`` dimension-ordered rings) or the plain
+XLA primitives depending on ``cfg.backend``, and (b) records the
+transfer in the collective :class:`~repro.core.channels.Ledger` with
+its traffic class — the paper's narrow/wide separation applied to a
+real training step:
+
+* **wide**  — sequence AG/RS between blocks, FSDP parameter gathers,
+  MoE all_to_all dispatch (bandwidth-bound bulk);
+* **narrow** — partial-output psums, softmax/argmax stats, scalar
+  metrics (latency-critical smalls, flit-packed).
+
+``flat_dp`` semantics: when the run collapses tensor parallelism
+(``cfg.flat_dp``), the ``model`` mesh axis carries batch shards
+instead, so every TP collective here degenerates to the identity and
+``axis_index("model")`` reports 0 — model code stays oblivious.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import MeshConfig, RunConfig
+from ..core import channels, flit, routing
+from ..core.channels import Ledger, NARROW, WIDE
+
+
+def _nbytes(x: jax.Array) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# AD-correct cross-rank reductions for INSIDE-shard_map differentiation.
+#
+# With untracked replication (check_rep/check_vma off), jax transposes
+# lax.psum to lax.psum — i.e. it re-accumulates the cotangent across
+# ranks. Our psums all feed the REPLICATED loss (every rank seeds the
+# same cotangent), where the true adjoint of "y = sum_i x_i, y and ybar
+# replicated" is the identity: xbar_i = ybar. Without this, every
+# gradient comes out n_ranks too large (caught by the cross-mesh
+# equivalence suite). pmax is order statistics used only for softmax/
+# argmax stabilization, so its input gradient is dropped by design —
+# and must be, because jax has no JVP rule for pmax.
+# ---------------------------------------------------------------------------
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _psum_rep(x, axes):
+    return lax.psum(x, axes)
+
+
+def _psum_rep_fwd(x, axes):
+    return lax.psum(x, axes), None
+
+
+def _psum_rep_bwd(axes, _, ct):
+    return (ct,)
+
+
+_psum_rep.defvjp(_psum_rep_fwd, _psum_rep_bwd)
+
+
+def _pmax_ng(x, axes):
+    return lax.pmax(lax.stop_gradient(x), axes)
+
+
+class Backend:
+    """Collective backend bound to one RunConfig (trace-time object).
+
+    Safe to construct inside traced code: __init__ touches no jax
+    primitives. Ledger entries are recorded at trace time (the schedule
+    is static), which is what the dry-run reports as the collective
+    ledger.
+    """
+
+    def __init__(self, cfg: RunConfig, ledger: Ledger | None = None):
+        self.cfg = cfg
+        self.mesh_cfg: MeshConfig = cfg.mesh
+        self.ledger = ledger if ledger is not None else Ledger()
+        self._sizes = dict(zip(cfg.mesh.axis_names, cfg.mesh.shape))
+
+    # -- static topology ----------------------------------------------------
+    @property
+    def is_floo(self) -> bool:
+        return self.cfg.backend == "floo"
+
+    @property
+    def model(self) -> int:
+        """Effective TP degree (1 under flat_dp regardless of mesh)."""
+        return self.cfg.tp_size
+
+    def axis_size(self, name: str) -> int:
+        return self._sizes.get(name, 1)
+
+    def axis_index(self, name: str):
+        if name == "model" and self.cfg.flat_dp:
+            return jnp.int32(0)          # TP collapsed: every rank is rank 0
+        if name not in self._sizes:
+            return jnp.int32(0)
+        return lax.axis_index(name)
+
+    def _log(self, op: str, axes, nbytes: int, cls: str, note: str = ""):
+        self.ledger.log(op, axes, nbytes, cls, note)
+
+    # -- TP (model-axis) collectives ----------------------------------------
+    def seq_ag(self, x: jax.Array, *, dim: int) -> jax.Array:
+        """All-gather sequence/feature shards over `model` (wide bulk)."""
+        n = self.model
+        if n == 1:
+            return x
+        self._log("all_gather", ("model",), _nbytes(x) * (n - 1), WIDE,
+                  f"seq AG dim={dim}")
+        if self.is_floo:
+            return routing.ring_all_gather(x, "model", n, dim=dim,
+                                           bidir=self.cfg.bidir_rings)
+        return lax.all_gather(x, "model", axis=dim, tiled=True)
+
+    def seq_rs(self, x: jax.Array, *, dim: int) -> jax.Array:
+        """Reduce-scatter partial outputs over `model` (wide bulk)."""
+        n = self.model
+        if n == 1:
+            return x
+        self._log("reduce_scatter", ("model",),
+                  _nbytes(x) * (n - 1) // n, WIDE, f"seq RS dim={dim}")
+        if self.is_floo:
+            return routing.ring_reduce_scatter(x, "model", n, dim=dim,
+                                               bidir=self.cfg.bidir_rings)
+        return lax.psum_scatter(x, "model", scatter_dimension=dim, tiled=True)
+
+    def psum_model(self, x: jax.Array) -> jax.Array:
+        """Narrow latency-critical reduction over `model` (partial outs)."""
+        if self.model == 1:
+            return x
+        self._log("psum", ("model",), _nbytes(x), NARROW, "TP partial")
+        return _psum_rep(x, "model")
+
+    def pmax_model(self, x: jax.Array) -> jax.Array:
+        if self.model == 1:
+            return x
+        self._log("pmax", ("model",), _nbytes(x), NARROW, "softmax stat")
+        return _pmax_ng(x, "model")
+
+    def a2a_model(self, x: jax.Array, *, split_dim: int,
+                  concat_dim: int) -> jax.Array:
+        """MoE token dispatch over `model` (the textbook wide DMA burst)."""
+        n = self.model
+        if n == 1:
+            return x
+        self._log("all_to_all", ("model",), _nbytes(x) * (n - 1) // n, WIDE,
+                  "MoE dispatch")
+        return routing.all_to_all(x, "model", split_dim=split_dim,
+                                  concat_dim=concat_dim)
+
+    # -- DP (data-axis) reductions (split-KV decode combine) ----------------
+    def psum_data(self, x: jax.Array) -> jax.Array:
+        if self.axis_size("data") == 1:
+            return x
+        self._log("psum", ("data",), _nbytes(x), NARROW, "split-KV combine")
+        return _psum_rep(x, "data")
+
+    def pmax_data(self, x: jax.Array) -> jax.Array:
+        if self.axis_size("data") == 1:
+            return x
+        self._log("pmax", ("data",), _nbytes(x), NARROW, "split-KV stat")
+        return _pmax_ng(x, "data")
+
+    # -- FSDP parameter gathers ---------------------------------------------
+    def param_ag(self, x: jax.Array, *, dim: int) -> jax.Array:
+        """All-gather the FSDP-sharded dim over ``cfg.fsdp_axes``.
+
+        The backward of this gather is the reduce-scatter that makes
+        FSDP gradients arrive pre-reduced over the data axis (which is
+        why 'data' never shows up in the optimizer's sync sets).
+        """
+        axes = [(a, self.axis_size(a)) for a in self.cfg.fsdp_axes
+                if self.axis_size(a) > 1]
+        total = 1
+        for _, s in axes:
+            total *= s
+        if total == 1:
+            return x
+        names = tuple(a for a, _ in axes)
+        self._log("all_gather", names, _nbytes(x) * (total - 1), WIDE,
+                  f"FSDP param AG dim={dim}")
+        if self.is_floo:
+            return routing.dim_ordered_all_gather(x, axes, dim=dim,
+                                                  bidir=self.cfg.bidir_rings)
+        return lax.all_gather(x, names, axis=dim, tiled=True)
+
+    # -- narrow flit-packed scalar metrics ----------------------------------
+    def psum_scalar_metrics(self, metrics: Mapping[str, Any]) -> dict:
+        """One fused narrow psum for all scalar metrics across DP ranks.
+
+        The flit-packed analogue of the paper's single-flit smalls: N
+        scalars ride ONE latency-optimal psum per dtype instead of N.
+        """
+        axes = tuple(a for a in self.cfg.dp_axes_eff if self.axis_size(a) > 1)
+        metrics = dict(metrics)
+        if not axes:
+            return metrics
+        payload, header = flit.pack(metrics)
+        reduced = {k: _psum_rep(v, axes) for k, v in payload.items()}
+        for v in payload.values():
+            self._log("psum", axes, _nbytes(v), NARROW,
+                      f"flit-packed metrics x{len(metrics)}")
+        return flit.unpack(reduced, header)
+
+    # -- gradient sync entry (used by the optimizer) ------------------------
+    def grad_policy(self) -> channels.ChannelPolicy:
+        """The collective policy gradient sync rides (paper dual-channel)."""
+        return channels.dual_policy(self.cfg.wide_flit_bytes)

@@ -1,0 +1,94 @@
+"""Gradient compression for the slow inter-pod links.
+
+``grad_compression="int8-pod"`` routes the pod-axis gradient all-reduce
+(the cross-pod DP sync — the slowest links in the system, the paper's
+latency-tolerant wide bulk par excellence) through blockwise-int8
+payloads: each rank quantizes its local partial gradient with per-block
+fp32 scales, the int8 payload + scales ride the wire (~4x fewer bytes
+than fp32), and every rank dequantizes-and-sums the gathered shards.
+Quantizing the *inputs* (not the sum) keeps the reduction associative
+and deterministic across pod orderings; the per-block max-abs scale
+bounds the element error at ``max|x| / 127`` per contribution.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.channels import Ledger, WIDE
+
+_INT8_MAX = 127.0
+_BLOCK = 256
+
+
+def quantize_blockwise(x: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
+    """int8-quantize along the last axis in `block`-sized groups.
+
+    Returns ``(q int8 (same shape), scales f32 (..., last/block))``.
+    Requires ``x.shape[-1] % block == 0``. All-zero blocks get scale 0
+    and decode exactly to 0.
+    """
+    *lead, last = x.shape
+    assert last % block == 0, (x.shape, block)
+    xb = x.astype(jnp.float32).reshape(*lead, last // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / _INT8_MAX
+    q = jnp.where(scale[..., None] > 0.0, xb / scale[..., None], 0.0)
+    q = jnp.clip(jnp.round(q), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array,
+                         block: int) -> jax.Array:
+    *lead, last = q.shape
+    xb = q.reshape(*lead, last // block, block).astype(jnp.float32)
+    return (xb * scale[..., None]).reshape(q.shape)
+
+
+def compressed_all_reduce(x: jax.Array, axes: Sequence[tuple[str, int]], *,
+                          ledger: Ledger | None = None,
+                          wide_flit_bytes: int = 65536) -> jax.Array:
+    """All-reduce one array with blockwise-int8 wire format.
+
+    quantize(local) -> all_gather(q, scales) -> sum(dequantize(shards)).
+    Exchanging quantized *inputs* makes the sum order-independent (every
+    rank sums the same shard set), so the result is replicated without a
+    second reduction.
+    """
+    names = tuple(a for a, _ in axes)
+    total = 1
+    for _, s in axes:
+        total *= s
+    if total == 1:
+        return x
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))    # zero-pads quantize exactly
+    block = _BLOCK
+    q, s = quantize_blockwise(flat, block)
+    qg = lax.all_gather(q, names)                      # (total, n_pad) int8
+    sg = lax.all_gather(s, names)                      # (total, n_pad/block)
+    if ledger is not None:
+        wire = int(np.prod(q.shape)) + int(np.prod(s.shape)) * 4
+        ledger.log("all_gather", names, wire * (total - 1), WIDE,
+                   f"int8 grad AR block={block} "
+                   f"(flit threshold {wide_flit_bytes}B)")
+    red = jnp.sum(jax.vmap(dequantize_blockwise, in_axes=(0, 0, None))(
+        qg, sg, block), axis=0)
+    return red[:n].reshape(x.shape).astype(x.dtype)
+
+
+def compressed_all_reduce_tree(leaves: Sequence[jax.Array],
+                               axes: Sequence[tuple[str, int]], *,
+                               ledger: Ledger | None = None,
+                               wide_flit_bytes: int = 65536) -> list[jax.Array]:
+    """Blockwise-int8 all-reduce of a leaf list (the optimizer's per-
+    sync-group entry point for ``grad_compression="int8-pod"``)."""
+    return [compressed_all_reduce(g, axes, ledger=ledger,
+                                  wide_flit_bytes=wide_flit_bytes)
+            for g in leaves]

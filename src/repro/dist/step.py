@@ -1,0 +1,243 @@
+"""Step builders: the shard_map'd programs everything else runs.
+
+``build_train_step`` / ``build_prefill_step`` / ``build_decode_step``
+take a model (``repro.models.transformer.Model``), a ShapeConfig and a
+jax Mesh and return a :class:`StepArtifact`:
+
+* ``fn``          — the jitted shard_map'd step
+* ``param_specs`` / ``opt_specs`` — ParamSpec trees (materialize with
+  ``params.materialize_sharded``)
+* ``in_sds``      — sharded ShapeDtypeStructs so the multi-pod dry-run
+  can ``fn.lower(*in_sds).compile()`` with zero allocation
+* ``backend``     — the Backend whose ledger holds the static
+  collective schedule recorded at trace time
+
+The train step supports ``cfg.microbatches > 1`` by splitting the
+local batch and accumulating gradients over an unrolled microbatch
+loop (averaged, so the result is equivalent to the full-batch step
+when every microbatch carries the same token count).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ShapeConfig
+from . import params as params_lib
+from .backend import Backend
+
+
+@dataclass
+class StepArtifact:
+    fn: Callable
+    param_specs: Any
+    opt_specs: Any | None
+    in_sds: tuple
+    backend: Backend
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _dpx(cfg):
+    dp = cfg.dp_axes_eff
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _vocab_axis(cfg):
+    return None if cfg.flat_dp else "model"
+
+
+def _sharded_sds(sds_tree: Any, spec_tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        sds_tree, spec_tree)
+
+
+def _split_microbatches(batch: dict, m: int) -> list[dict]:
+    """Split the LOCAL batch dim into m microbatches (list of dicts)."""
+    out = []
+    for i in range(m):
+        mb = {}
+        for k, v in batch.items():
+            assert v.shape[0] % m == 0, \
+                f"local batch {v.shape[0]} not divisible by {m} microbatches"
+            sz = v.shape[0] // m
+            mb[k] = jax.lax.slice_in_dim(v, i * sz, (i + 1) * sz, axis=0)
+        out.append(mb)
+    return out
+
+
+def _accumulated_grad_step(model, bk: Backend, params, batch, *,
+                           microbatches: int):
+    """value_and_grad over `microbatches` sequential microbatches.
+
+    Returns (loss, metrics, grads) with grads/loss averaged over the
+    microbatches. Correctness note: the model's loss is normalized by
+    the globally-psum'd token count, so any *replication* in the batch
+    sharding (e.g. the pipeline schedule replicating over `pod`)
+    automatically shrinks per-rank cotangents by the replication factor
+    — the later sync psum then restores exactly the true gradient, with
+    no explicit rescale.
+    """
+    def loss_of(p, b):
+        return model.loss_fn(p, b, bk)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+    m = max(1, microbatches)
+    if m == 1:
+        (loss, mets), grads = grad_fn(params, batch)
+        return loss, mets, grads
+
+    # 1F1B-shaped accumulation: microbatch i+1's forward is issued after
+    # microbatch i's backward; unrolled (m is small) so XLA may overlap.
+    loss_acc, mets_acc, grads_acc = None, None, None
+    for mb in _split_microbatches(batch, m):
+        (loss, mets), grads = grad_fn(params, mb)
+        if grads_acc is None:
+            loss_acc, mets_acc, grads_acc = loss, mets, grads
+        else:
+            loss_acc = loss_acc + loss
+            mets_acc = jax.tree.map(jnp.add, mets_acc, mets)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+    inv = 1.0 / m
+    return (loss_acc * inv,
+            jax.tree.map(lambda x: x * inv, mets_acc),
+            jax.tree.map(lambda g: g * inv, grads_acc))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+def build_train_step(model, shape: ShapeConfig, mesh, acfg=None,
+                     *, batch_specs: Any | None = None) -> StepArtifact:
+    """One optimizer step: fwd + bwd + policy-driven grad sync + AdamW.
+
+    ``fn(params, opt_state, step, batch) -> (params, opt_state, metrics)``
+    with metrics carrying at least ``loss`` and ``grad_norm``.
+
+    ``batch_specs`` is the pipeline schedule's hook: it overrides the
+    input sharding (e.g. batch replicated over `pod`, sharded over
+    `data` only).
+    """
+    from ..train import optimizer as opt_mod   # deferred: import cycle
+
+    cfg = model.cfg
+    if acfg is None:
+        acfg = opt_mod.AdamWConfig(lr=cfg.learning_rate,
+                                   weight_decay=cfg.weight_decay)
+    param_specs = model.param_specs()
+    opt_specs = opt_mod.opt_state_specs(param_specs, cfg)
+    p_ps = params_lib.tree_pspecs(param_specs)
+    o_ps = params_lib.tree_pspecs(opt_specs)
+    batch_sds, in_batch_specs = model.input_specs(shape)
+    if batch_specs is not None:
+        in_batch_specs = batch_specs
+    bk = Backend(cfg)
+
+    def step(params, opt_state, stepno, batch):
+        loss, mets, grads = _accumulated_grad_step(
+            model, bk, params, batch, microbatches=cfg.microbatches)
+        new_p, new_o, stats = opt_mod.adamw_update(
+            params, grads, opt_state, stepno, cfg, acfg, p_ps, bk)
+        metrics = {"loss": loss, **mets, **stats}
+        return new_p, new_o, metrics
+
+    smapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(p_ps, o_ps, P(), in_batch_specs),
+        out_specs=(p_ps, o_ps, P()),
+        check_vma=False)
+    fn = jax.jit(smapped)
+
+    in_sds = (
+        _sharded_sds(params_lib.tree_sds(param_specs), p_ps, mesh),
+        _sharded_sds(params_lib.tree_sds(opt_specs), o_ps, mesh),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        _sharded_sds(batch_sds, in_batch_specs, mesh),
+    )
+    return StepArtifact(fn=fn, param_specs=param_specs, opt_specs=opt_specs,
+                        in_sds=in_sds, backend=bk)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+def build_prefill_step(model, shape: ShapeConfig, mesh) -> StepArtifact:
+    """``fn(params, batch) -> (last-token logits (B,1,V_loc), caches)``."""
+    cfg = model.cfg
+    param_specs = model.param_specs()
+    p_ps = params_lib.tree_pspecs(param_specs)
+    batch_sds, batch_specs = model.input_specs(shape)
+    _, cache_specs = model.cache_specs(shape, split_kv=False)
+    bk = Backend(cfg)
+    dpx = _dpx(cfg)
+    logits_spec = P(dpx, None, _vocab_axis(cfg))
+
+    def pre(params, batch):
+        return model.prefill(params, batch, bk)
+
+    smapped = jax.shard_map(
+        pre, mesh=mesh,
+        in_specs=(p_ps, batch_specs),
+        out_specs=(logits_spec, cache_specs),
+        check_vma=False)
+    fn = jax.jit(smapped)
+
+    in_sds = (
+        _sharded_sds(params_lib.tree_sds(param_specs), p_ps, mesh),
+        _sharded_sds(batch_sds, batch_specs, mesh),
+    )
+    return StepArtifact(fn=fn, param_specs=param_specs, opt_specs=None,
+                        in_sds=in_sds, backend=bk)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def build_decode_step(model, shape: ShapeConfig, mesh,
+                      *, split_kv: bool | None = None) -> StepArtifact:
+    """``fn(params, caches, tokens (B,1), pos) -> (logits, new caches)``.
+
+    ``split_kv=True`` shards the cache *sequence* dim over `data`
+    (small-batch decode: every rank attends to its cache slice, the
+    partial softmax stats combine with narrow psums).
+    """
+    cfg = model.cfg
+    if split_kv is None:
+        split_kv = model._auto_split_kv(shape)
+    param_specs = model.param_specs()
+    p_ps = params_lib.tree_pspecs(param_specs)
+    in_sds_d, in_specs_d = model.input_specs(shape, split_kv=split_kv)
+    cache_sds, cache_specs = model.cache_specs(shape, split_kv=split_kv)
+    bk = Backend(cfg)
+    dpx = _dpx(cfg)
+    batch_spec = None if split_kv else dpx
+    logits_spec = P(batch_spec, None, _vocab_axis(cfg))
+
+    def dec(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos, bk,
+                                 split_kv=split_kv)
+
+    smapped = jax.shard_map(
+        dec, mesh=mesh,
+        in_specs=(p_ps, cache_specs, in_specs_d["tokens"], P()),
+        out_specs=(logits_spec, cache_specs),
+        check_vma=False)
+    fn = jax.jit(smapped)
+
+    in_sds = (
+        _sharded_sds(params_lib.tree_sds(param_specs), p_ps, mesh),
+        _sharded_sds(cache_sds, cache_specs, mesh),
+        jax.ShapeDtypeStruct(in_sds_d["tokens"].shape, jnp.int32,
+                             sharding=NamedSharding(
+                                 mesh, in_specs_d["tokens"])),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return StepArtifact(fn=fn, param_specs=param_specs, opt_specs=None,
+                        in_sds=in_sds, backend=bk)

@@ -1,0 +1,17 @@
+"""Pallas-TPU version compat.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` across
+JAX versions; resolve whichever the installed JAX provides so the next
+rename is a one-line fix here instead of a sweep over every kernel.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

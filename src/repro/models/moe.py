@@ -116,14 +116,31 @@ def _dispatch(x_tok, topk_idx, topk_p, E: int, C: int):
     return buf, combine, frac_dropped
 
 
+def _capacity(T: int, mcfg: ModelConfig, mode: str) -> int:
+    """Per-expert capacity. Training uses the GShard capacity factor
+    (overflow drops, residual carries); prefill/decode size for the
+    worst case so inference is drop-free — capacity dropping is a
+    throughput/quality trade for training, but at serving time it
+    breaks prefill->decode consistency (the LAST tokens overflow
+    first, i.e. exactly the ones decode continues from)."""
+    if mode == "train":
+        C = int(np.ceil(T * mcfg.top_k * mcfg.capacity_factor /
+                        mcfg.num_experts))
+    else:
+        C = T * mcfg.top_k
+    return max(8, -(-C // 8) * 8)
+
+
 def apply_moe(p, x_sp: jax.Array, x_full: jax.Array | None, bk: Backend,
-              cfg: RunConfig, mcfg: ModelConfig, *, sp: bool = True):
+              cfg: RunConfig, mcfg: ModelConfig, *, sp: bool = True,
+              mode: str = "train"):
     """MoE FF. Returns (delta (B,S_loc,d), aux) — already reduced.
 
     x_sp: sequence-sharded input (B, S_loc, d) — used by the EP path.
     x_full: gathered input (B, S, d) or None — used by the TP path (the
     caller reuses the block's AG; partial output is reduced here).
     sp: sequence-parallel mode (train/prefill); decode reduces with psum.
+    mode: train | prefill | decode (capacity sizing; see _capacity).
     """
     E = mcfg.num_experts
     ep = E % bk.model == 0
@@ -137,8 +154,7 @@ def apply_moe(p, x_sp: jax.Array, x_full: jax.Array | None, bk: Backend,
         topk_idx, topk_p, aux = _route(_router_logits(p, x_tok), mcfg)
         # objective = mean over rank-chunks; psum_inv keeps grads per-chunk
         aux = {k: bk.psum_model(v) / bk.model for k, v in aux.items()}
-        C = int(np.ceil(T * mcfg.top_k * mcfg.capacity_factor / E))
-        C = max(8, -(-C // 8) * 8)
+        C = _capacity(T, mcfg, mode)
         buf, combine, dropped = _dispatch(x_tok, topk_idx, topk_p, E, C)
         # wide burst: (E, C, d) -> rows regrouped by owner rank
         buf = bk.a2a_model(buf, split_dim=0, concat_dim=1)   # (E_loc, model*C, d)
@@ -166,8 +182,7 @@ def apply_moe(p, x_sp: jax.Array, x_full: jax.Array | None, bk: Backend,
     logits_sp = _router_logits(p, x_sp)            # (B, S_loc, E) or (B,1,E)
     logits = (bk.seq_ag(logits_sp, dim=1) if sp else logits_sp).reshape(T, E)
     topk_idx, topk_p, aux = _route(logits, mcfg)
-    C = int(np.ceil(T * mcfg.top_k * mcfg.capacity_factor / E))
-    C = max(8, -(-C // 8) * 8)
+    C = _capacity(T, mcfg, mode)
     buf, combine, dropped = _dispatch(x_tok, topk_idx, topk_p, E, C)
     y = _expert_ff(jax.tree.map(lambda w: w.astype(dt), p), buf, mcfg)
     delta = combine(y).reshape(B, S, d)       # partial over model (ff-sharded)

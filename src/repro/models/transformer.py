@@ -277,7 +277,7 @@ class Model:
             h2_full = gather(h2) if (self.mcfg.num_experts % bk.model != 0
                                      or self.mcfg.shared_expert) else None
             delta, moe_aux = moe_mod.apply_moe(p["moe"], h2, h2_full, bk,
-                                               cfg, mcfg, sp=sp)
+                                               cfg, mcfg, sp=sp, mode=mode)
             x = x + delta.astype(x.dtype)   # reduced inside apply_moe
             aux.update(moe_aux)
         else:

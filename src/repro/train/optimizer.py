@@ -76,8 +76,7 @@ def sync_grads(grads: Any, pspecs: Any, bk: Backend) -> Any:
                 wide_flit_bytes=bk.cfg.wide_flit_bytes)
         elif bk.is_floo:
             red = channels.multi_channel_all_reduce(
-                sub, sizes,
-                policy=channels.dual_policy(bk.cfg.wide_flit_bytes),
+                sub, sizes, policy=bk.grad_policy(),
                 bidir=bk.cfg.bidir_rings, ledger=bk.ledger)
         else:
             names = tuple(a for a, _ in sizes)

@@ -25,18 +25,9 @@ except ImportError:
 from repro.core import channels, flit  # noqa: E402
 from repro.core.routing import _merge, _split  # noqa: E402
 
-# subsystems not present in every checkout: gate, don't fail collection
-try:
-    from repro.dist.compression import (dequantize_blockwise,
-                                        quantize_blockwise)
-    HAVE_DIST = True
-except ImportError:
-    HAVE_DIST = False
-try:
-    from repro.models.layers import HeadPlan
-    HAVE_MODELS = True
-except ImportError:
-    HAVE_MODELS = False
+from repro.dist.compression import (dequantize_blockwise,  # noqa: E402
+                                    quantize_blockwise)
+from repro.models.layers import HeadPlan  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -109,7 +100,6 @@ def test_split_merge_semantics(n, c, dim):
 # ---------------------------------------------------------------------------
 # blockwise int8 quantization (property: bounded relative error)
 # ---------------------------------------------------------------------------
-@pytest.mark.skipif(not HAVE_DIST, reason="repro.dist not available")
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 8), st.floats(0.01, 100.0))
 def test_quant_error_bound(nblocks, scale):
@@ -125,8 +115,6 @@ def test_quant_error_bound(nblocks, scale):
 # ---------------------------------------------------------------------------
 # HeadPlan (property: every real q head maps to a stored kv head)
 # ---------------------------------------------------------------------------
-@pytest.mark.skipif(not HAVE_MODELS, reason="repro.models import fails "
-                    "(pulls in repro.dist)")
 @settings(max_examples=60, deadline=None)
 @given(st.integers(1, 64), st.integers(1, 16), st.sampled_from([1, 2, 4, 8, 16]))
 def test_head_plan_covers(hq, hkv, model):

@@ -8,10 +8,8 @@ import pytest
 from repro.configs import ARCHS, ShapeConfig
 from repro.configs.base import MeshConfig, RunConfig
 
-# seed gap: repro.dist is not in the tree yet — skip, don't break collection
-pytest.importorskip("repro.dist", reason="repro.dist subsystem missing")
-from repro.dist import params as params_lib, step as step_lib  # noqa: E402
-from repro.models import build_model  # noqa: E402
+from repro.dist import params as params_lib, step as step_lib
+from repro.models import build_model
 
 MESH = None
 

@@ -5,10 +5,7 @@ import pytest
 from repro.configs import get_arch, ShapeConfig
 from repro.configs.base import MeshConfig, RunConfig
 
-# seed gap: repro.serve pulls in the missing repro.dist — skip, don't
-# break collection
-pytest.importorskip("repro.dist", reason="repro.dist subsystem missing")
-from repro.serve import Engine  # noqa: E402
+from repro.serve import Engine
 
 
 @pytest.fixture(scope="module")

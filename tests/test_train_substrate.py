@@ -7,15 +7,11 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch, ShapeConfig
 from repro.configs.base import MeshConfig, RunConfig
 
-# seed gap: repro.train pulls in the missing repro.dist — skip, don't
-# break collection
-pytest.importorskip("repro.dist", reason="repro.dist subsystem missing")
-from repro.train import optimizer as opt_mod  # noqa: E402
+from repro.train import optimizer as opt_mod
 from repro.train.data import Prefetcher, SyntheticLM
 from repro.train.elastic import choose_mesh, degraded_meshes
 from repro.train.straggler import SimulatedCluster, StepTimer
