@@ -1,0 +1,437 @@
+"""PINNED pre-fusion engine — the perf baseline, not a product path.
+
+This is a frozen, self-contained copy of the cycle engine as it stood
+before the fused-hot-loop PR: Python-unrolled per-class/per-queue NI
+updates (6 scatters per ``_q_push``, per-class ``col``-masked metric
+updates), a per-output-port scatter loop in the fabric step, one
+separate ``lax.scan`` body per physical channel, and a static FIFO
+depth baked into the compilation.  ``bench_engine_throughput`` in
+``run.py`` times it against the live engine in the same process so
+BENCH_noc.json records a real before/after speedup instead of numbers
+measured on different machines.
+
+Do not "fix" or modernize this file — its whole value is staying
+identical to commit d5128ae's hot path.  It shares only the flit-field
+constants and NocSpec surface with the live code; everything hot is
+local.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noc_sim.router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME,
+                                       F_TXN, N_FIELDS)
+from repro.noc.engine import (build_channel_plan, req_kind, rsp_kind,
+                              ChannelPlan)
+from repro.noc.spec import NocSpec
+
+RESP_Q_CAP = 256
+BIG = 1 << 30
+NO_PORT = 99
+
+
+class NetState(NamedTuple):
+    fifo: jax.Array     # (R, P, D, F)
+    count: jax.Array    # (R, P)
+    rr_ptr: jax.Array   # (R, P)
+    oreg: jax.Array     # (R, P, F)
+    oreg_v: jax.Array   # (R, P)
+    lock_in: jax.Array  # (R, P)
+
+
+def init_fabric_state(R: int, P: int, depth: int = 2) -> NetState:
+    return NetState(
+        fifo=jnp.zeros((R, P, depth, N_FIELDS), jnp.int32),
+        count=jnp.zeros((R, P), jnp.int32),
+        rr_ptr=jnp.zeros((R, P), jnp.int32),
+        oreg=jnp.zeros((R, P, N_FIELDS), jnp.int32),
+        oreg_v=jnp.zeros((R, P), jnp.bool_),
+        lock_in=jnp.full((R, P), -1, jnp.int32),
+    )
+
+
+def arbiter_jnp(out_port, beat, rr_ptr, oreg_free, lock_in):
+    R, P = out_port.shape
+    o_ids = jnp.arange(P)[None, None, :]
+    i_ids = jnp.arange(P)[None, :, None]
+    req = (out_port[:, :, None] == o_ids) & oreg_free.astype(bool)[:, None, :]
+    locked = lock_in[:, None, :] >= 0
+    req &= (~locked) | (i_ids == lock_in[:, None, :])
+
+    prio = (i_ids - rr_ptr[:, None, :]) % P
+    score = jnp.where(req, prio, NO_PORT)
+    best = jnp.min(score, axis=1)
+    granted = best < NO_PORT
+    is_best = (score == best[:, None, :]) & req
+    winner = jnp.argmax(is_best.astype(jnp.int32), axis=1)
+    winner = jnp.where(granted, winner, -1)
+
+    pop = jnp.any((i_ids == winner[:, None, :]) & granted[:, None, :], axis=2)
+    new_ptr = jnp.where(granted & (lock_in < 0), (winner + 1) % P, rr_ptr)
+
+    w_beat = jnp.sum(jnp.where((i_ids == winner[:, None, :])
+                               & granted[:, None, :], beat[:, :, None], 0),
+                     axis=1)
+    new_lock = jnp.where(granted & (w_beat > 1), winner,
+                         jnp.where(granted, -1, lock_in))
+    return winner, pop, new_ptr, new_lock
+
+
+def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray):
+    """Pre-PR fabric step: per-output-port scatter loop, static depth."""
+    R, P = nbr.shape
+    PORT_L = P - 1
+    nbr_j = jnp.asarray(nbr, jnp.int32)
+    opp_j = jnp.asarray(opp, jnp.int32)
+    route_j = jnp.asarray(route, jnp.int32)
+    r_idx = jnp.arange(R)
+
+    def step(state: NetState, inject_valid, inject_flit):
+        D = state.fifo.shape[2]
+        heads = state.fifo[:, :, 0, :]
+        head_valid = state.count > 0
+
+        ds_count = state.count[jnp.clip(nbr_j, 0, R - 1), opp_j]
+        can_drain = jnp.where(jnp.arange(P)[None, :] == PORT_L,
+                              True,
+                              (nbr_j >= 0) & (ds_count < D))
+        drain = state.oreg_v & can_drain
+
+        deliver_valid = drain[:, PORT_L]
+        deliver_flit = state.oreg[:, PORT_L, :]
+
+        recv_valid = jnp.zeros((R, P), jnp.bool_)
+        recv_flit = jnp.zeros((R, P, N_FIELDS), jnp.int32)
+        tgt_r = jnp.where(nbr_j >= 0, nbr_j, 0)
+        for o in range(P - 1):
+            v = drain[:, o]
+            recv_valid = recv_valid.at[tgt_r[:, o], opp_j[:, o]].max(v)
+            recv_flit = recv_flit.at[tgt_r[:, o], opp_j[:, o]].add(
+                jnp.where(v[:, None], state.oreg[:, o, :], 0))
+
+        local_ready = state.count[:, PORT_L] < D
+        inj_ok = inject_valid & local_ready
+        recv_valid = recv_valid.at[:, PORT_L].set(inj_ok)
+        recv_flit = recv_flit.at[:, PORT_L].set(
+            jnp.where(inj_ok[:, None], inject_flit, 0))
+
+        oreg_free = (~state.oreg_v) | drain
+        out_port = route_j[r_idx[:, None], heads[:, :, F_DEST]]
+        out_port = jnp.where(head_valid, out_port, NO_PORT)
+        winner, pop, new_ptr, new_lock = arbiter_jnp(
+            out_port, heads[:, :, F_BEAT], state.rr_ptr, oreg_free,
+            state.lock_in)
+
+        any_grant = winner >= 0
+        flit_to_oreg = heads[r_idx[:, None], jnp.clip(winner, 0)]
+        new_oreg_v = (state.oreg_v & ~drain) | any_grant
+        new_oreg = jnp.where(any_grant[:, :, None], flit_to_oreg, state.oreg)
+
+        shifted = jnp.concatenate(
+            [state.fifo[:, :, 1:, :],
+             jnp.zeros_like(state.fifo[:, :, :1, :])], axis=2)
+        fifo = jnp.where(pop[:, :, None, None], shifted, state.fifo)
+        count = state.count - pop.astype(jnp.int32)
+
+        slot = jnp.clip(count, 0, D - 1)
+        write = recv_valid & (count < D)
+        onehot_slot = jax.nn.one_hot(slot, D, dtype=jnp.bool_)
+        sel = write[:, :, None] & onehot_slot
+        fifo = jnp.where(sel[..., None], recv_flit[:, :, None, :], fifo)
+        count = count + write.astype(jnp.int32)
+
+        new_state = NetState(fifo=fifo, count=count, rr_ptr=new_ptr,
+                             oreg=new_oreg, oreg_v=new_oreg_v,
+                             lock_in=new_lock)
+        link_moves = jnp.sum(drain.astype(jnp.int32)
+                             * (jnp.arange(P)[None, :] != PORT_L))
+        return new_state, inj_ok, deliver_valid, deliver_flit, link_moves
+
+    return step
+
+
+class NIState(NamedTuple):
+    ptr: jax.Array
+    out: jax.Array
+    rq_head: jax.Array
+    rq_tail: jax.Array
+    rq_ready: jax.Array
+    rq_dest: jax.Array
+    rq_beats: jax.Array
+    rq_time0: jax.Array
+    rq_txn: jax.Array
+    rq_kind: jax.Array
+    w_started: jax.Array
+    inj_rr: jax.Array
+    lat_sum: jax.Array
+    lat_max: jax.Array
+    done: jax.Array
+    beats_rx: jax.Array
+    first_t: jax.Array
+    last_t: jax.Array
+
+
+class SimState(NamedTuple):
+    nets: tuple
+    ni: NIState
+    cycle: jax.Array
+    moves: jax.Array
+
+
+def init_ni(R: int, topo: ChannelPlan) -> NIState:
+    zc = jnp.zeros((R, topo.n_cls), jnp.int32)
+    zq = jnp.zeros((R, topo.n_q), jnp.int32)
+    zqc = jnp.zeros((R, topo.n_q, RESP_Q_CAP), jnp.int32)
+    return NIState(
+        ptr=zc, out=zc, rq_head=zq, rq_tail=zq, rq_ready=zqc, rq_dest=zqc,
+        rq_beats=zqc, rq_time0=zqc, rq_txn=zqc, rq_kind=zqc,
+        w_started=jnp.zeros((R, topo.n_q), jnp.bool_),
+        inj_rr=jnp.zeros((R, topo.n_ch), jnp.int32),
+        lat_sum=zc, lat_max=zc, done=zc, beats_rx=zc,
+        first_t=jnp.full((R, topo.n_cls), BIG, jnp.int32), last_t=zc)
+
+
+def _q_push(ni, q, valid, dest, beats, time0, txn, ready_at, kind):
+    rows = jnp.arange(valid.shape[0])
+    slot = ni.rq_tail[:, q] % RESP_Q_CAP
+
+    def upd(arr, val):
+        return arr.at[rows, q, slot].set(
+            jnp.where(valid, val, arr[rows, q, slot]))
+
+    return ni._replace(
+        rq_ready=upd(ni.rq_ready, ready_at),
+        rq_dest=upd(ni.rq_dest, dest),
+        rq_beats=upd(ni.rq_beats, beats),
+        rq_time0=upd(ni.rq_time0, time0),
+        rq_txn=upd(ni.rq_txn, txn),
+        rq_kind=upd(ni.rq_kind, kind),
+        rq_tail=ni.rq_tail.at[:, q].add(valid.astype(jnp.int32)),
+    )
+
+
+def _q_head(ni, q, now):
+    rows = jnp.arange(ni.rq_head.shape[0])
+    have = ni.rq_head[:, q] < ni.rq_tail[:, q]
+    slot = ni.rq_head[:, q] % RESP_Q_CAP
+    ready = have & (ni.rq_ready[rows, q, slot] <= now)
+    return {
+        "ready": ready,
+        "dest": ni.rq_dest[rows, q, slot],
+        "beats": ni.rq_beats[rows, q, slot],
+        "time0": ni.rq_time0[rows, q, slot],
+        "txn": ni.rq_txn[rows, q, slot],
+        "kind": ni.rq_kind[rows, q, slot],
+    }
+
+
+def _q_sent(ni, q, sent):
+    rows = jnp.arange(sent.shape[0])
+    slot = ni.rq_head[:, q] % RESP_Q_CAP
+    left = ni.rq_beats[rows, q, slot] - sent.astype(jnp.int32)
+    return ni._replace(
+        rq_beats=ni.rq_beats.at[rows, q, slot].set(
+            jnp.where(sent, left, ni.rq_beats[rows, q, slot])),
+        rq_head=ni.rq_head.at[:, q].add(
+            (sent & (left <= 0)).astype(jnp.int32)),
+        w_started=ni.w_started.at[:, q].set(
+            jnp.where(sent, left > 0, ni.w_started[:, q])),
+    )
+
+
+def make_step(spec: NocSpec, topo: ChannelPlan, T: int, net_step):
+    R = spec.n_routers
+    rows = jnp.arange(R)
+
+    def mk_flit(valid, dest, src, time, kind, txn, beat):
+        f = jnp.zeros((R, N_FIELDS), jnp.int32)
+        z = jnp.int32(0)
+        for idx, val in ((F_DEST, dest), (F_SRC, src), (F_TIME, time),
+                         (F_KIND, kind), (F_TXN, txn), (F_BEAT, beat)):
+            f = f.at[:, idx].set(jnp.where(valid, val, z))
+        return f
+
+    def step(dyn, state: SimState, _):
+        times, dests = dyn["times"], dyn["dests"]
+        service_lat = dyn["service_lat"]
+        max_out, burst_beats = dyn["max_out"], dyn["burst_beats"]
+        ni = state.ni
+        now = state.cycle
+
+        want, req_d = [], []
+        for i in range(topo.n_cls):
+            p = jnp.clip(ni.ptr[:, i], 0, T - 1)
+            want.append((ni.ptr[:, i] < T) & (times[i, rows, p] <= now)
+                        & (ni.out[:, i] < max_out[i]))
+            req_d.append(dests[i, rows, p])
+
+        heads = [_q_head(ni, q, now) for q in range(topo.n_q)]
+
+        injected = [jnp.zeros((R,), jnp.bool_) for _ in range(topo.n_cls)]
+        sent = [jnp.zeros((R,), jnp.bool_) for _ in range(topo.n_q)]
+        new_nets, deliveries, moves = [], [], []
+
+        for c in range(topo.n_ch):
+            reqs, qs = topo.reqs_on[c], topo.queues_on[c]
+            if not reqs and not qs:
+                net, _, dv, df, lm = net_step(
+                    state.nets[c], jnp.zeros((R,), jnp.bool_),
+                    jnp.zeros((R, N_FIELDS), jnp.int32))
+            elif not reqs and len(qs) == 1:
+                q = qs[0]
+                h = heads[q]
+                f = mk_flit(h["ready"], h["dest"], rows, h["time0"],
+                            h["kind"], h["txn"], h["beats"])
+                net, ok, dv, df, lm = net_step(state.nets[c], h["ready"], f)
+                sent[q] = ok & h["ready"]
+            elif reqs and not qs:
+                taken = jnp.zeros((R,), jnp.bool_)
+                sel = []
+                for i in reqs:
+                    s = want[i] & ~taken
+                    sel.append((i, s))
+                    taken = taken | s
+                dest = kind = txn = jnp.zeros((R,), jnp.int32)
+                for i, s in sel:
+                    dest = jnp.where(s, req_d[i], dest)
+                    kind = jnp.where(s, req_kind(i), kind)
+                    txn = jnp.where(s, ni.ptr[:, i], txn)
+                f = mk_flit(taken, dest, rows, now, kind, txn, 1)
+                net, ok, dv, df, lm = net_step(state.nets[c], taken, f)
+                for i, s in sel:
+                    injected[i] = ok & s
+            else:
+                cand = ([("rsp", q) for q in qs]
+                        + [("req", i) for i in reqs])
+                n_cand = len(cand)
+                cand_valid = jnp.stack(
+                    [heads[q]["ready"] for q in qs]
+                    + [want[i] for i in reqs], axis=1)
+                rr = ni.inj_rr[:, c] % n_cand
+                order = (jnp.arange(n_cand)[None, :] + rr[:, None]) % n_cand
+                ordered = jnp.take_along_axis(cand_valid, order, axis=1)
+                first = jnp.argmax(ordered, axis=1)
+                has_any = jnp.any(cand_valid, axis=1)
+                choice = jnp.take_along_axis(order, first[:, None],
+                                             axis=1)[:, 0]
+                hold = jnp.zeros((R,), jnp.bool_)
+                for k, q in enumerate(qs):
+                    hq = ni.w_started[:, q] & (heads[q]["beats"] > 0)
+                    choice = jnp.where(hq & ~hold, k, choice)
+                    hold = hold | hq
+                valid0 = has_any | hold
+
+                sel_masks = []
+                for k, (tag, idx) in enumerate(cand):
+                    gate = heads[idx]["ready"] if tag == "rsp" else want[idx]
+                    sel_masks.append(valid0 & (choice == k) & gate)
+                valid = functools.reduce(jnp.logical_or, sel_masks)
+
+                dest = kind = txn = beat = jnp.zeros((R,), jnp.int32)
+                time = jnp.broadcast_to(now, (R,)).astype(jnp.int32)
+                for (tag, idx), s in zip(cand, sel_masks):
+                    if tag == "rsp":
+                        h = heads[idx]
+                        dest = jnp.where(s, h["dest"], dest)
+                        kind = jnp.where(s, h["kind"], kind)
+                        txn = jnp.where(s, h["txn"], txn)
+                        time = jnp.where(s, h["time0"], time)
+                        beat = jnp.where(s, h["beats"], beat)
+                    else:
+                        dest = jnp.where(s, req_d[idx], dest)
+                        kind = jnp.where(s, req_kind(idx), kind)
+                        txn = jnp.where(s, ni.ptr[:, idx], txn)
+                        beat = jnp.where(s, 1, beat)
+                f = mk_flit(valid, dest, rows, time, kind, txn, beat)
+                net, ok, dv, df, lm = net_step(state.nets[c], valid, f)
+                for (tag, idx), s in zip(cand, sel_masks):
+                    if tag == "rsp":
+                        sent[idx] = sent[idx] | (ok & s)
+                    else:
+                        injected[idx] = ok & s
+                ni = ni._replace(inj_rr=ni.inj_rr.at[:, c].add(
+                    (ok & ~hold).astype(jnp.int32)))
+            new_nets.append(net)
+            deliveries.append((dv, df))
+            moves.append(lm)
+
+        inj = jnp.stack(injected, axis=1).astype(jnp.int32)
+        ni = ni._replace(ptr=ni.ptr + inj, out=ni.out + inj)
+        for q in range(topo.n_q):
+            ni = _q_sent(ni, q, sent[q])
+
+        for c, (dv, df) in enumerate(deliveries):
+            kind = df[:, F_KIND]
+            src = df[:, F_SRC]
+            lat = now - df[:, F_TIME]
+            for i in topo.reqs_on[c]:
+                is_req = dv & (kind == req_kind(i))
+                ni = _q_push(
+                    ni, topo.queue_of_class[i], is_req, src,
+                    jnp.broadcast_to(burst_beats[i], (R,)).astype(jnp.int32),
+                    df[:, F_TIME], df[:, F_TXN], now + service_lat,
+                    jnp.full((R,), rsp_kind(i), jnp.int32))
+            rsp_classes = [i for i in range(topo.n_cls)
+                           if topo.queue_of_class[i] in topo.queues_on[c]]
+            for i in rsp_classes:
+                is_rsp = dv & (kind == rsp_kind(i))
+                last = is_rsp & (df[:, F_BEAT] <= 1)
+                li = last.astype(jnp.int32)
+                col = (jnp.arange(topo.n_cls) == i)
+                ni = ni._replace(
+                    beats_rx=ni.beats_rx + jnp.where(
+                        col, is_rsp.astype(jnp.int32)[:, None], 0),
+                    first_t=jnp.where(
+                        col & is_rsp[:, None],
+                        jnp.minimum(ni.first_t, now), ni.first_t),
+                    last_t=jnp.where(
+                        col & is_rsp[:, None],
+                        jnp.maximum(ni.last_t, now), ni.last_t),
+                    done=ni.done + jnp.where(col, li[:, None], 0),
+                    lat_sum=ni.lat_sum + jnp.where(
+                        col, jnp.where(last, lat, 0)[:, None], 0),
+                    lat_max=jnp.maximum(ni.lat_max, jnp.where(
+                        col, jnp.where(last, lat, 0)[:, None], 0)),
+                    out=ni.out - jnp.where(col, li[:, None], 0),
+                )
+
+        new_moves = state.moves + jnp.stack(moves).astype(jnp.int32)
+        return SimState(tuple(new_nets), ni, now + 1, new_moves), None
+
+    return step
+
+
+@functools.lru_cache(maxsize=16)
+def compiled_sim_baseline(spec: NocSpec, T: int):
+    """The pre-PR ``compiled_sim``: separate per-channel scan bodies,
+    Python-unrolled NI, scatter-loop fabric, static FIFO depth."""
+    topo = build_channel_plan(spec)
+    nbr, opp, route = spec.topology.tables()
+    fstep = make_fabric_step(nbr, opp, route)
+    step = make_step(spec, topo, T, fstep)
+    R, P = nbr.shape
+
+    @jax.jit
+    def run(times, dests, service_lat, max_out, burst_beats):
+        nets = tuple(init_fabric_state(R, P, ch.depth)
+                     for ch in spec.channels)
+        state = SimState(nets, init_ni(spec.n_routers, topo), jnp.int32(0),
+                         jnp.zeros((topo.n_ch,), jnp.int32))
+        dyn = {"times": times, "dests": dests,
+               "service_lat": service_lat, "max_out": max_out,
+               "burst_beats": burst_beats}
+        final, _ = jax.lax.scan(functools.partial(step, dyn), state, None,
+                                length=spec.cycles)
+        ni = final.ni
+        return {
+            "done": ni.done, "lat_sum": ni.lat_sum, "lat_max": ni.lat_max,
+            "beats_rx": ni.beats_rx, "first_t": ni.first_t,
+            "last_t": ni.last_t, "link_moves": final.moves,
+        }
+
+    return run

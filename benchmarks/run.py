@@ -23,24 +23,33 @@ import numpy as np
 RESULTS: dict[str, dict] = {}
 
 
-def _record(name: str, us: float, **derived):
+def _record(name: str, us: float, compile_us: float | None = None,
+            **derived):
     def _jsonable(v):
         if isinstance(v, (bool, np.bool_)):
             return bool(v)
         if isinstance(v, (int, float, np.integer, np.floating)):
             return float(v)
         return v
-    RESULTS[name] = {"us_per_call": round(us, 1),
+    row = {"us_per_call": round(us, 1)}
+    if compile_us is not None:
+        row["compile_us"] = round(compile_us, 1)
+    RESULTS[name] = {**row,
                      **{k: _jsonable(v) for k, v in derived.items()}}
 
 
 def _timed(fn, *args, repeat=1, **kw):
+    """(out, run_us, compile_us): the first call carries tracing + XLA
+    compilation, steady-state calls don't — report them separately
+    instead of conflating them in one number."""
     t0 = time.perf_counter()
-    out = None
+    out = fn(*args, **kw)
+    first_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
     for _ in range(repeat):
         out = fn(*args, **kw)
-    dt = (time.perf_counter() - t0) / repeat
-    return out, dt * 1e6
+    run_us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, run_us, max(first_us - run_us, 0.0)
 
 
 def bench_zero_load_latency(smoke: bool = False):
@@ -49,10 +58,11 @@ def bench_zero_load_latency(smoke: bool = False):
     spec = NocSpec.narrow_wide(2, 1, cycles=200)
     wl = Workload.make("fig5", rates={"narrow": 0.01},
                        counts={"narrow": 1}, src=0, dst=1)
-    m, us = _timed(simulate, spec, wl)
+    m, us, cus = _timed(simulate, spec, wl)
     lat = float(m.classes["narrow"].avg_lat[0])
     print(f"zero_load_latency,{us:.0f},round_trip_cycles={lat:.0f} (paper=18)")
-    _record("zero_load_latency", us, round_trip_cycles=lat, paper=18)
+    _record("zero_load_latency", us, cus, round_trip_cycles=lat,
+            paper=18)
     return lat
 
 
@@ -77,14 +87,14 @@ def bench_fig5a_latency(smoke: bool = False):
                                  src=0, dst=15, bidir=bidir),
                    Workload.make("fig5", rates={"narrow": 0.05},
                                  counts={"narrow": 100}, src=0, dst=15)]
-            m, us = _timed(simulate_batch, spec, wls)
+            m, us, cus = _timed(simulate_batch, spec, wls)
             lat = float(m.classes["narrow"].avg_lat[0, 0])
             lat0 = float(m.classes["narrow"].avg_lat[1, 0])
             mx = float(m.classes["narrow"].max_lat[0, 0])
             name = f"fig5a_{tag}_{'bidir' if bidir else 'unidir'}"
             print(f"{name},{us:.0f},avg={lat:.0f}cyc({lat/lat0:.2f}x)"
                   f" max={mx:.0f}cyc({mx/lat0:.2f}x)")
-            _record(name, us, avg_cycles=lat, avg_x=lat / lat0,
+            _record(name, us, cus, avg_cycles=lat, avg_x=lat / lat0,
                     max_x=mx / lat0)
             rows.append((tag, bidir, lat / lat0, mx / lat0))
     return rows
@@ -105,13 +115,13 @@ def bench_fig5b_bandwidth(smoke: bool = False):
                                      "wide": n_wide},
                              src=0, dst=5)
                for nrate in (0.0, 1.0)]
-        m, us = _timed(simulate_batch, spec, wls)
+        m, us, cus = _timed(simulate_batch, spec, wls)
         utils = [float(m.classes["wide"].eff_bw[i, 0]) for i in (0, 1)]
         rel = utils[1] / max(utils[0], 1e-9)
         name = f"fig5b_{tag}"
         print(f"{name},{us:.0f},util={utils[1]:.2f} rel={rel:.2f}"
               f" (paper nw>=0.85)")
-        _record(name, us, util=utils[1], rel=rel)
+        _record(name, us, cus, util=utils[1], rel=rel)
         rows.append((tag, utils))
     return rows
 
@@ -124,11 +134,11 @@ def bench_rate_sweep(smoke: bool = False):
     wls = [Workload.make("fig5", rates={"narrow": 0.05, "wide": r},
                          counts={"narrow": 50, "wide": 32},
                          src=0, dst=15) for r in rates]
-    m, us = _timed(simulate_batch, spec, wls)
+    m, us, cus = _timed(simulate_batch, spec, wls)
     bw = [float(m.classes["wide"].eff_bw[i, 0]) for i in range(len(rates))]
     print(f"rate_sweep_vmap,{us:.0f},"
           + " ".join(f"r{r}={b:.2f}" for r, b in zip(rates, bw)))
-    _record("rate_sweep_vmap", us,
+    _record("rate_sweep_vmap", us, cus,
             **{f"bw_at_{r}": b for r, b in zip(rates, bw)})
     return bw
 
@@ -136,10 +146,12 @@ def bench_rate_sweep(smoke: bool = False):
 def bench_backend_channels(smoke: bool = False):
     """Backend x channel-count comparison behind one simulate() surface.
 
-    Times the jnp reference against the Pallas router-arbiter backend
-    on 1-channel (wide-only), 3-channel (paper narrow-wide) and
-    4-channel (2-stream) specs, checks them flit-for-flit equivalent,
-    and records everything into BENCH_noc.json."""
+    Times the jnp reference against the Pallas arbiter kernel and the
+    fused full-cycle kernel on 1-channel (wide-only), 3-channel (paper
+    narrow-wide) and 4-channel (2-stream) specs, checks them
+    flit-for-flit equivalent, and records everything into
+    BENCH_noc.json.  Off-TPU the Pallas backends run interpreted, so
+    their timings measure correctness cost, not kernel speed."""
     from repro.noc import NocSpec, Workload, simulate
     cycles = 1000 if smoke else 3000
     n_wide = 12 if smoke else 48
@@ -152,40 +164,178 @@ def bench_backend_channels(smoke: bool = False):
          {"narrow": 0.05, "wide0": 1.0, "wide1": 1.0},
          {"narrow": 30, "wide0": n_wide // 2, "wide1": n_wide // 2}),
     ]
+    backends = ("jnp", "pallas", "pallas_fused")
     rows = []
     for tag, spec, rates, counts in specs:
         wl = Workload.make("fig5", rates=rates, counts=counts,
                            src=0, dst=15)
         results = {}
-        for backend in ("jnp", "pallas"):
-            simulate(spec, wl, backend=backend)        # compile
-            m, us = _timed(simulate, spec, wl, backend=backend)
-            results[backend] = (m, us)
-        (mj, usj), (mp, usp) = results["jnp"], results["pallas"]
+        for backend in backends:
+            m, us, cus = _timed(simulate, spec, wl, backend=backend)
+            results[backend] = (m, us, cus)
+        mj, usj, cusj = results["jnp"]
         equal = all(
             np.array_equal(getattr(mj.classes[c], f),
-                           getattr(mp.classes[c], f))
+                           getattr(results[b][0].classes[c], f))
+            for b in backends[1:]
             for c in mj.classes
             for f in ("done", "avg_lat", "max_lat", "beats_rx", "eff_bw")
         ) and all(
             np.array_equal(mj.channels[ch].link_moves,
-                           mp.channels[ch].link_moves)
-            for ch in mj.channels)
+                           results[b][0].channels[ch].link_moves)
+            for b in backends[1:] for ch in mj.channels)
         lat = float(mj.classes["narrow"].avg_lat[0])
         name = f"backend_{tag}"
-        print(f"{name},{usj:.0f},jnp={usj:.0f}us pallas={usp:.0f}us "
+        print(f"{name},{usj:.0f},jnp={usj:.0f}us "
+              f"pallas={results['pallas'][1]:.0f}us "
+              f"fused={results['pallas_fused'][1]:.0f}us "
               f"equal={equal} narrow_avg={lat:.0f}cyc")
-        _record(name, usj, pallas_us=usp, backends_equal=equal,
+        _record(name, usj, cusj, pallas_us=results["pallas"][1],
+                pallas_fused_us=results["pallas_fused"][1],
+                backends_equal=equal,
                 narrow_avg_cycles=lat, n_channels=len(spec.channels))
-        rows.append((tag, usj, usp, equal))
+        rows.append((tag, usj, equal))
     assert all(eq for *_, eq in rows), "backend mismatch!"
     return rows
+
+
+def _count_eqns(jaxpr) -> int:
+    """Total jaxpr equations, recursing into scan/jit sub-jaxprs — the
+    trace-size metric the fusion work optimizes."""
+    n = 0
+    for eq in jaxpr.eqns:
+        n += 1
+        for v in eq.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for x in vs:
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    n += _count_eqns(inner)
+                elif hasattr(x, "eqns"):
+                    n += _count_eqns(x)
+    return n
+
+
+def _scan_body_eqns(jaxpr) -> int:
+    """Equation count of the innermost scan body — per-cycle HLO ops."""
+    for eq in jaxpr.eqns:
+        for v in eq.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for x in vs:
+                inner = getattr(x, "jaxpr", None)
+                inner = inner if inner is not None and hasattr(
+                    inner, "eqns") else (x if hasattr(x, "eqns") else None)
+                if inner is None:
+                    continue
+                if eq.primitive.name == "scan":
+                    return len(inner.eqns)
+                found = _scan_body_eqns(inner)
+                if found:
+                    return found
+    return 0
+
+
+def bench_engine_throughput(smoke: bool = False):
+    """Perf tentpole bench: the fused hot loop vs the PINNED pre-PR
+    engine (``_baseline_engine.py``), measured in the same process on
+    bit-identical workloads.
+
+    Records router steps/sec, run vs compile wall time, per-cycle HLO
+    op count (scan-body jaxpr equations), the >=3x speedup target on
+    the fig5 preset, a backend x mesh x channel-count steps/sec grid,
+    and the one-compilation depth-sweep cost per point."""
+    import jax
+    from repro.noc import NocSpec, Workload, sim_cache_clear, \
+        sim_cache_stats, simulate, sweep
+    from repro.noc.api import _depths, _dyn_scalars, stack_schedules
+    from repro.noc.engine import compiled_sim
+    import _baseline_engine as baseline
+
+    cycles = 1500 if smoke else 4000
+    spec = NocSpec.narrow_wide(4, 4, cycles=cycles)
+    wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
+                       counts={"narrow": 100, "wide": 64},
+                       src=0, dst=15, bidir=True)
+    times, dests = stack_schedules(spec, wl.schedules(spec))
+    sl, mo, bb = _dyn_scalars(spec, None, None, None)
+    T = times.shape[-1]
+
+    new_fn = compiled_sim(spec, T)
+    old_fn = baseline.compiled_sim_baseline(spec, T)
+    new_args = (times, dests, sl, mo, bb, _depths(spec))
+    old_args = (times, dests, sl, mo, bb)
+    block = jax.block_until_ready
+    out_new, run_new, comp_new = _timed(
+        lambda: block(new_fn(*new_args)), repeat=3)
+    out_old, run_old, comp_old = _timed(
+        lambda: block(old_fn(*old_args)), repeat=3)
+    equal = all(np.array_equal(np.asarray(out_new[k]),
+                               np.asarray(out_old[k])) for k in out_new)
+    assert equal, "fused engine diverged from the pinned baseline!"
+
+    sps_new = cycles / (run_new / 1e6)
+    sps_old = cycles / (run_old / 1e6)
+    speedup = run_old / run_new
+    jp_new = jax.make_jaxpr(new_fn)(*new_args).jaxpr
+    jp_old = jax.make_jaxpr(old_fn)(*old_args).jaxpr
+    eq_new, cyc_new = _count_eqns(jp_new), _scan_body_eqns(jp_new)
+    eq_old, cyc_old = _count_eqns(jp_old), _scan_body_eqns(jp_old)
+    print(f"engine_throughput,{run_new:.0f},steps/s={sps_new:,.0f} "
+          f"(baseline {sps_old:,.0f}) speedup={speedup:.2f}x "
+          f"scan_body_eqns={cyc_new} (baseline {cyc_old}) "
+          f"compile={comp_new/1e3:.0f}ms (baseline {comp_old/1e3:.0f}ms)")
+    if speedup < 3.0:
+        print(f"# WARNING: fig5 speedup {speedup:.2f}x below the 3x target")
+    _record("bench_engine_throughput", run_new, comp_new,
+            steps_per_sec=sps_new, baseline_steps_per_sec=sps_old,
+            speedup_x=speedup, baseline_us_per_call=run_old,
+            baseline_compile_us=comp_old, results_equal=equal,
+            scan_body_eqns=cyc_new, baseline_scan_body_eqns=cyc_old,
+            total_trace_eqns=eq_new, baseline_total_trace_eqns=eq_old,
+            cycles=cycles)
+
+    # backend x mesh x channel-count steps/sec grid (interpret-mode
+    # Pallas off-TPU: correctness cost, not kernel speed)
+    grid_cycles = 300 if smoke else 1000
+    grid = [("jnp", 4, NocSpec.narrow_wide, "3ch"),
+            ("jnp", 8, NocSpec.narrow_wide, "3ch"),
+            ("jnp", 4, NocSpec.wide_only, "1ch"),
+            ("pallas", 4, NocSpec.narrow_wide, "3ch"),
+            ("pallas_fused", 4, NocSpec.narrow_wide, "3ch"),
+            ("pallas_fused", 4, NocSpec.wide_only, "1ch")]
+    for backend, n, preset, tag in grid:
+        gspec = preset(n, n, cycles=grid_cycles)
+        gwl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
+                            counts={"narrow": 30, "wide": 12},
+                            src=0, dst=n * n - 1)
+        _, us, cus = _timed(simulate, gspec, gwl, backend=backend)
+        sps = grid_cycles / (us / 1e6)
+        name = f"engine_grid_{backend}_{n}x{n}_{tag}"
+        print(f"{name},{us:.0f},steps/s={sps:,.0f}")
+        _record(name, us, cus, steps_per_sec=sps, mesh=n,
+                n_channels=len(gspec.channels))
+
+    # one-compilation FIFO-depth sweep: wall per point, compiles counted
+    depths = (2, 3, 4, 6)
+    dwl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                        counts={"narrow": 20, "wide": 8}, src=0, dst=15)
+    pts = [(NocSpec.narrow_wide(4, 4, depth=d, cycles=grid_cycles), dwl)
+           for d in depths]
+    sim_cache_clear()
+    _, us, cus = _timed(sweep, pts)
+    compiles = sim_cache_stats()["misses"]
+    print(f"depth_sweep,{us / len(pts):.0f},points={len(pts)} "
+          f"compiles={compiles} wall_per_point_us={us / len(pts):.0f}")
+    _record("depth_sweep", us / len(pts), cus,
+            points=len(pts), compiles=compiles)
+    assert compiles == 1, f"depth sweep compiled {compiles}x, expected 1"
+    return speedup
 
 
 def bench_table1_links(smoke: bool = False):
     """Table I / section VI-B: link sizing and peak bandwidth."""
     from repro.core.noc_sim import PAPER
-    _, us = _timed(lambda: None)
+    _, us, _ = _timed(lambda: None)
     gbps = PAPER.wide_link_gbps()
     tbps = PAPER.wide_link_duplex_tbps()
     agg = PAPER.mesh_boundary_bandwidth_tbs(7, 7)
@@ -205,7 +355,7 @@ def bench_table1_links(smoke: bool = False):
 def bench_fig6_area_energy(smoke: bool = False):
     """Fig. 6: area/power breakdown + 0.19 pJ/B/hop."""
     from repro.core.noc_sim import PAPER
-    _, us = _timed(lambda: None)
+    _, us, _ = _timed(lambda: None)
     frac = PAPER.noc_area_fraction()
     e = PAPER.energy_pj(1024, 1)
     print(f"fig6_noc_area_fraction,{us:.0f},{frac:.2f} (paper 0.10)")
@@ -220,10 +370,11 @@ def bench_straggler_sim(smoke: bool = False):
     """Straggler mitigation at 1024 hosts (DESIGN section 7)."""
     from repro.train.straggler import SimulatedCluster
     sim = SimulatedCluster(n_hosts=128 if smoke else 1024)
-    rep, us = _timed(sim.report)
+    rep, us, cus = _timed(sim.report)
     for pol, r in rep.items():
         print(f"straggler_{pol},{us:.0f},p50={r['p50']:.3f} p99={r['p99']:.3f}")
-        _record(f"straggler_{pol}", us, p50=r["p50"], p99=r["p99"])
+        _record(f"straggler_{pol}", us, cus, p50=r["p50"],
+                p99=r["p99"])
     return rep
 
 
@@ -249,13 +400,16 @@ def bench_train_step(smoke: bool = False):
     opt = params_lib.materialize_sharded(art.opt_specs, key, mesh)
     toks = jax.random.randint(key, (4, 64), 0, mcfg.vocab_size, jnp.int32)
     batch = {"tokens": toks, "labels": toks}
+    t0 = time.perf_counter()
     params, opt, m = art.fn(params, opt, jnp.int32(0), batch)   # compile
-    (_, _, m), us = _timed(art.fn, params, opt, jnp.int32(1), batch,
-                           repeat=2 if smoke else 5)
+    first_us = (time.perf_counter() - t0) * 1e6
+    (_, _, m), us, _ = _timed(art.fn, params, opt, jnp.int32(1), batch,
+                              repeat=2 if smoke else 5)
     loss = float(m["loss"])
     gnorm = float(m["grad_norm"])
     print(f"train_step,{us:.0f},loss={loss:.3f} grad_norm={gnorm:.3f}")
-    _record("train_step", us, loss=loss, grad_norm=gnorm)
+    _record("train_step", us, max(first_us - us, 0.0), loss=loss,
+            grad_norm=gnorm)
     return loss
 
 
@@ -313,6 +467,7 @@ def main() -> None:
     bench_fig5b_bandwidth(args.smoke)
     bench_rate_sweep(args.smoke)
     bench_backend_channels(args.smoke)
+    bench_engine_throughput(args.smoke)
     bench_straggler_sim(args.smoke)
     bench_train_step(args.smoke)
     bench_channels_ablation(args.smoke)

@@ -33,6 +33,19 @@ arbitration is pluggable (``arbiter=``) so the Pallas kernel in
 ``kernels/noc_router.py`` can replace the jnp reference
 (:func:`arbiter_jnp`) behind the same engine — see
 ``repro.noc.backends``.
+
+Two hot-path properties this module guarantees (the fused Pallas kernel
+and the padded-depth sweep mode both rely on them):
+
+* the neighbor push is expressed as a static *gather* through the
+  precomputed inverse link map (:func:`feeder_tables`) — every input
+  port has at most one feeder link, so the seed's per-output-port
+  scatter loop and the single gather are exactly equivalent (validated
+  at table-build time, not assumed);
+* the FIFO depth is a **traced operand**: state is sized by the static
+  ``fifo.shape[2]`` max, occupancy checks compare against the dynamic
+  ``depth``, so one compilation serves every depth up to the max
+  flit-for-flit identically to a natively-sized build.
 """
 from __future__ import annotations
 
@@ -108,6 +121,32 @@ def arbiter_jnp(out_port: jax.Array, beat: jax.Array, rr_ptr: jax.Array,
     return winner, pop, new_ptr, new_lock
 
 
+def feeder_tables(nbr: np.ndarray,
+                  opp: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Invert the link map: ``src_r[r, p]``/``src_o[r, p]`` name the
+    router+output-port whose drain feeds input port ``p`` of router
+    ``r`` (-1: no feeder).  Raises if two links feed one input port —
+    the property that makes the scatter-form neighbor push and the
+    gather-form used by the hot loop exactly equivalent.
+    """
+    R, P = nbr.shape
+    src_r = np.full((R, P), -1, np.int64)
+    src_o = np.full((R, P), -1, np.int64)
+    for t in range(R):
+        for o in range(P - 1):
+            if nbr[t, o] < 0:
+                continue
+            r, p = int(nbr[t, o]), int(opp[t, o])
+            if src_r[r, p] >= 0:
+                raise ValueError(
+                    f"input port {r}:{p} is fed by two links "
+                    f"({src_r[r, p]}:{src_o[r, p]} and {t}:{o})")
+            src_r[r, p], src_o[r, p] = t, o
+    for a in (src_r, src_o):
+        a.setflags(write=False)
+    return src_r, src_o
+
+
 def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
                      arbiter=None):
     """Build the one-cycle update for a fabric described by static
@@ -119,21 +158,26 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
     semantics as :func:`arbiter_jnp`) — the hook the Pallas backend
     plugs into.
 
-    Returns ``step(state, inject_valid, inject_flit) -> (new_state,
-    inject_ok (R,), deliver_valid (R,), deliver_flit (R, F),
-    link_moves scalar)``.
+    Returns ``step(state, inject_valid, inject_flit, depth) ->
+    (new_state, inject_ok (R,), deliver_valid (R,), deliver_flit (R, F),
+    link_moves scalar)``.  ``depth`` is the *dynamic* FIFO depth (traced
+    int32, ``1 <= depth <= state.fifo.shape[2]``); the state arrays are
+    sized by the static max so depth sweeps share one compilation.
     """
     R, P = nbr.shape
     PORT_L = P - 1
     nbr_j = jnp.asarray(nbr, jnp.int32)
     opp_j = jnp.asarray(opp, jnp.int32)
     route_j = jnp.asarray(route, jnp.int32)
+    src_r, src_o = feeder_tables(nbr, opp)
+    has_feed = jnp.asarray(src_r >= 0)                            # (R, P)
+    src_flat = jnp.asarray(np.clip(src_r, 0, None) * P
+                           + np.clip(src_o, 0, None), jnp.int32)  # (R, P)
     arb = arbiter_jnp if arbiter is None else arbiter
     r_idx = jnp.arange(R)
 
     def step(state: NetState, inject_valid: jax.Array,
-             inject_flit: jax.Array):
-        D = state.fifo.shape[2]
+             inject_flit: jax.Array, depth: jax.Array):
         heads = state.fifo[:, :, 0, :]                    # (R, P, F)
         head_valid = state.count > 0                      # (R, P)
 
@@ -142,24 +186,22 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
         ds_count = state.count[jnp.clip(nbr_j, 0, R - 1), opp_j]   # (R, P)
         can_drain = jnp.where(jnp.arange(P)[None, :] == PORT_L,
                               True,                     # Local: NI always sinks
-                              (nbr_j >= 0) & (ds_count < D))
+                              (nbr_j >= 0) & (ds_count < depth))
         drain = state.oreg_v & can_drain
 
         deliver_valid = drain[:, PORT_L]
         deliver_flit = state.oreg[:, PORT_L, :]
 
-        # pushes into neighbor input FIFOs (one per input port max — one link)
-        recv_valid = jnp.zeros((R, P), jnp.bool_)
-        recv_flit = jnp.zeros((R, P, N_FIELDS), jnp.int32)
-        tgt_r = jnp.where(nbr_j >= 0, nbr_j, 0)
-        for o in range(P - 1):
-            v = drain[:, o]
-            recv_valid = recv_valid.at[tgt_r[:, o], opp_j[:, o]].max(v)
-            recv_flit = recv_flit.at[tgt_r[:, o], opp_j[:, o]].add(
-                jnp.where(v[:, None], state.oreg[:, o, :], 0))
+        # pushes into neighbor input FIFOs, as ONE static gather through
+        # the inverse link map (each input port has at most one feeder,
+        # so this is exactly the seed's per-output-port scatter loop)
+        recv_valid = has_feed & drain.reshape(-1)[src_flat]        # (R, P)
+        recv_flit = jnp.where(
+            recv_valid[:, :, None],
+            state.oreg.reshape(-1, N_FIELDS)[src_flat], 0)         # (R, P, F)
 
         # NI injection into Local input port (cycle-start occupancy)
-        local_ready = state.count[:, PORT_L] < D
+        local_ready = state.count[:, PORT_L] < depth
         inj_ok = inject_valid & local_ready
         recv_valid = recv_valid.at[:, PORT_L].set(inj_ok)
         recv_flit = recv_flit.at[:, PORT_L].set(
@@ -182,6 +224,7 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
         new_oreg = jnp.where(any_grant[:, :, None], flit_to_oreg, state.oreg)
 
         # ---------------- input FIFO update: pop then push ------------------
+        D = state.fifo.shape[2]                          # static max depth
         shifted = jnp.concatenate(
             [state.fifo[:, :, 1:, :],
              jnp.zeros_like(state.fifo[:, :, :1, :])], axis=2)
@@ -189,7 +232,7 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
         count = state.count - pop.astype(jnp.int32)
 
         slot = jnp.clip(count, 0, D - 1)
-        write = recv_valid & (count < D)
+        write = recv_valid & (count < depth)
         onehot_slot = jax.nn.one_hot(slot, D, dtype=jnp.bool_)     # (R,P,D)
         sel = write[:, :, None] & onehot_slot
         fifo = jnp.where(sel[..., None], recv_flit[:, :, None, :], fifo)

@@ -1,18 +1,30 @@
-"""Pallas kernel for the NoC router's combinational core (paper's hot spot).
+"""Pallas kernels for the NoC router hot loop (paper's hot spot).
 
-One simulation cycle of the router pipeline stage — round-robin
-arbitration of routed input heads into free output registers with
-wormhole burst locking — for a TILE of routers held in VMEM.  This is
-the integer/boolean analogue of the paper's single-cycle router
-arbiter + crossbar, evaluated for all routers in parallel.
+Two kernels, both equivalence-tested flit-for-flit against the jnp
+reference engine (``repro.core.noc_sim.router``):
 
-Route compute happens *outside* the kernel (a static routing-table
-gather, see ``repro.noc.topology``), so the same kernel serves the XY
-mesh, the torus, and >5-port express-link routers: the port count is a
-static parameter.  ``repro.core.noc_sim.router.arbiter_jnp`` is the jnp
-oracle; ``repro.noc.backends`` plugs this kernel into the cycle engine
-as ``backend="pallas"``, equivalence-tested flit-for-flit against
-``backend="jnp"``.
+* :func:`router_arbiter_pallas` — phase-B only: round-robin arbitration
+  of routed input heads into free output registers with wormhole burst
+  locking, for a TILE of routers held in VMEM (``backend="pallas"``).
+* :func:`fused_fabric_step_pallas` — the FULL one-cycle network update
+  (paper's single-cycle router datapath): output-register drain,
+  neighbor push through the static inverse link map, arbitration, and
+  input-FIFO pop/push, in ONE kernel over an ``(N, P*D*F)``-flattened
+  row layout (``backend="pallas_fused"``).  ``N`` is routers with every
+  physical channel folded into extra rows, so one kernel launch per
+  simulated cycle advances the entire fabric — all channels, all
+  routers — and the last axis stays a long contiguous lane dimension.
+
+Route compute is a static-table gather (``route[row, dest]``), so the
+same kernels serve the XY mesh, the torus, and >5-port express-link
+routers: the port count is a static parameter.  FIFO depth reaches the
+fused kernel as a traced per-row operand masked against the static
+``D`` max, matching the engine's padded-depth sweep mode.
+
+Off-TPU both kernels auto-select interpret mode; the row layout is
+(8, 128)-tileable for a real Mosaic lowering, but the in-kernel static
+gathers have only been validated under the interpreter (see README
+"Performance" and ROADMAP).
 
 Layout (R routers, P ports, blocked over R):
   out_port  (R, P) int32   routed output port per input head (99: empty)
@@ -39,53 +51,61 @@ from jax.experimental import pallas as pl
 NO = 99
 
 
-def _kernel(oport_ref, beat_ref, ptr_ref, free_ref, lock_ref,
-            win_ref, pop_ref, nptr_ref, nlock_ref, *, n_ports: int,
-            block_r: int):
+def _arbitrate(out_port, beat, ptr, free, lock, *, n_rows: int, n_ports: int):
+    """Shared phase-B math: ``free``/``lock`` per OUT port, ``out_port``/
+    ``beat`` per IN head.  Returns (winner, pop, new_ptr, new_lock)."""
     P = n_ports
-    out_port = oport_ref[...]                         # (bR, P)
-    beat = beat_ref[...]
-    ptr = ptr_ref[...]
-    free = free_ref[...] > 0
-    lock = lock_ref[...]
-
-    # request[r, i, o] with wormhole lock masking
-    o_ids = jax.lax.broadcasted_iota(jnp.int32, (block_r, P, P), 2)
-    i_ids = jax.lax.broadcasted_iota(jnp.int32, (block_r, P, P), 1)
+    o_ids = jax.lax.broadcasted_iota(jnp.int32, (n_rows, P, P), 2)
+    i_ids = jax.lax.broadcasted_iota(jnp.int32, (n_rows, P, P), 1)
     req = (out_port[:, :, None] == o_ids) & free[:, None, :]
     locked = lock[:, None, :] >= 0
     req &= (~locked) | (i_ids == lock[:, None, :])
 
     prio = (i_ids - ptr[:, None, :]) % P
     score = jnp.where(req, prio, NO)
-    best = jnp.min(score, axis=1)                     # (bR, P_out)
+    best = jnp.min(score, axis=1)                     # (rows, P_out)
     granted = best < NO
     # winner = first input matching best score (scores are distinct)
     is_best = (score == best[:, None, :]) & req
     winner = jnp.argmax(is_best.astype(jnp.int32), axis=1)
     winner = jnp.where(granted, winner, -1)
 
-    win_ref[...] = winner
     pop = jnp.any((i_ids == winner[:, None, :]) & granted[:, None, :], axis=2)
-    pop_ref[...] = pop.astype(jnp.int32)
     # rr pointer holds while an output is wormhole-locked
-    nptr_ref[...] = jnp.where(granted & (lock < 0), (winner + 1) % P, ptr)
+    new_ptr = jnp.where(granted & (lock < 0), (winner + 1) % P, ptr)
 
     # lock update from granted flit's beat field
     w_beat = jnp.sum(jnp.where((i_ids == winner[:, None, :])
                                & granted[:, None, :],
                                beat[:, :, None], 0), axis=1)
-    nlock_ref[...] = jnp.where(granted & (w_beat > 1), winner,
-                               jnp.where(granted, -1, lock))
+    new_lock = jnp.where(granted & (w_beat > 1), winner,
+                         jnp.where(granted, -1, lock))
+    return winner, pop, new_ptr, new_lock
 
 
-def _pick_block(R: int, block_r: int) -> int:
-    """Largest block size <= block_r that divides R (R is never padded:
-    a partial tile would arbitrate garbage head state)."""
+# --------------------------------------------------------------------- #
+# phase-B arbiter kernel (backend="pallas")
+# --------------------------------------------------------------------- #
+def _arb_kernel(oport_ref, beat_ref, ptr_ref, free_ref, lock_ref,
+                win_ref, pop_ref, nptr_ref, nlock_ref, *, n_ports: int,
+                block_r: int):
+    winner, pop, new_ptr, new_lock = _arbitrate(
+        oport_ref[...], beat_ref[...], ptr_ref[...], free_ref[...] > 0,
+        lock_ref[...], n_rows=block_r, n_ports=n_ports)
+    win_ref[...] = winner
+    pop_ref[...] = pop.astype(jnp.int32)
+    nptr_ref[...] = new_ptr
+    nlock_ref[...] = new_lock
+
+
+def _pad_rows(R: int, block_r: int) -> tuple[int, int]:
+    """(block, padded R): pad the row axis up to a block multiple with
+    neutral rows instead of degrading the tile (a prime R used to fall
+    all the way to ``block_r=1``).  Neutral rows (``out_port=NO``,
+    ``oreg_free=0``, ``lock_in=-1``) are safe: empty heads never
+    request, so they arbitrate to nothing and are sliced off."""
     b = min(block_r, R)
-    while R % b:
-        b -= 1
-    return b
+    return b, -(-R // b) * b
 
 
 def router_arbiter_pallas(out_port, beat, rr_ptr, oreg_free, lock_in,
@@ -99,21 +119,169 @@ def router_arbiter_pallas(out_port, beat, rr_ptr, oreg_free, lock_in,
     R, P = out_port.shape
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    block_r = _pick_block(R, block_r)
-    grid = (R // block_r,)
+    block_r, R_pad = _pad_rows(R, block_r)
+    grid = (R_pad // block_r,)
 
-    kernel = functools.partial(_kernel, n_ports=P, block_r=block_r)
+    def pad(a, fill):
+        a = a.astype(jnp.int32)
+        if R_pad == R:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((R_pad - R, P), fill, jnp.int32)], axis=0)
+
+    kernel = functools.partial(_arb_kernel, n_ports=P, block_r=block_r)
     spec = pl.BlockSpec((block_r, P), lambda i: (i, 0))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[spec] * 5,
         out_specs=[spec] * 4,
-        out_shape=[jax.ShapeDtypeStruct((R, P), jnp.int32)] * 4,
+        out_shape=[jax.ShapeDtypeStruct((R_pad, P), jnp.int32)] * 4,
         interpret=interpret,
-    )(out_port.astype(jnp.int32), beat.astype(jnp.int32),
-      rr_ptr.astype(jnp.int32), oreg_free.astype(jnp.int32),
-      lock_in.astype(jnp.int32))
+    )(pad(out_port, NO), pad(beat, 1), pad(rr_ptr, 0),
+      pad(oreg_free, 0), pad(lock_in, -1))
+    return tuple(o[:R] for o in out)
+
+
+# --------------------------------------------------------------------- #
+# fused full-cycle fabric kernel (backend="pallas_fused")
+# --------------------------------------------------------------------- #
+def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
+                  lock_ref, iv_ref, iflit_ref, depth_ref,
+                  nbr_ref, opp_ref, route_ref, src_ref,
+                  nfifo_ref, ncount_ref, nptr_ref, noreg_ref, noregv_ref,
+                  nlock_ref, injok_ref, dv_ref, dflit_ref, lm_ref,
+                  *, n_rows: int, n_ports: int, d_max: int, n_fields: int,
+                  f_dest: int, f_beat: int):
+    N, P, D, F = n_rows, n_ports, d_max, n_fields
+    fifo = fifo_ref[...].reshape(N, P, D, F)
+    count = count_ref[...]                                 # (N, P)
+    oreg = oreg_ref[...].reshape(N, P, F)
+    oreg_v = oregv_ref[...] > 0
+    depth = depth_ref[...]                                 # (N, 1)
+    nbr = nbr_ref[...]
+    opp = opp_ref[...]
+    src = src_ref[...]
+
+    heads = fifo[:, :, 0, :]                               # (N, P, F)
+    head_valid = count > 0
+    is_local = (jax.lax.broadcasted_iota(jnp.int32, (N, P), 1) == P - 1)
+
+    # phase A: drain output registers toward downstream occupancy
+    ds_idx = jnp.clip(nbr, 0, N - 1) * P + opp             # (N, P)
+    ds_count = count.reshape(-1)[ds_idx]
+    can_drain = jnp.where(is_local, True, (nbr >= 0) & (ds_count < depth))
+    drain = oreg_v & can_drain
+
+    dv_ref[...] = drain[:, P - 1:].astype(jnp.int32)       # (N, 1)
+    dflit_ref[...] = oreg[:, P - 1, :]
+
+    # neighbor push == static gather through the inverse link map
+    recv_valid = (src >= 0) & drain.reshape(-1)[jnp.clip(src, 0)]
+    recv_flit = jnp.where(recv_valid[:, :, None],
+                          oreg.reshape(-1, F)[jnp.clip(src, 0)], 0)
+
+    # NI injection into the Local input port
+    inj_ok = (iv_ref[...][:, 0] > 0) & (count[:, P - 1] < depth[:, 0])
+    recv_valid = jnp.where(is_local, inj_ok[:, None], recv_valid)
+    recv_flit = jnp.where(is_local[:, :, None],
+                          jnp.where(inj_ok[:, None, None],
+                                    iflit_ref[...][:, None, :], 0),
+                          recv_flit)
+    injok_ref[...] = inj_ok[:, None].astype(jnp.int32)
+
+    # phase B: arbitration into freed output registers
+    oreg_free = (~oreg_v) | drain
+    out_port = jnp.take_along_axis(route_ref[...], heads[:, :, f_dest],
+                                   axis=1)
+    out_port = jnp.where(head_valid, out_port, NO)
+    winner, pop, new_ptr, new_lock = _arbitrate(
+        out_port, heads[:, :, f_beat], ptr_ref[...], oreg_free,
+        lock_ref[...], n_rows=N, n_ports=P)
+    nptr_ref[...] = new_ptr
+    nlock_ref[...] = new_lock
+
+    any_grant = winner >= 0
+    flit_to_oreg = jnp.take_along_axis(
+        heads, jnp.clip(winner, 0)[:, :, None], axis=1)
+    new_oreg = jnp.where(any_grant[:, :, None], flit_to_oreg, oreg)
+    noreg_ref[...] = new_oreg.reshape(N, P * F)
+    noregv_ref[...] = ((oreg_v & ~drain) | any_grant).astype(jnp.int32)
+
+    # input FIFO update: pop then push
+    shifted = jnp.concatenate(
+        [fifo[:, :, 1:, :], jnp.zeros_like(fifo[:, :, :1, :])], axis=2)
+    fifo = jnp.where(pop[:, :, None, None], shifted, fifo)
+    count = count - pop.astype(jnp.int32)
+
+    slot = jnp.clip(count, 0, D - 1)
+    write = recv_valid & (count < depth)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (N, P, D), 2)
+              == slot[:, :, None])
+    sel = write[:, :, None] & onehot
+    fifo = jnp.where(sel[..., None], recv_flit[:, :, None, :], fifo)
+    nfifo_ref[...] = fifo.reshape(N, P * D * F)
+    ncount_ref[...] = count + write.astype(jnp.int32)
+
+    lm_ref[...] = jnp.sum((drain & ~is_local).astype(jnp.int32),
+                          axis=1, keepdims=True)
+
+
+def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
+                             inject_valid, inject_flit, depth_rows,
+                             nbr_rows, opp_rows, route_rows, src_rows,
+                             *, interpret: bool | None = None):
+    """One full fabric cycle for ``N`` stacked router rows (channels
+    folded into rows by the caller; see ``repro.noc.backends``).
+
+    State arrives in the engine's logical shapes — ``fifo (N, P, D, F)``,
+    ``oreg (N, P, F)``, the rest ``(N, P)`` — and is flattened to the
+    kernel's 2D ``(N, P*D*F)`` lane layout here.  The static tables are
+    row-indexed: ``nbr_rows``/``src_rows`` hold *row* (not router)
+    indices, ``route_rows`` is ``(N, R)`` over per-network destinations.
+    ``depth_rows (N,)`` is the traced per-row FIFO depth.
+
+    Returns ``(fifo, count, rr_ptr, oreg, oreg_v (int32), lock_in,
+    inj_ok (N,) bool, deliver_valid (N,) bool, deliver_flit (N, F),
+    link_moves_per_row (N,))``.
+    """
+    from repro.core.noc_sim.router import F_BEAT, F_DEST
+
+    N, P, D, F = fifo.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _fused_kernel, n_rows=N, n_ports=P, d_max=D, n_fields=F,
+        f_dest=F_DEST, f_beat=F_BEAT)
+    out_shapes = [
+        jax.ShapeDtypeStruct((N, P * D * F), jnp.int32),   # fifo
+        jax.ShapeDtypeStruct((N, P), jnp.int32),           # count
+        jax.ShapeDtypeStruct((N, P), jnp.int32),           # rr_ptr
+        jax.ShapeDtypeStruct((N, P * F), jnp.int32),       # oreg
+        jax.ShapeDtypeStruct((N, P), jnp.int32),           # oreg_v
+        jax.ShapeDtypeStruct((N, P), jnp.int32),           # lock_in
+        jax.ShapeDtypeStruct((N, 1), jnp.int32),           # inj_ok
+        jax.ShapeDtypeStruct((N, 1), jnp.int32),           # deliver_valid
+        jax.ShapeDtypeStruct((N, F), jnp.int32),           # deliver_flit
+        jax.ShapeDtypeStruct((N, 1), jnp.int32),           # link_moves
+    ]
+    (nfifo, ncount, nptr, noreg, noregv, nlock, injok, dv, dflit,
+     lm) = pl.pallas_call(kernel, out_shape=out_shapes,
+                          interpret=interpret)(
+        fifo.reshape(N, P * D * F).astype(jnp.int32),
+        count.astype(jnp.int32), rr_ptr.astype(jnp.int32),
+        oreg.reshape(N, P * F).astype(jnp.int32),
+        oreg_v.astype(jnp.int32), lock_in.astype(jnp.int32),
+        inject_valid.astype(jnp.int32)[:, None],
+        inject_flit.astype(jnp.int32),
+        depth_rows.astype(jnp.int32)[:, None],
+        nbr_rows.astype(jnp.int32), opp_rows.astype(jnp.int32),
+        route_rows.astype(jnp.int32), src_rows.astype(jnp.int32))
+    return (nfifo.reshape(N, P, D, F), ncount, nptr,
+            noreg.reshape(N, P, F), noregv, nlock,
+            injok[:, 0].astype(jnp.bool_), dv[:, 0].astype(jnp.bool_),
+            dflit, lm[:, 0])
 
 
 def router_arbiter_ref(out_port, beat, rr_ptr, oreg_free, lock_in):

@@ -22,7 +22,8 @@ from .api import (simulate, simulate_batch, simulate_schedules,  # noqa: F401
                   stack_schedules, sweep)
 from .backends import (get_backend, list_backends,  # noqa: F401
                        register_backend)
-from .engine import build_channel_plan, compiled_sim  # noqa: F401
+from .engine import (build_channel_plan, compiled_sim,  # noqa: F401
+                     sim_cache_clear, sim_cache_stats)
 from .result import ChannelStats, ClassStats, SimResult  # noqa: F401
 from .spec import NocSpec, PhysicalChannel, TrafficClass  # noqa: F401
 from .topology import Mesh, Topology, Torus, hop_table  # noqa: F401

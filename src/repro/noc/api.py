@@ -11,11 +11,16 @@ what makes sweeps cheap:
   per-point scalar overrides) -> ONE vmapped jit call returning a
   batched SimResult, bit-identical to N individual runs,
 * :func:`sweep`           — arbitrary (spec, workload) points; points
-  sharing a static spec are grouped into vmapped batches, points that
-  differ statically (e.g. FIFO depth, channel count) compile per group.
+  sharing a static spec are grouped into vmapped batches, and (with
+  ``pad_depths``, the default) points whose specs differ ONLY in
+  channel FIFO depths are grouped too: depth is a traced operand
+  masked against the group max, so a whole depth sweep shares one
+  compilation (``sim_cache_stats()`` counts it).  Points that differ
+  in any other static field (e.g. channel count) compile per group.
 """
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Mapping, Sequence
 
 import jax
@@ -62,6 +67,10 @@ def _dyn_scalars(spec: NocSpec, service_lat, max_outstanding, burst_beats):
     return sl, mo, bb
 
 
+def _depths(spec: NocSpec) -> np.ndarray:
+    return np.asarray([ch.depth for ch in spec.channels], np.int32)
+
+
 def simulate_schedules(spec: NocSpec,
                        schedules: Mapping[str, tuple[np.ndarray, np.ndarray]],
                        *, service_lat: int | None = None,
@@ -73,8 +82,8 @@ def simulate_schedules(spec: NocSpec,
     times, dests = stack_schedules(spec, schedules)
     sl, mo, bb = _dyn_scalars(spec, service_lat, max_outstanding,
                               burst_beats)
-    raw = compiled_sim(spec, times.shape[-1], backend)(times, dests, sl, mo,
-                                                       bb)
+    raw = compiled_sim(spec, times.shape[-1], backend)(
+        times, dests, sl, mo, bb, _depths(spec))
     return SimResult.from_raw(spec, raw)
 
 
@@ -154,27 +163,70 @@ def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
         burst_beats, [c.burst_beats for c in spec.classes], "burst_beats")
 
     fn = compiled_sim(spec, T, backend)
-    raw = jax.vmap(fn, in_axes=(0, 0, sl_ax, mo_ax, bb_ax))(
+    raw = jax.vmap(fn, in_axes=(0, 0, sl_ax, mo_ax, bb_ax, None))(
         jnp.asarray(times), jnp.asarray(dests), jnp.asarray(sl),
-        jnp.asarray(mo), jnp.asarray(bb))
+        jnp.asarray(mo), jnp.asarray(bb), jnp.asarray(_depths(spec)))
     return SimResult.from_raw(spec, raw)
 
 
+def _strip_depths(spec: NocSpec) -> NocSpec:
+    """Grouping key for :func:`sweep`: depth is a traced operand, so
+    specs differing only in channel FIFO depths share a compilation."""
+    return spec.with_(channels=tuple(
+        replace(ch, depth=1) for ch in spec.channels))
+
+
+def _batch_depth_sweep(specs: Sequence[NocSpec], wls: Sequence[Workload],
+                       backend: str) -> SimResult:
+    """Vmap points that differ only in FIFO depths through ONE
+    padded-depth compilation (depth masked against the group max)."""
+    base = specs[0]
+    per_point = [wl.schedules(s) for s, wl in zip(specs, wls)]
+    T = max(max(np.asarray(t).reshape(base.n_routers, -1).shape[1]
+                for t, _ in sched.values()) for sched in per_point)
+    stacked = [stack_schedules(s, sched, T=T)
+               for s, sched in zip(specs, per_point)]
+    times = np.stack([t for t, _ in stacked])
+    dests = np.stack([d for _, d in stacked])
+    sl, mo, bb = _dyn_scalars(base, None, None, None)
+    depths = np.stack([_depths(s) for s in specs])         # (n, n_ch)
+    fn = compiled_sim(base, T, backend,
+                      max_depth=int(depths.max()))
+    raw = jax.vmap(fn, in_axes=(0, 0, None, None, None, 0))(
+        jnp.asarray(times), jnp.asarray(dests), jnp.asarray(sl),
+        jnp.asarray(mo), jnp.asarray(bb), jnp.asarray(depths))
+    return SimResult.from_raw(base, raw)
+
+
 def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
-          backend: str = "jnp") -> list[SimResult]:
+          backend: str = "jnp", pad_depths: bool = True) -> list[SimResult]:
     """Simulate arbitrary (spec, workload) points, vmapping every group
     of points that shares a static spec. Results come back in input
-    order, one unbatched SimResult per point."""
+    order, one unbatched SimResult per point.
+
+    With ``pad_depths`` (default) points whose specs differ ONLY in
+    channel FIFO depths also share one group: the group compiles once
+    at the max depth with per-point depths a vmapped traced operand —
+    a whole depth sweep costs a single ``compiled_sim`` compilation
+    (count it with :func:`repro.noc.sim_cache_stats`)."""
     groups: dict[NocSpec, list[int]] = {}
     for i, (spec, _) in enumerate(points):
-        groups.setdefault(spec, []).append(i)
+        key = _strip_depths(spec) if pad_depths else spec
+        groups.setdefault(key, []).append(i)
     out: list[SimResult | None] = [None] * len(points)
-    for spec, idxs in groups.items():
+    for idxs in groups.values():
+        specs = [points[i][0] for i in idxs]
         wls = [points[i][1] for i in idxs]
         if len(idxs) == 1:
-            out[idxs[0]] = simulate(spec, wls[0], backend=backend)
-        else:
-            batched = simulate_batch(spec, wls, backend=backend)
+            out[idxs[0]] = simulate(specs[0], wls[0], backend=backend)
+        elif all(s == specs[0] for s in specs):
+            batched = simulate_batch(specs[0], wls, backend=backend)
             for j, i in enumerate(idxs):
                 out[i] = batched.point(j)
+        else:
+            batched = _batch_depth_sweep(specs, wls, backend)
+            for j, i in enumerate(idxs):
+                # re-attach each point's own spec (the batch compiled
+                # under the group's depth-padded base spec)
+                out[i] = replace(batched.point(j), spec=specs[j])
     return out  # type: ignore[return-value]

@@ -1,29 +1,51 @@
 """Pluggable engine backends behind the one ``simulate()`` surface.
 
 A backend turns a :class:`~repro.noc.topology.Topology` into the
-network-level primitives the cycle engine consumes: an ``init(depth)``
-producing a fresh :class:`~repro.core.noc_sim.router.NetState` and a
-``step(state, inject_valid, inject_flit)`` advancing one physical
-network one cycle.  Both built-ins share the table-driven fabric update
-(:func:`~repro.core.noc_sim.router.make_fabric_step`); they differ only
-in who runs the hot phase-B arbitration loop:
+network-level primitives the cycle engine consumes, for ALL physical
+channels at once: the engine carries one *stacked* state (every array
+has a leading ``n_ch`` axis) and each cycle makes a single backend call
+that advances every channel of the fabric together.  That stacking is
+the fused hot loop's first win — n_ch identical router updates become
+one batched update instead of n_ch separate op sequences in the scan
+body.
 
-* ``"jnp"``    — the pure-jnp reference (:func:`arbiter_jnp`),
-* ``"pallas"`` — the Pallas router-arbiter kernel
-  (``kernels/noc_router.py``), auto-interpreted off-TPU.
+* ``"jnp"``          — the pure-jnp reference
+  (:func:`~repro.core.noc_sim.router.make_fabric_step` vmapped over
+  the channel axis),
+* ``"pallas"``       — same fabric step with phase-B arbitration
+  replaced by the Pallas router-arbiter kernel
+  (``kernels/noc_router.py``), auto-interpreted off-TPU,
+* ``"pallas_fused"`` — the FULL one-cycle network update (drain +
+  neighbor push + arbitration + FIFO pop/push) in ONE Pallas kernel
+  over channel-folded router rows
+  (:func:`~repro.kernels.noc_router.fused_fabric_step_pallas`).
 
-Backends are equivalence-tested flit-for-flit on the paper presets
-(``tests/test_noc_api.py -k backend``).  Register custom engines with
-:func:`register_backend`; select one with
-``simulate(spec, wl, backend="pallas")``.
+The protocol:
+
+* ``init(n_ch, depth_max)`` — fresh stacked
+  :class:`~repro.core.noc_sim.router.NetState`, arrays shaped
+  ``(n_ch, R, ...)`` with FIFOs sized by the static ``depth_max``;
+* ``step(state, inject_valid (C, R), inject_flit (C, R, F),
+  depths (C,))`` — one cycle; ``depths`` is the *traced* per-channel
+  FIFO depth (≤ ``depth_max``), so depth sweeps share one compilation.
+  Returns ``(state, inj_ok (C, R), deliver_valid (C, R),
+  deliver_flit (C, R, F), link_moves (C,))``.
+
+Backends are equivalence-tested flit-for-flit on the paper presets,
+torus, and express meshes (``tests/test_noc_api.py -k backend``).
+Register custom engines with :func:`register_backend`; select one with
+``simulate(spec, wl, backend="pallas_fused")``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.noc_sim.router import (NetState, init_fabric_state,
+from repro.core.noc_sim.router import (N_FIELDS, NetState, feeder_tables,
                                        make_fabric_step)
 from .topology import Topology
 
@@ -32,9 +54,9 @@ __all__ = ["Network", "BACKENDS", "register_backend", "get_backend",
 
 
 class Network(NamedTuple):
-    """One physical network instance as the engine sees it."""
-    init: Callable[[int], NetState]      # depth -> fresh state
-    step: Callable                       # (state, inject_valid, flit) -> ...
+    """All physical channels of one fabric, as the engine sees them."""
+    init: Callable[[int, int], NetState]  # (n_ch, depth_max) -> state
+    step: Callable                        # (state, iv, flit, depths) -> ...
 
 
 BACKENDS: dict[str, Callable[[Topology], Network]] = {}
@@ -60,17 +82,30 @@ def get_backend(name: str) -> Callable[[Topology], Network]:
             f"unknown backend {name!r}; have {list_backends()}") from None
 
 
-def _network(topo: Topology, arbiter=None) -> Network:
+def _stacked_init(R: int, P: int) -> Callable[[int, int], NetState]:
+    def init(n_ch: int, depth_max: int) -> NetState:
+        return NetState(
+            fifo=jnp.zeros((n_ch, R, P, depth_max, N_FIELDS), jnp.int32),
+            count=jnp.zeros((n_ch, R, P), jnp.int32),
+            rr_ptr=jnp.zeros((n_ch, R, P), jnp.int32),
+            oreg=jnp.zeros((n_ch, R, P, N_FIELDS), jnp.int32),
+            oreg_v=jnp.zeros((n_ch, R, P), jnp.bool_),
+            lock_in=jnp.full((n_ch, R, P), -1, jnp.int32),
+        )
+    return init
+
+
+def _vmapped_network(topo: Topology, arbiter=None) -> Network:
     nbr, opp, route = topo.tables()
     R, P = nbr.shape
-    return Network(
-        init=lambda depth: init_fabric_state(R, P, depth),
-        step=make_fabric_step(nbr, opp, route, arbiter=arbiter))
+    one = make_fabric_step(nbr, opp, route, arbiter=arbiter)
+    return Network(init=_stacked_init(R, P),
+                   step=jax.vmap(one, in_axes=(0, 0, 0, 0)))
 
 
 @register_backend("jnp")
 def _jnp_backend(topo: Topology) -> Network:
-    return _network(topo)
+    return _vmapped_network(topo)
 
 
 @register_backend("pallas")
@@ -82,4 +117,63 @@ def _pallas_backend(topo: Topology) -> Network:
             out_port, beat, rr_ptr, oreg_free, lock_in)
         return winner, pop.astype(jnp.bool_), new_ptr, new_lock
 
-    return _network(topo, arbiter=arbiter)
+    return _vmapped_network(topo, arbiter=arbiter)
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_tables(topo: Topology, n_ch: int):
+    """Row-folded static tables for the fused kernel: channel ``c``'s
+    router ``r`` becomes row ``c*R + r``; neighbor/feeder indices are
+    offset into the row space so one kernel advances every channel.
+    Returned as *numpy* — this cache is often first populated inside a
+    jit trace, and caching jnp constants would leak tracers into later
+    traces."""
+    nbr, opp, route = topo.tables()
+    src_r, src_o = feeder_tables(nbr, opp)
+    R, P = nbr.shape
+    offs = (np.arange(n_ch) * R)[:, None, None]             # (C, 1, 1)
+    nbr_rows = np.where(nbr[None] >= 0, nbr[None] + offs,
+                        -1).reshape(n_ch * R, P)
+    opp_rows = np.tile(opp, (n_ch, 1))
+    route_rows = np.tile(route, (n_ch, 1))                  # (C*R, R)
+    src_rows = np.where(
+        src_r[None] >= 0,
+        (src_r[None] + offs) * P + src_o[None], -1).reshape(n_ch * R, P)
+    return (nbr_rows.astype(np.int32), opp_rows.astype(np.int32),
+            route_rows.astype(np.int32), src_rows.astype(np.int32))
+
+
+@register_backend("pallas_fused")
+def _pallas_fused_backend(topo: Topology) -> Network:
+    from repro.kernels.noc_router import fused_fabric_step_pallas
+
+    nbr, _, _ = topo.tables()
+    R, P = nbr.shape
+
+    def step(state: NetState, inject_valid, inject_flit, depths):
+        C = state.count.shape[0]
+        D, F = state.fifo.shape[3], state.fifo.shape[4]
+        N = C * R
+        tables = _fused_tables(topo, C)
+        depth_rows = jnp.repeat(depths.astype(jnp.int32), R)
+        (fifo, count, rr_ptr, oreg, oreg_v, lock_in, inj_ok, dv, dflit,
+         lm_rows) = fused_fabric_step_pallas(
+            state.fifo.reshape(N, P, D, F),
+            state.count.reshape(N, P),
+            state.rr_ptr.reshape(N, P),
+            state.oreg.reshape(N, P, F),
+            state.oreg_v.reshape(N, P),
+            state.lock_in.reshape(N, P),
+            inject_valid.reshape(N), inject_flit.reshape(N, F),
+            depth_rows, *tables)
+        new_state = NetState(
+            fifo=fifo.reshape(C, R, P, D, F),
+            count=count.reshape(C, R, P),
+            rr_ptr=rr_ptr.reshape(C, R, P),
+            oreg=oreg.reshape(C, R, P, F),
+            oreg_v=(oreg_v > 0).reshape(C, R, P),
+            lock_in=lock_in.reshape(C, R, P))
+        return (new_state, inj_ok.reshape(C, R), dv.reshape(C, R),
+                dflit.reshape(C, R, F), lm_rows.reshape(C, R).sum(axis=1))
+
+    return Network(init=_stacked_init(R, P), step=step)

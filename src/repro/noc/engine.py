@@ -1,8 +1,25 @@
-"""Generalized N-channel FlooNoC cycle engine.
+"""Generalized N-channel FlooNoC cycle engine — the fused hot loop.
 
-This is the seed ``mesh_sim.py`` engine refactored from a hardcoded
-``narrow_wide: bool`` (1-or-3 network) branch into a topology-driven
-loop over the channels declared in a :class:`~repro.noc.spec.NocSpec`.
+This is the tentpole of the perf PR: the scan body that used to be a
+Python-unrolled tour over channels, classes, and queues (one fabric op
+sequence per channel, 6 scatters per ``_q_push``, per-class ``col``
+masked metric updates) is now three batched blocks per cycle:
+
+1. **one stacked fabric call** — every physical channel's router update
+   runs as a single backend step over ``(n_ch, R, ...)`` state (the
+   ``"pallas_fused"`` backend collapses it further into ONE kernel
+   launch per cycle; see :mod:`repro.noc.backends`),
+2. **batched NI source/sink state** — schedule pointers, outstanding
+   counters, and metrics live as ``(R, n_cls)`` arrays; the response
+   reorder rings are ONE ``(R, n_q, cap, 6)`` array updated with a
+   single segment-style scatter per cycle (multi-class pushes into a
+   shared ring are ordered by a static prefix matrix, preserving the
+   sequential engine's slot order exactly),
+3. **traced FIFO depth** — state is sized by a static max and occupancy
+   checks compare against the dynamic per-channel ``depths`` operand,
+   so FIFO-depth sweeps share one compilation (``compiled_sim``'s
+   ``max_depth=`` padded mode; see :func:`repro.noc.api.sweep`).
+
 Per channel, the injection policy is derived from which flows the
 ``class_map`` routes onto it:
 
@@ -16,41 +33,47 @@ Per channel, the injection policy is derived from which flows the
   where a started burst excludes everything else on the link).
 
 Response reorder buffers are keyed by *response channel*: classes whose
-responses share one physical channel share one FIFO (the shared-FIFO
+responses share one physical channel share one ring (the shared-FIFO
 ablation — one R channel on one link), classes with dedicated response
-channels get dedicated FIFOs.  For the two paper presets this engine is
-cycle-exact with the seed simulator (golden-checked by the test suite).
+channels get dedicated rings.  Ring capacity comes from the spec
+(``NocSpec.resp_q_cap``) so small studies stop carrying
+``(R, n_q, 256)``-sized state.  For the two paper presets this engine
+is cycle-exact with the seed simulator (golden-checked by the suite).
 
 NI model (paper §III-A) is unchanged: end-to-end ROB flow control,
 read transactions req -> target NI -> after ``service_lat`` cycles a
 response of ``burst_beats`` beats streams back atomically, in-order
-delivery via deterministic table-driven routing (XY on the mesh,
-minimal-wrap dimension-ordered on the torus, greedy largest-stride on
-express meshes — see ``repro.noc.topology``).
+delivery via deterministic table-driven routing.
 
-Static structure (topology, channel list, FIFO depths, class->channel
-map, horizon) lives in the spec and keys one jitted simulator per
-backend; dynamic knobs (schedules, service latency, outstanding limits,
-burst lengths) are traced operands so ``jax.vmap`` batches whole sweeps
-in one jit.  The router hot loop itself is pluggable
-(``repro.noc.backends``: pure-jnp reference vs the Pallas arbiter
-kernel) behind the identical ``simulate()``/``SimResult`` surface.
+Static structure (topology, channel list, max FIFO depth, class->
+channel map, horizon) keys one jitted simulator per backend in a
+stats-instrumented cache (:func:`sim_cache_stats`); dynamic knobs
+(schedules, service latency, outstanding limits, burst lengths, FIFO
+depths) are traced operands so ``jax.vmap`` batches whole sweeps in one
+jit.
 """
 from __future__ import annotations
 
 import functools
+import threading
+from collections import OrderedDict
+from dataclasses import replace
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.noc_sim.router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME,
                                        F_TXN, N_FIELDS)
 from .backends import get_backend
 from .spec import NocSpec
 
-RESP_Q_CAP = 256
 BIG = 1 << 30
+
+# response-ring field order within the stacked (R, n_q, cap, 6) array
+Q_READY, Q_DEST, Q_BEATS, Q_TIME0, Q_TXN, Q_KIND = range(6)
+N_QFIELDS = 6
 
 
 def req_kind(cls_idx: int) -> int:
@@ -97,18 +120,50 @@ def build_channel_plan(spec: NocSpec) -> ChannelPlan:
                        tuple(queue_of_class), tuple(reqs_on), queues_on)
 
 
+class _PlanArrays(NamedTuple):
+    """Static index/selector arrays derived from a ChannelPlan, shared
+    by every cycle of the batched NI update.  Kept as *numpy* so index
+    lookups stay concrete at trace time (a jnp constant would turn
+    ``req_ch[i]`` into a traced op inside the scan body)."""
+    q_of_cls: np.ndarray      # (n_cls,) response queue per class
+    req_ch: np.ndarray        # (n_cls,) channel carrying each class's reqs
+    rsp_ch: np.ndarray        # (n_cls,) channel carrying each class's rsps
+    req_kinds: np.ndarray     # (n_cls,)
+    rsp_kinds: np.ndarray     # (n_cls,)
+    push_before: np.ndarray   # (n_cls, n_cls) 1 where j pushes the same
+    #                           queue as i earlier in the sequential order
+    q_onehot: np.ndarray      # (n_cls, n_q) class -> queue one-hot
+
+
+def _plan_arrays(spec: NocSpec, plan: ChannelPlan) -> _PlanArrays:
+    n_cls, n_q = plan.n_cls, plan.n_q
+    q_of = np.asarray(plan.queue_of_class, np.int32)
+    req_ch = np.asarray([spec.req_channel(c.name) for c in spec.classes],
+                        np.int32)
+    rsp_ch = np.asarray([spec.rsp_channel(c.name) for c in spec.classes],
+                        np.int32)
+    # sequential push order of the pre-fusion engine: channel-major, then
+    # the channel's priority order — preserves exact ring-slot ordering
+    # when several classes push one shared queue in the same cycle
+    order = [i for c in range(plan.n_ch) for i in plan.reqs_on[c]]
+    pos = np.empty(n_cls, np.int64)
+    pos[order] = np.arange(n_cls)
+    push_before = ((pos[None, :] < pos[:, None])
+                   & (q_of[None, :] == q_of[:, None])).astype(np.int32)
+    q_onehot = (q_of[:, None] == np.arange(n_q)[None, :]).astype(np.int32)
+    return _PlanArrays(
+        q_of_cls=q_of, req_ch=req_ch, rsp_ch=rsp_ch,
+        req_kinds=np.asarray([req_kind(i) for i in range(n_cls)], np.int32),
+        rsp_kinds=np.asarray([rsp_kind(i) for i in range(n_cls)], np.int32),
+        push_before=push_before, q_onehot=q_onehot)
+
+
 class NIState(NamedTuple):
     ptr: jax.Array          # (R, n_cls) schedule pointers
     out: jax.Array          # (R, n_cls) outstanding (ROB flow control)
-    # response ring buffers: (R, n_q, C)
     rq_head: jax.Array      # (R, n_q)
     rq_tail: jax.Array      # (R, n_q)
-    rq_ready: jax.Array
-    rq_dest: jax.Array
-    rq_beats: jax.Array
-    rq_time0: jax.Array
-    rq_txn: jax.Array
-    rq_kind: jax.Array
+    rq: jax.Array           # (R, n_q, cap, 6) stacked response rings
     w_started: jax.Array    # (R, n_q) burst mid-stream (inject atomicity)
     inj_rr: jax.Array       # (R, n_ch) mixed-channel round-robin
     # per-class metrics: (R, n_cls)
@@ -121,144 +176,88 @@ class NIState(NamedTuple):
 
 
 class SimState(NamedTuple):
-    nets: tuple
+    net: NamedTuple         # stacked NetState, (n_ch, R, ...) leaves
     ni: NIState
     cycle: jax.Array
     moves: jax.Array        # (n_ch,) link traversals per channel
 
 
-def init_ni(R: int, topo: ChannelPlan) -> NIState:
-    zc = jnp.zeros((R, topo.n_cls), jnp.int32)
-    zq = jnp.zeros((R, topo.n_q), jnp.int32)
-    zqc = jnp.zeros((R, topo.n_q, RESP_Q_CAP), jnp.int32)
+def init_ni(R: int, plan: ChannelPlan, cap: int) -> NIState:
+    zc = jnp.zeros((R, plan.n_cls), jnp.int32)
+    zq = jnp.zeros((R, plan.n_q), jnp.int32)
     return NIState(
-        ptr=zc, out=zc, rq_head=zq, rq_tail=zq, rq_ready=zqc, rq_dest=zqc,
-        rq_beats=zqc, rq_time0=zqc, rq_txn=zqc, rq_kind=zqc,
-        w_started=jnp.zeros((R, topo.n_q), jnp.bool_),
-        inj_rr=jnp.zeros((R, topo.n_ch), jnp.int32),
+        ptr=zc, out=zc, rq_head=zq, rq_tail=zq,
+        rq=jnp.zeros((R, plan.n_q, cap, N_QFIELDS), jnp.int32),
+        w_started=jnp.zeros((R, plan.n_q), jnp.bool_),
+        inj_rr=jnp.zeros((R, plan.n_ch), jnp.int32),
         lat_sum=zc, lat_max=zc, done=zc, beats_rx=zc,
-        first_t=jnp.full((R, topo.n_cls), BIG, jnp.int32), last_t=zc)
+        first_t=jnp.full((R, plan.n_cls), BIG, jnp.int32), last_t=zc)
 
 
-def _q_push(ni: NIState, q: int, valid, dest, beats, time0, txn, ready_at,
-            kind):
-    rows = jnp.arange(valid.shape[0])
-    slot = ni.rq_tail[:, q] % RESP_Q_CAP
-
-    def upd(arr, val):
-        return arr.at[rows, q, slot].set(
-            jnp.where(valid, val, arr[rows, q, slot]))
-
-    return ni._replace(
-        rq_ready=upd(ni.rq_ready, ready_at),
-        rq_dest=upd(ni.rq_dest, dest),
-        rq_beats=upd(ni.rq_beats, beats),
-        rq_time0=upd(ni.rq_time0, time0),
-        rq_txn=upd(ni.rq_txn, txn),
-        rq_kind=upd(ni.rq_kind, kind),
-        rq_tail=ni.rq_tail.at[:, q].add(valid.astype(jnp.int32)),
-    )
-
-
-def _q_head(ni: NIState, q: int, now):
-    rows = jnp.arange(ni.rq_head.shape[0])
-    have = ni.rq_head[:, q] < ni.rq_tail[:, q]
-    slot = ni.rq_head[:, q] % RESP_Q_CAP
-    ready = have & (ni.rq_ready[rows, q, slot] <= now)
-    return {
-        "ready": ready,
-        "dest": ni.rq_dest[rows, q, slot],
-        "beats": ni.rq_beats[rows, q, slot],
-        "time0": ni.rq_time0[rows, q, slot],
-        "txn": ni.rq_txn[rows, q, slot],
-        "kind": ni.rq_kind[rows, q, slot],
-    }
-
-
-def _q_sent(ni: NIState, q: int, sent):
-    """Decrement head beats; pop when exhausted; track burst-in-flight."""
-    rows = jnp.arange(sent.shape[0])
-    slot = ni.rq_head[:, q] % RESP_Q_CAP
-    left = ni.rq_beats[rows, q, slot] - sent.astype(jnp.int32)
-    return ni._replace(
-        rq_beats=ni.rq_beats.at[rows, q, slot].set(
-            jnp.where(sent, left, ni.rq_beats[rows, q, slot])),
-        rq_head=ni.rq_head.at[:, q].add(
-            (sent & (left <= 0)).astype(jnp.int32)),
-        w_started=ni.w_started.at[:, q].set(
-            jnp.where(sent, left > 0, ni.w_started[:, q])),
-    )
-
-
-def make_step(spec: NocSpec, topo: ChannelPlan, T: int, net_step):
+def make_step(spec: NocSpec, plan: ChannelPlan, T: int, net_step):
     """Build the per-cycle transition. Dynamic operands arrive via the
-    carried closure-free ``dyn`` dict (schedules + scalar knobs);
-    ``net_step`` is the backend's one-network one-cycle update
+    closure-free ``dyn`` dict (schedules + scalar knobs + depths);
+    ``net_step`` is the backend's stacked one-cycle fabric update
     (:class:`repro.noc.backends.Network`)."""
     R = spec.n_routers
+    cap = spec.resp_q_cap
+    pa = _plan_arrays(spec, plan)
     rows = jnp.arange(R)
-
-    def mk_flit(valid, dest, src, time, kind, txn, beat):
-        f = jnp.zeros((R, N_FIELDS), jnp.int32)
-        z = jnp.int32(0)
-        for idx, val in ((F_DEST, dest), (F_SRC, src), (F_TIME, time),
-                         (F_KIND, kind), (F_TXN, txn), (F_BEAT, beat)):
-            f = f.at[:, idx].set(jnp.where(valid, val, z))
-        return f
+    q_ids = jnp.arange(plan.n_q)
 
     def step(dyn, state: SimState, _):
-        times, dests = dyn["times"], dyn["dests"]
+        times, dests = dyn["times"], dyn["dests"]     # (R, n_cls, T)
         service_lat = dyn["service_lat"]
         max_out, burst_beats = dyn["max_out"], dyn["burst_beats"]
         ni = state.ni
         now = state.cycle
 
         # ---- source side: per-class request candidates (ROB gated) ------
-        want, req_d = [], []
-        for i in range(topo.n_cls):
-            p = jnp.clip(ni.ptr[:, i], 0, T - 1)
-            want.append((ni.ptr[:, i] < T) & (times[i, rows, p] <= now)
-                        & (ni.out[:, i] < max_out[i]))
-            req_d.append(dests[i, rows, p])
+        p = jnp.clip(ni.ptr, 0, T - 1)[:, :, None]
+        t_sel = jnp.take_along_axis(times, p, axis=2)[:, :, 0]
+        want = ((ni.ptr < T) & (t_sel <= now)
+                & (ni.out < max_out[None, :]))        # (R, n_cls)
+        req_d = jnp.take_along_axis(dests, p, axis=2)[:, :, 0]
 
-        # ---- target side: response queue heads --------------------------
-        heads = [_q_head(ni, q, now) for q in range(topo.n_q)]
+        # ---- target side: response ring heads, all queues at once -------
+        slot_h = ni.rq_head % cap                      # (R, n_q)
+        h = jnp.take_along_axis(ni.rq, slot_h[:, :, None, None],
+                                axis=2)[:, :, 0, :]    # (R, n_q, 6)
+        have = ni.rq_head < ni.rq_tail
+        h_ready = have & (h[..., Q_READY] <= now)
+        h_dest, h_beats = h[..., Q_DEST], h[..., Q_BEATS]
+        h_time0, h_txn, h_kind = h[..., Q_TIME0], h[..., Q_TXN], h[..., Q_KIND]
 
-        injected = [jnp.zeros((R,), jnp.bool_) for _ in range(topo.n_cls)]
-        sent = [jnp.zeros((R,), jnp.bool_) for _ in range(topo.n_q)]
-        new_nets, deliveries, moves = [], [], []
-
-        for c in range(topo.n_ch):
-            reqs, qs = topo.reqs_on[c], topo.queues_on[c]
+        # ---- per-channel injection policy (small static loop) -----------
+        sel_req: dict[int, jax.Array] = {}   # class -> selected this cycle
+        sel_rsp: dict[int, jax.Array] = {}   # queue -> streamed this cycle
+        hold_of_ch: dict[int, jax.Array] = {}
+        iv_cols, flit_cols = [], []
+        zero = jnp.zeros((R,), jnp.int32)
+        for c in range(plan.n_ch):
+            reqs, qs = plan.reqs_on[c], plan.queues_on[c]
+            dest = kind = txn = beat = zero
+            time = jnp.broadcast_to(now, (R,)).astype(jnp.int32)
             if not reqs and not qs:          # idle channel: still steps
-                net, _, dv, df, lm = net_step(
-                    state.nets[c], jnp.zeros((R,), jnp.bool_),
-                    jnp.zeros((R, N_FIELDS), jnp.int32))
+                valid = jnp.zeros((R,), jnp.bool_)
             elif not reqs and len(qs) == 1:
                 # dedicated response channel: stream the queue head
                 q = qs[0]
-                h = heads[q]
-                f = mk_flit(h["ready"], h["dest"], rows, h["time0"],
-                            h["kind"], h["txn"], h["beats"])
-                net, ok, dv, df, lm = net_step(state.nets[c], h["ready"], f)
-                sent[q] = ok & h["ready"]
+                valid = h_ready[:, q]
+                sel_rsp[q] = valid
+                dest, kind, txn = h_dest[:, q], h_kind[:, q], h_txn[:, q]
+                time, beat = h_time0[:, q], h_beats[:, q]
             elif reqs and not qs:
                 # request-only channel: static priority, smalls first
                 taken = jnp.zeros((R,), jnp.bool_)
-                sel = []
                 for i in reqs:
-                    s = want[i] & ~taken
-                    sel.append((i, s))
+                    s = want[:, i] & ~taken
+                    sel_req[i] = s
                     taken = taken | s
-                dest = kind = txn = jnp.zeros((R,), jnp.int32)
-                for i, s in sel:
-                    dest = jnp.where(s, req_d[i], dest)
+                    dest = jnp.where(s, req_d[:, i], dest)
                     kind = jnp.where(s, req_kind(i), kind)
                     txn = jnp.where(s, ni.ptr[:, i], txn)
-                f = mk_flit(taken, dest, rows, now, kind, txn, 1)
-                net, ok, dv, df, lm = net_step(state.nets[c], taken, f)
-                for i, s in sel:
-                    injected[i] = ok & s
+                valid, beat = taken, jnp.where(taken, 1, 0)
             else:
                 # mixed channel: round-robin over [rsp heads..., reqs...]
                 # with burst atomicity — an in-flight burst excludes all
@@ -266,8 +265,8 @@ def make_step(spec: NocSpec, topo: ChannelPlan, T: int, net_step):
                         + [("req", i) for i in reqs])
                 n_cand = len(cand)
                 cand_valid = jnp.stack(
-                    [heads[q]["ready"] for q in qs]
-                    + [want[i] for i in reqs], axis=1)
+                    [h_ready[:, q] for q in qs]
+                    + [want[:, i] for i in reqs], axis=1)
                 rr = ni.inj_rr[:, c] % n_cand
                 order = (jnp.arange(n_cand)[None, :] + rr[:, None]) % n_cand
                 ordered = jnp.take_along_axis(cand_valid, order, axis=1)
@@ -277,118 +276,222 @@ def make_step(spec: NocSpec, topo: ChannelPlan, T: int, net_step):
                                              axis=1)[:, 0]
                 hold = jnp.zeros((R,), jnp.bool_)
                 for k, q in enumerate(qs):
-                    hq = ni.w_started[:, q] & (heads[q]["beats"] > 0)
+                    hq = ni.w_started[:, q] & (h_beats[:, q] > 0)
                     choice = jnp.where(hq & ~hold, k, choice)
                     hold = hold | hq
+                hold_of_ch[c] = hold
                 valid0 = has_any | hold
 
-                sel_masks = []
+                valid = jnp.zeros((R,), jnp.bool_)
                 for k, (tag, idx) in enumerate(cand):
-                    gate = heads[idx]["ready"] if tag == "rsp" else want[idx]
-                    sel_masks.append(valid0 & (choice == k) & gate)
-                valid = functools.reduce(jnp.logical_or, sel_masks)
-
-                dest = kind = txn = beat = jnp.zeros((R,), jnp.int32)
-                time = jnp.broadcast_to(now, (R,)).astype(jnp.int32)
-                for (tag, idx), s in zip(cand, sel_masks):
+                    gate = h_ready[:, idx] if tag == "rsp" else want[:, idx]
+                    s = valid0 & (choice == k) & gate
+                    valid = valid | s
                     if tag == "rsp":
-                        h = heads[idx]
-                        dest = jnp.where(s, h["dest"], dest)
-                        kind = jnp.where(s, h["kind"], kind)
-                        txn = jnp.where(s, h["txn"], txn)
-                        time = jnp.where(s, h["time0"], time)
-                        beat = jnp.where(s, h["beats"], beat)
+                        sel_rsp[idx] = s
+                        dest = jnp.where(s, h_dest[:, idx], dest)
+                        kind = jnp.where(s, h_kind[:, idx], kind)
+                        txn = jnp.where(s, h_txn[:, idx], txn)
+                        time = jnp.where(s, h_time0[:, idx], time)
+                        beat = jnp.where(s, h_beats[:, idx], beat)
                     else:
-                        dest = jnp.where(s, req_d[idx], dest)
+                        sel_req[idx] = s
+                        dest = jnp.where(s, req_d[:, idx], dest)
                         kind = jnp.where(s, req_kind(idx), kind)
                         txn = jnp.where(s, ni.ptr[:, idx], txn)
                         beat = jnp.where(s, 1, beat)
-                f = mk_flit(valid, dest, rows, time, kind, txn, beat)
-                net, ok, dv, df, lm = net_step(state.nets[c], valid, f)
-                for (tag, idx), s in zip(cand, sel_masks):
-                    if tag == "rsp":
-                        sent[idx] = sent[idx] | (ok & s)
-                    else:
-                        injected[idx] = ok & s
-                ni = ni._replace(inj_rr=ni.inj_rr.at[:, c].add(
-                    (ok & ~hold).astype(jnp.int32)))
-            new_nets.append(net)
-            deliveries.append((dv, df))
-            moves.append(lm)
+            iv_cols.append(valid)
+            flit = jnp.stack([dest, rows, time, kind, txn, beat], axis=1)
+            flit_cols.append(jnp.where(valid[:, None], flit, 0))
 
-        # ---- pointer / outstanding / queue updates ----------------------
-        inj = jnp.stack(injected, axis=1).astype(jnp.int32)
-        ni = ni._replace(ptr=ni.ptr + inj, out=ni.out + inj)
-        for q in range(topo.n_q):
-            ni = _q_sent(ni, q, sent[q])
+        # ---- ONE stacked fabric step for every channel ------------------
+        iv = jnp.stack(iv_cols)                        # (n_ch, R)
+        iflit = jnp.stack(flit_cols)                   # (n_ch, R, F)
+        net, ok_ch, dv_ch, df_ch, lm = net_step(
+            state.net, iv, iflit, dyn["depths"])
 
-        # ---- deliveries --------------------------------------------------
-        for c, (dv, df) in enumerate(deliveries):
-            kind = df[:, F_KIND]
-            src = df[:, F_SRC]
-            lat = now - df[:, F_TIME]
-            for i in topo.reqs_on[c]:
-                is_req = dv & (kind == req_kind(i))
-                ni = _q_push(
-                    ni, topo.queue_of_class[i], is_req, src,
-                    jnp.broadcast_to(burst_beats[i], (R,)).astype(jnp.int32),
-                    df[:, F_TIME], df[:, F_TXN], now + service_lat,
-                    jnp.full((R,), rsp_kind(i), jnp.int32))
-            rsp_classes = [i for i in range(topo.n_cls)
-                           if topo.queue_of_class[i] in topo.queues_on[c]]
-            for i in rsp_classes:
-                is_rsp = dv & (kind == rsp_kind(i))
-                last = is_rsp & (df[:, F_BEAT] <= 1)
-                li = last.astype(jnp.int32)
-                col = (jnp.arange(topo.n_cls) == i)
-                ni = ni._replace(
-                    beats_rx=ni.beats_rx + jnp.where(
-                        col, is_rsp.astype(jnp.int32)[:, None], 0),
-                    first_t=jnp.where(
-                        col & is_rsp[:, None],
-                        jnp.minimum(ni.first_t, now), ni.first_t),
-                    last_t=jnp.where(
-                        col & is_rsp[:, None],
-                        jnp.maximum(ni.last_t, now), ni.last_t),
-                    done=ni.done + jnp.where(col, li[:, None], 0),
-                    lat_sum=ni.lat_sum + jnp.where(
-                        col, jnp.where(last, lat, 0)[:, None], 0),
-                    lat_max=jnp.maximum(ni.lat_max, jnp.where(
-                        col, jnp.where(last, lat, 0)[:, None], 0)),
-                    out=ni.out - jnp.where(col, li[:, None], 0),
-                )
+        # ---- pointer / outstanding / ring-head updates ------------------
+        injected = jnp.stack(
+            [ok_ch[int(pa.req_ch[i])] & sel_req[i]
+             if i in sel_req else jnp.zeros((R,), jnp.bool_)
+             for i in range(plan.n_cls)], axis=1)      # (R, n_cls)
+        q_to_ch = {q: c for c in range(plan.n_ch) for q in plan.queues_on[c]}
+        sent = jnp.stack(
+            [ok_ch[q_to_ch[q]] & sel_rsp[q]
+             if q in sel_rsp else jnp.zeros((R,), jnp.bool_)
+             for q in range(plan.n_q)], axis=1)        # (R, n_q)
+        inj_rr = ni.inj_rr
+        for c, hold in hold_of_ch.items():
+            inj_rr = inj_rr.at[:, c].add((ok_ch[c] & ~hold).astype(jnp.int32))
 
-        new_moves = state.moves + jnp.stack(moves).astype(jnp.int32)
-        return SimState(tuple(new_nets), ni, now + 1, new_moves), None
+        inj = injected.astype(jnp.int32)
+        left = h_beats - sent.astype(jnp.int32)
+        rq = ni.rq.at[rows[:, None], q_ids[None, :], slot_h, Q_BEATS].set(
+            jnp.where(sent, left, h_beats))
+        ni = ni._replace(
+            ptr=ni.ptr + inj, out=ni.out + inj, inj_rr=inj_rr, rq=rq,
+            rq_head=ni.rq_head + (sent & (left <= 0)).astype(jnp.int32),
+            w_started=jnp.where(sent, left > 0, ni.w_started))
+
+        # ---- deliveries: batched push + batched per-class metrics -------
+        # gather each class's req/rsp delivery through its static channel
+        dv_req = dv_ch[pa.req_ch].T                    # (R, n_cls)
+        df_req = jnp.moveaxis(df_ch[pa.req_ch], 0, 1)  # (R, n_cls, F)
+        is_req = dv_req & (df_req[..., F_KIND] == pa.req_kinds[None, :])
+
+        # ONE segment-style scatter pushes every class's response entry:
+        # slot = tail of its queue + #earlier same-queue pushes this cycle
+        offset = jnp.einsum("rj,ij->ri", is_req.astype(jnp.int32),
+                            jnp.asarray(pa.push_before))
+        tail_of_cls = ni.rq_tail[:, pa.q_of_cls]       # (R, n_cls)
+        slot_p = (tail_of_cls + offset) % cap
+        slot_p = jnp.where(is_req, slot_p, cap)  # masked -> OOB, dropped
+        push_val = jnp.stack([
+            jnp.broadcast_to(now + service_lat, is_req.shape),
+            df_req[..., F_SRC],
+            jnp.broadcast_to(burst_beats[None, :], is_req.shape),
+            df_req[..., F_TIME],
+            df_req[..., F_TXN],
+            jnp.broadcast_to(pa.rsp_kinds[None, :], is_req.shape),
+        ], axis=-1).astype(jnp.int32)                  # (R, n_cls, 6)
+        rq = ni.rq.at[rows[:, None], pa.q_of_cls[None, :],
+                      slot_p].set(push_val, mode="drop")
+        tail_inc = is_req.astype(jnp.int32) @ pa.q_onehot
+        ni = ni._replace(rq=rq, rq_tail=ni.rq_tail + tail_inc)
+
+        # per-class response metrics, fully vectorized over (R, n_cls)
+        dv_rsp = dv_ch[pa.rsp_ch].T
+        df_rsp = jnp.moveaxis(df_ch[pa.rsp_ch], 0, 1)
+        is_rsp = dv_rsp & (df_rsp[..., F_KIND] == pa.rsp_kinds[None, :])
+        last = is_rsp & (df_rsp[..., F_BEAT] <= 1)
+        lat = jnp.where(last, now - df_rsp[..., F_TIME], 0)
+        li = last.astype(jnp.int32)
+        ni = ni._replace(
+            beats_rx=ni.beats_rx + is_rsp.astype(jnp.int32),
+            first_t=jnp.where(is_rsp, jnp.minimum(ni.first_t, now),
+                              ni.first_t),
+            last_t=jnp.where(is_rsp, jnp.maximum(ni.last_t, now),
+                             ni.last_t),
+            done=ni.done + li,
+            lat_sum=ni.lat_sum + lat,
+            lat_max=jnp.maximum(ni.lat_max, lat),
+            out=ni.out - li,
+        )
+
+        new_moves = state.moves + lm.astype(jnp.int32)
+        return SimState(net, ni, now + 1, new_moves), None
 
     return step
 
 
-@functools.lru_cache(maxsize=64)
-def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp"):
-    """One jitted simulator per (static spec, horizon, backend) triple.
+# --------------------------------------------------------------------- #
+# compiled-simulator cache (stats-instrumented, partitioned per backend)
+# --------------------------------------------------------------------- #
+SIM_CACHE_MAXSIZE = 256          # per backend partition
 
-    Returns ``fn(times, dests, service_lat, max_out, burst_beats)`` where
-    ``times``/``dests`` are (n_cls, R, T) int32 schedules and the scalar
-    knobs are traced — so the whole function is vmappable over a leading
-    batch axis for rate/seed/latency sweeps in a single jit.
+_caches: dict[str, OrderedDict] = {}
+_stats = {"hits": 0, "misses": 0, "evictions": 0}
+_cache_lock = threading.Lock()
 
-    ``backend`` selects who runs the router hot loop (see
-    :mod:`repro.noc.backends`); every backend must produce flit-for-flit
-    identical results behind this one surface.
+
+def sim_cache_stats() -> dict:
+    """Cache behavior of :func:`compiled_sim`: ``misses`` counts actual
+    simulator builds (one jit compilation each), ``hits`` reuses, and
+    ``evictions`` should stay 0 for any sane sweep — the cache is
+    partitioned per backend with :data:`SIM_CACHE_MAXSIZE` entries each,
+    so a 70-spec grid compiles each spec exactly once (tested)."""
+    with _cache_lock:
+        return {**_stats,
+                "size": sum(len(c) for c in _caches.values()),
+                "partitions": {b: len(c) for b, c in _caches.items()}}
+
+
+def sim_cache_clear() -> None:
+    with _cache_lock:
+        _caches.clear()
+        _stats.update(hits=0, misses=0, evictions=0)
+
+
+def _depth_normalized(spec: NocSpec, max_depth: int | None):
+    """(key spec, static max depth): the compiled simulator is depth-
+    agnostic up to the static max, so the cache key replaces every
+    channel depth with that max — specs differing only in FIFO depth
+    share one compilation."""
+    depths = tuple(ch.depth for ch in spec.channels)
+    d_max = max(depths) if max_depth is None else int(max_depth)
+    if d_max < max(depths):
+        raise ValueError(
+            f"max_depth={max_depth} below spec channel depths {depths}")
+    key_spec = spec.with_(channels=tuple(
+        replace(ch, depth=d_max) for ch in spec.channels))
+    return key_spec, d_max
+
+
+def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
+                 max_depth: int | None = None):
+    """One jitted simulator per (depth-normalized spec, horizon,
+    backend) triple, from a stats-instrumented per-backend cache.
+
+    Returns ``fn(times, dests, service_lat, max_out, burst_beats,
+    depths)`` where ``times``/``dests`` are (n_cls, R, T) int32
+    schedules and the scalar knobs — including the per-channel FIFO
+    ``depths`` vector — are traced, so the whole function is vmappable
+    over a leading batch axis for rate/seed/latency/depth sweeps in a
+    single jit.
+
+    ``max_depth`` pads the FIFO state to a larger static bound than the
+    spec declares, letting one compilation serve every depth up to that
+    bound (the padded-depth sweep mode); results are flit-for-flit
+    identical to a natively-sized build.  ``backend`` selects who runs
+    the fabric hot loop (see :mod:`repro.noc.backends`); every backend
+    must produce identical results behind this one surface.
+
+    Off-CPU the big ``times``/``dests`` operands are DONATED (the scan
+    carry workspace aliases them): pass numpy arrays (always safe — a
+    fresh device buffer is created per call, which is what every
+    ``repro.noc`` caller does) or fresh device arrays; reusing a jnp
+    array across calls on GPU/TPU raises "Array has been deleted".
     """
-    topo = build_channel_plan(spec)
-    network = get_backend(backend)(spec.topology)
-    step = make_step(spec, topo, T, network.step)
+    key_spec, d_max = _depth_normalized(spec, max_depth)
+    key = (key_spec, T)
+    with _cache_lock:
+        part = _caches.setdefault(backend, OrderedDict())
+        if key in part:
+            part.move_to_end(key)
+            _stats["hits"] += 1
+            return part[key]
+        _stats["misses"] += 1
+    fn = _build_sim(key_spec, T, backend, d_max)
+    with _cache_lock:
+        part = _caches.setdefault(backend, OrderedDict())
+        part[key] = fn
+        part.move_to_end(key)
+        while len(part) > SIM_CACHE_MAXSIZE:
+            part.popitem(last=False)
+            _stats["evictions"] += 1
+    return fn
 
-    @jax.jit
-    def run(times, dests, service_lat, max_out, burst_beats):
-        nets = tuple(network.init(ch.depth) for ch in spec.channels)
-        state = SimState(nets, init_ni(spec.n_routers, topo), jnp.int32(0),
-                         jnp.zeros((topo.n_ch,), jnp.int32))
-        dyn = {"times": times, "dests": dests,
+
+def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
+    plan = build_channel_plan(spec)
+    network = get_backend(backend)(spec.topology)
+    step = make_step(spec, plan, T, network.step)
+    n_ch, R = plan.n_ch, spec.n_routers
+
+    # donating the big schedule operands lets XLA alias them into the
+    # scan carry's workspace; CPU can't donate (it would only warn)
+    donate = () if jax.default_backend() == "cpu" else (0, 1)
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def run(times, dests, service_lat, max_out, burst_beats, depths):
+        state = SimState(network.init(n_ch, d_max),
+                         init_ni(R, plan, spec.resp_q_cap), jnp.int32(0),
+                         jnp.zeros((n_ch,), jnp.int32))
+        dyn = {"times": jnp.moveaxis(times, 0, 1),     # (R, n_cls, T)
+               "dests": jnp.moveaxis(dests, 0, 1),
                "service_lat": service_lat, "max_out": max_out,
-               "burst_beats": burst_beats}
+               "burst_beats": burst_beats,
+               "depths": jnp.asarray(depths, jnp.int32)}
         final, _ = jax.lax.scan(functools.partial(step, dyn), state, None,
                                 length=spec.cycles)
         ni = final.ni

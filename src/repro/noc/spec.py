@@ -92,8 +92,18 @@ class NocSpec:
     )
     service_lat: int = 10          # target memory + NI latency (cycles)
     cycles: int = 4000
+    # per-NI response reorder-ring capacity (entries per queue).  Sizes
+    # the engine's (R, n_q, resp_q_cap, 6) ring state, so small studies
+    # can shrink it; must cover the worst-case responses pending at one
+    # NI (bounded by sum over classes of max_outstanding x #sources
+    # targeting it — the engine does not check overflow at runtime).
+    resp_q_cap: int = 256
 
     def __post_init__(self):
+        if not isinstance(self.resp_q_cap, int) or isinstance(
+                self.resp_q_cap, bool) or self.resp_q_cap < 2:
+            raise ValueError(
+                f"resp_q_cap must be an int >= 2, got {self.resp_q_cap!r}")
         if not (callable(getattr(self.topology, "tables", None))
                 and getattr(self.topology, "__hash__", None)):
             raise TypeError(
@@ -119,6 +129,11 @@ class NocSpec:
             raise ValueError("duplicate traffic class names")
         if len(chans) != len(self.channels):
             raise ValueError("duplicate channel names")
+        for ch in self.channels:
+            if ch.depth < 1:
+                raise ValueError(
+                    f"channel {ch.name!r} needs FIFO depth >= 1, got "
+                    f"{ch.depth}")
         flows = dict(cm)
         for cls in self.classes:
             for d in ("req", "rsp"):
@@ -188,7 +203,8 @@ class NocSpec:
                     topology: Topology | None = None, depth: int = 2,
                     burstlen: int = 16, service_lat: int = 10,
                     cycles: int = 4000, max_narrow_outstanding: int = 8,
-                    max_wide_outstanding: int = 8) -> "NocSpec":
+                    max_wide_outstanding: int = 8,
+                    resp_q_cap: int = 256) -> "NocSpec":
         """Paper §III-B: three independent physical networks.
 
         ``topology`` overrides the default XY mesh (e.g. ``Torus(nx,
@@ -206,14 +222,15 @@ class NocSpec:
             ),
             class_map=(("narrow.req", "req"), ("narrow.rsp", "rsp"),
                        ("wide.req", "req"), ("wide.rsp", "wide")),
-            service_lat=service_lat, cycles=cycles)
+            service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap)
 
     @classmethod
     def wide_only(cls, nx: int = 4, ny: int = 4, *,
                   topology: Topology | None = None, depth: int = 2,
                   burstlen: int = 16, service_lat: int = 10,
                   cycles: int = 4000, max_narrow_outstanding: int = 8,
-                  max_wide_outstanding: int = 8) -> "NocSpec":
+                  max_wide_outstanding: int = 8,
+                  resp_q_cap: int = 256) -> "NocSpec":
         """Fig. 5 ablation: ONE network carries every flow; narrow flits
         burn full wide-link cycles and bursts hold links end-to-end."""
         return cls(
@@ -225,14 +242,14 @@ class NocSpec:
             channels=(PhysicalChannel("wide", depth, 603),),
             class_map=(("narrow.req", "wide"), ("narrow.rsp", "wide"),
                        ("wide.req", "wide"), ("wide.rsp", "wide")),
-            service_lat=service_lat, cycles=cycles)
+            service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap)
 
     @classmethod
     def multi_stream(cls, nx: int = 4, ny: int = 4, *, n_wide: int = 2,
                      topology: Topology | None = None,
                      depth: int = 2, burstlen: int = 16,
-                     service_lat: int = 10, cycles: int = 4000
-                     ) -> "NocSpec":
+                     service_lat: int = 10, cycles: int = 4000,
+                     resp_q_cap: int = 256) -> "NocSpec":
         """Journal-version style: ``n_wide`` parallel wide stream channels
         (wide class i rides its own physical network) next to the shared
         narrow req/rsp pair."""
@@ -247,4 +264,5 @@ class NocSpec:
         return cls(topology=_resolve_topology(nx, ny, topology),
                    classes=tuple(classes), channels=tuple(channels),
                    class_map=tuple(sorted(cmap)),
-                   service_lat=service_lat, cycles=cycles)
+                   service_lat=service_lat, cycles=cycles,
+                   resp_q_cap=resp_q_cap)

@@ -10,6 +10,26 @@ import pytest
 
 REPO = Path(__file__).resolve().parents[1]
 
+# hypothesis is an optional dev dependency (the `dev` extra in
+# pyproject.toml): without it, property tests skip but plain tests
+# still run.  Test modules import this one shim instead of each
+# carrying their own copy: `from conftest import given, settings, st`.
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="property tests need the `hypothesis` dev extra "
+                   "(pip install -e .[dev])")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _NoStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+    st = _NoStrategies()
+
 
 def run_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     """Run a python snippet in a subprocess with n host devices."""

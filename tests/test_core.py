@@ -2,25 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-# optional dev dependency (declared as the `dev` extra in pyproject.toml):
-# without it the property tests skip but the plain tests still run
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:
-    def given(*_a, **_k):
-        return lambda f: pytest.mark.skip(
-            reason="property tests need the `hypothesis` dev extra "
-                   "(pip install -e .[dev])")(f)
-
-    def settings(*_a, **_k):
-        return lambda f: f
-
-    class _NoStrategies:
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
-    st = _NoStrategies()
+# hypothesis-or-skip shim shared by every test module (dev extra)
+from conftest import given, settings, st  # noqa: E402
 
 from repro.core import channels, flit  # noqa: E402
 from repro.core.routing import _merge, _split  # noqa: E402

@@ -126,13 +126,18 @@ def _rand_arbiter_state(rng, R, P, lock_frac=0.2):
     (12, 5, 0.2),    # 3x4 mesh: R not divisible by the default block
     (16, 9, 0.2),    # express-link radix (Mesh(express=(2,)))
     (16, 5, 0.8),    # lock-heavy: the seed kernel's rr_ptr parity bug
+    (13, 5, 0.5),    # prime R: used to degrade to block_r=1; now padded
+    (7, 5, 0.5),     # odd R below the default block
+    (23, 9, 0.8),    # prime R x express radix x lock-heavy
 ])
 def test_router_arbiter(seed, R, P, lock_frac):
     """Random router states: kernel == engine arbiter (exact int match).
 
     The lock-heavy cases are a regression for the seed kernel, which
     advanced the round-robin pointer on wormhole-locked grants while
-    the engine held it — breaking flit-level backend parity."""
+    the engine held it — breaking flit-level backend parity.  The
+    prime/odd-R cases regression-test the neutral-row padding that
+    replaced `_pick_block`'s degenerate fallback to 1-row tiles."""
     rng = np.random.default_rng(seed)
     args = [jnp.asarray(a) for a in _rand_arbiter_state(rng, R, P,
                                                         lock_frac)]

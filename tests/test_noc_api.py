@@ -8,9 +8,13 @@ the NocSpec -> ChannelPolicy derivation shared with the collectives.
 import numpy as np
 import pytest
 
+# hypothesis-or-skip shim shared by every test module (dev extra)
+from conftest import given, settings, st
+
 from repro.noc import (Mesh, NocSpec, PhysicalChannel, Torus,  # noqa: F401
                        TrafficClass, Workload, build_channel_plan, hop_table,
-                       simulate, simulate_batch, sweep)
+                       sim_cache_clear, sim_cache_stats, simulate,
+                       simulate_batch, sweep)
 
 
 # --------------------------------------------------------------------- #
@@ -316,7 +320,7 @@ def test_topology_is_static_cache_key():
 # --------------------------------------------------------------------- #
 def test_backend_registry():
     from repro.noc import get_backend, list_backends
-    assert {"jnp", "pallas"} <= set(list_backends())
+    assert {"jnp", "pallas", "pallas_fused"} <= set(list_backends())
     with pytest.raises(KeyError, match="unknown backend"):
         get_backend("fpga")
 
@@ -332,28 +336,44 @@ def _assert_results_equal(a, b):
                                       b.channels[ch].link_moves)
 
 
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
 @pytest.mark.parametrize("preset", [NocSpec.narrow_wide, NocSpec.wide_only])
-def test_backend_pallas_matches_jnp_on_paper_presets(preset):
-    """simulate(spec, wl, backend="pallas") is flit-for-flit identical
-    to the jnp reference on both paper presets, under interference load
-    that exercises wormhole locks and round-robin state."""
+def test_backend_kernels_match_jnp_on_paper_presets(preset, backend):
+    """simulate(spec, wl, backend=...) is flit-for-flit identical to the
+    jnp reference on both paper presets (fig5 workload), under
+    interference load that exercises wormhole locks and round-robin
+    state — for both the arbiter-only kernel and the fused full-cycle
+    kernel."""
     spec = preset(4, 4, cycles=2000)
     wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
                        counts={"narrow": 40, "wide": 24},
                        src=0, dst=15, bidir=True)
     _assert_results_equal(simulate(spec, wl),
-                          simulate(spec, wl, backend="pallas"))
+                          simulate(spec, wl, backend=backend))
 
 
-def test_backend_pallas_matches_jnp_on_torus():
-    """Backend equivalence is not mesh-specific: the arbiter kernel
-    sees only routed ports, so the torus agrees too."""
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_backend_kernels_match_jnp_on_torus(backend):
+    """Backend equivalence is not mesh-specific: the kernels see only
+    routed ports / static tables, so the torus agrees too."""
     spec = NocSpec.wide_only(3, 3, topology=Torus(3, 3), cycles=1200)
     wl = Workload.make("uniform_random",
                        rates={"narrow": 0.2, "wide": 0.5},
                        counts={"narrow": 20, "wide": 6}, seed=3)
     _assert_results_equal(simulate(spec, wl),
-                          simulate(spec, wl, backend="pallas"))
+                          simulate(spec, wl, backend=backend))
+
+
+def test_backend_fused_matches_jnp_on_express():
+    """>5-port express-link routers through the fused kernel: the port
+    count is a static parameter, not a baked-in 5."""
+    topo = Mesh(6, 1, express=(2,))
+    spec = NocSpec.narrow_wide(6, 1, topology=topo, cycles=1200)
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.3, "wide": 0.5},
+                       counts={"narrow": 15, "wide": 4}, seed=5)
+    _assert_results_equal(simulate(spec, wl),
+                          simulate(spec, wl, backend="pallas_fused"))
 
 
 def test_backend_batch_and_sweep_accept_backend():
@@ -367,3 +387,99 @@ def test_backend_batch_and_sweep_accept_backend():
     (r,) = sweep([(spec, wl)], backend="pallas")
     np.testing.assert_array_equal(r.classes["narrow"].done,
                                   s.classes["narrow"].done)
+
+
+def test_backend_fused_batches():
+    """The fused kernel composes with vmapped sweeps (the batching rule
+    adds a grid dim over the stacked state)."""
+    spec = NocSpec.wide_only(2, 2, cycles=400)
+    wl = Workload.make("fig5", rates={"narrow": 0.1, "wide": 1.0},
+                       counts={"narrow": 5, "wide": 3}, src=0, dst=3)
+    b = simulate_batch(spec, [wl, wl], backend="pallas_fused")
+    s = simulate(spec, wl)
+    for i in range(2):
+        np.testing.assert_array_equal(b.point(i).classes["wide"].done,
+                                      s.classes["wide"].done)
+
+
+# --------------------------------------------------------------------- #
+# fused hot loop: property test (random fabrics, lock-heavy traffic)
+# --------------------------------------------------------------------- #
+@settings(max_examples=8, deadline=None)
+@given(nx=st.integers(2, 4), ny=st.integers(1, 3),
+       torus=st.booleans(), wide_only=st.booleans(),
+       seed=st.integers(0, 99),
+       burst=st.sampled_from([1, 2, 4, 8, 16]),
+       n_narrow=st.integers(0, 25), n_wide=st.integers(0, 10),
+       cycles=st.integers(50, 400))
+def test_fused_backend_property(nx, ny, torus, wide_only, seed, burst,
+                                n_narrow, n_wide, cycles):
+    """Random topology/seed/burst streams: the fused kernel is
+    flit-for-flit equal to the jnp reference over full random-length
+    runs, including wormhole-lock-heavy traffic (wide_only + long
+    bursts shares every flow on one link, so grants lock constantly)."""
+    topo = Torus(nx, ny) if torus else Mesh(nx, ny)
+    preset = NocSpec.wide_only if wide_only else NocSpec.narrow_wide
+    spec = preset(nx, ny, topology=topo, burstlen=burst, cycles=cycles)
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.5, "wide": 1.0},
+                       counts={"narrow": n_narrow, "wide": n_wide},
+                       seed=seed)
+    _assert_results_equal(simulate(spec, wl),
+                          simulate(spec, wl, backend="pallas_fused"))
+
+
+# --------------------------------------------------------------------- #
+# one-compilation sweeps + compiled-sim cache behavior
+# --------------------------------------------------------------------- #
+def test_depth_sweep_single_compilation():
+    """A FIFO-depth sweep across >= 4 depths runs through exactly ONE
+    compiled_sim build (depth is a traced operand masked against the
+    group max), and every point matches its natively-compiled run."""
+    wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                       counts={"narrow": 10, "wide": 4}, src=0, dst=3)
+    pts = [(NocSpec.narrow_wide(2, 2, depth=d, cycles=500), wl)
+           for d in (2, 3, 4, 6)]
+    sim_cache_clear()
+    res = sweep(pts)
+    stats = sim_cache_stats()
+    assert stats["misses"] == 1, stats
+    assert stats["evictions"] == 0, stats
+    for (spec, _), r in zip(pts, res):
+        single = simulate(spec, wl)
+        _assert_results_equal(r, single)
+        assert r.spec == spec     # each point keeps its OWN depths
+    # deeper FIFOs never hurt: the sweep is a real ablation, not noise
+    done = [int(r.classes["wide"].done.sum()) for r in res]
+    assert done == sorted(done), done
+
+
+def test_sim_cache_never_thrashes_on_large_grids():
+    """A 70-spec grid compiles each spec exactly once; a second pass is
+    all hits (the old lru_cache(maxsize=64) silently evicted jitted
+    sims mid-sweep for grids this size)."""
+    from repro.noc import compiled_sim
+    specs = [NocSpec.narrow_wide(2, 2, cycles=100 + 10 * i)
+             for i in range(70)]
+    sim_cache_clear()
+    for s in specs:
+        compiled_sim(s, 8)
+    first = sim_cache_stats()
+    assert first["misses"] == 70 and first["evictions"] == 0, first
+    for s in specs:
+        compiled_sim(s, 8)
+    second = sim_cache_stats()
+    assert second["misses"] == 70, second
+    assert second["hits"] >= 70, second
+    assert second["evictions"] == 0, second
+
+
+def test_resp_q_cap_sizes_ring_and_validates():
+    with pytest.raises(ValueError, match="resp_q_cap"):
+        NocSpec.narrow_wide(2, 2, resp_q_cap=1)
+    spec_small = NocSpec.narrow_wide(2, 2, cycles=800, resp_q_cap=16)
+    spec_big = NocSpec.narrow_wide(2, 2, cycles=800)
+    wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                       counts={"narrow": 10, "wide": 4}, src=0, dst=3)
+    # a ring that covers the in-flight responses behaves identically
+    _assert_results_equal(simulate(spec_small, wl), simulate(spec_big, wl))
