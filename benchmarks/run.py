@@ -199,6 +199,65 @@ def bench_backend_channels(smoke: bool = False):
     return rows
 
 
+def bench_write_mix(smoke: bool = False):
+    """AXI4 write-path bench: read-only vs 50/50 vs write-heavy traffic
+    through the full AW/W/B flow model, across ALL THREE backends.
+
+    For each mix, every backend must agree flit-for-flit (asserted);
+    the derived metrics record per-direction completions/latency and
+    the per-channel link-move shift as W bursts move to the wide
+    channel and B acks load the rsp channel.  Off-TPU the Pallas
+    backends run interpreted (correctness cost, not kernel speed)."""
+    from repro.noc import NocSpec, Workload, simulate
+    cycles = 1500 if smoke else 4000
+    n_wide = 12 if smoke else 48
+    spec = NocSpec.narrow_wide(4, 4, cycles=cycles)
+    backends = ("jnp", "pallas", "pallas_fused")
+    fields = ("done", "avg_lat", "max_lat", "beats_rx", "eff_bw",
+              "w_done", "w_avg_lat", "w_max_lat", "w_beats_rx", "w_eff_bw")
+    rows = []
+    for tag, wf in (("read_only", 0.0), ("mix50", 0.5),
+                    ("write_heavy", 0.9)):
+        wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
+                           counts={"narrow": 30, "wide": n_wide},
+                           src=0, dst=15, bidir=True, write_frac=wf)
+        results = {}
+        for backend in backends:
+            m, us, cus = _timed(simulate, spec, wl, backend=backend)
+            results[backend] = (m, us, cus)
+        mj, usj, cusj = results["jnp"]
+        equal = all(
+            np.array_equal(getattr(mj.classes[c], f),
+                           getattr(results[b][0].classes[c], f))
+            for b in backends[1:] for c in mj.classes for f in fields
+        ) and all(
+            np.array_equal(mj.channels[ch].link_moves,
+                           results[b][0].channels[ch].link_moves)
+            for b in backends[1:] for ch in mj.channels)
+        assert equal, f"backend mismatch on write mix {tag}!"
+        r_done = sum(int(c.done.sum()) for c in mj.classes.values())
+        w_done = sum(int(c.w_done.sum()) for c in mj.classes.values())
+        w_lat = float(np.max(mj.classes["wide"].w_avg_lat)) if w_done \
+            else 0.0
+        name = f"write_mix_{tag}"
+        print(f"{name},{usj:.0f},reads={r_done} writes={w_done} "
+              f"wide_w_avg_lat={w_lat:.0f}cyc "
+              f"rsp_moves={int(mj.channels['rsp'].link_moves)} "
+              f"drained={bool(mj.drained)} equal={equal}")
+        _record(name, usj, cusj, reads_done=r_done, writes_done=w_done,
+                wide_write_avg_lat=w_lat,
+                rsp_link_moves=int(mj.channels["rsp"].link_moves),
+                wide_link_moves=int(mj.channels["wide"].link_moves),
+                drained=bool(mj.drained), backends_equal=equal,
+                pallas_us=results["pallas"][1],
+                pallas_fused_us=results["pallas_fused"][1])
+        rows.append((tag, r_done, w_done))
+    # the mix conserves transactions while shifting direction
+    totals = {tag: r + w for tag, r, w in rows}
+    assert len(set(totals.values())) == 1, totals
+    return rows
+
+
 def _count_eqns(jaxpr) -> int:
     """Total jaxpr equations, recursing into scan/jit sub-jaxprs — the
     trace-size metric the fusion work optimizes."""
@@ -247,7 +306,8 @@ def bench_engine_throughput(smoke: bool = False):
     import jax
     from repro.noc import NocSpec, Workload, sim_cache_clear, \
         sim_cache_stats, simulate, sweep
-    from repro.noc.api import _depths, _dyn_scalars, stack_schedules
+    from repro.noc.api import _depths, _dyn_scalars, jitter_table, \
+        stack_schedules
     from repro.noc.engine import compiled_sim
     import _baseline_engine as baseline
 
@@ -256,22 +316,27 @@ def bench_engine_throughput(smoke: bool = False):
     wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
                        counts={"narrow": 100, "wide": 64},
                        src=0, dst=15, bidir=True)
-    times, dests = stack_schedules(spec, wl.schedules(spec))
+    times, dests, writes = stack_schedules(spec, wl.schedules(spec))
     sl, mo, bb = _dyn_scalars(spec, None, None, None)
     T = times.shape[-1]
 
     new_fn = compiled_sim(spec, T)
     old_fn = baseline.compiled_sim_baseline(spec, T)
-    new_args = (times, dests, sl, mo, bb, _depths(spec))
-    old_args = (times, dests, sl, mo, bb)
+    new_args = (times, dests, writes, sl, mo, bb, jitter_table(spec),
+                _depths(spec))
+    # the pinned baseline predates the AXI4 flow model: scalar service
+    # latency, no write mask/jitter operands
+    old_args = (times, dests, np.int32(spec.service_lat), mo, bb)
     block = jax.block_until_ready
     out_new, run_new, comp_new = _timed(
         lambda: block(new_fn(*new_args)), repeat=3)
     out_old, run_old, comp_old = _timed(
         lambda: block(old_fn(*old_args)), repeat=3)
+    # compare the read metrics the baseline knows about (the live
+    # engine additionally reports write metrics + liveness)
     equal = all(np.array_equal(np.asarray(out_new[k]),
-                               np.asarray(out_old[k])) for k in out_new)
-    assert equal, "fused engine diverged from the pinned baseline!"
+                               np.asarray(out_old[k])) for k in out_old)
+    assert equal, "AXI4 engine diverged from the pinned baseline!"
 
     sps_new = cycles / (run_new / 1e6)
     sps_old = cycles / (run_old / 1e6)
@@ -284,8 +349,13 @@ def bench_engine_throughput(smoke: bool = False):
           f"(baseline {sps_old:,.0f}) speedup={speedup:.2f}x "
           f"scan_body_eqns={cyc_new} (baseline {cyc_old}) "
           f"compile={comp_new/1e3:.0f}ms (baseline {comp_old/1e3:.0f}ms)")
-    if speedup < 3.0:
-        print(f"# WARNING: fig5 speedup {speedup:.2f}x below the 3x target")
+    # the live engine now also models the AXI4 write path (five flow
+    # gathers, W rings, per-direction metrics) the read-only baseline
+    # doesn't, so the historical 3x-over-baseline target became ~2x;
+    # warn only on a real regression below that level
+    if speedup < 1.5:
+        print(f"# WARNING: fig5 speedup {speedup:.2f}x below the 1.5x "
+              f"floor — engine regression?")
     _record("bench_engine_throughput", run_new, comp_new,
             steps_per_sec=sps_new, baseline_steps_per_sec=sps_old,
             speedup_x=speedup, baseline_us_per_call=run_old,
@@ -467,6 +537,7 @@ def main() -> None:
     bench_fig5b_bandwidth(args.smoke)
     bench_rate_sweep(args.smoke)
     bench_backend_channels(args.smoke)
+    bench_write_mix(args.smoke)
     bench_engine_throughput(args.smoke)
     bench_straggler_sim(args.smoke)
     bench_train_step(args.smoke)

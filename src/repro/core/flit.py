@@ -1,12 +1,23 @@
-"""Flit packing: move many small tensors as ONE wide word.
+"""Flit vocabulary + flit packing.
 
-FlooNoC sends header bits on parallel physical lines next to the payload so
-that every message is a single flit (no header/tail serialization, which
-would cap single-packet bandwidth at 33%). The software analogue: the
-*header* is static Python metadata (treedef, shapes, dtypes, offsets) that
-never enters the traced computation, and the *payload* is one flat buffer
-per dtype. A pytree of N small tensors therefore costs ONE fused collective
-instead of N latency-bound ones.
+Two halves, both named by the paper's flit:
+
+1. **AXI4 flow vocabulary** — the canonical five AXI channels every
+   traffic class decomposes into, shared by the cycle simulator
+   (``repro.noc``), its workloads, and the tests.  A *flow* is one
+   class's traffic on one AXI channel (``"<class>.ar"`` …); the flit
+   ``kind`` field encodes (class, flow) so the fabric stays completely
+   flow-agnostic — routers move int32 flits, only the NIs interpret
+   kinds.
+
+2. **Flit packing** — FlooNoC sends header bits on parallel physical
+   lines next to the payload so that every message is a single flit (no
+   header/tail serialization, which would cap single-packet bandwidth at
+   33%). The software analogue: the *header* is static Python metadata
+   (treedef, shapes, dtypes, offsets) that never enters the traced
+   computation, and the *payload* is one flat buffer per dtype. A pytree
+   of N small tensors therefore costs ONE fused collective instead of N
+   latency-bound ones.
 """
 from __future__ import annotations
 
@@ -16,6 +27,37 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# --------------------------------------------------------------------- #
+# AXI4 flow vocabulary (paper §II: fully AXI4-compatible NoC)
+# --------------------------------------------------------------------- #
+# Read transactions use AR (address read) -> R (read data burst); write
+# transactions use AW (address write) -> W (write data burst) -> B
+# (single-flit write response).  Order matters: it fixes the flit-kind
+# encoding, and AR=0 / R=1 keep the two read kinds of class 0 at the
+# same values the read-only engine used (kind is an opaque tag, but
+# stability makes traces comparable across versions).
+AXI_FLOWS: tuple[str, ...] = ("ar", "r", "aw", "w", "b")
+N_FLOWS = len(AXI_FLOWS)
+# request-direction flows travel source -> target; response-direction
+# flows travel target -> source (B is the write acknowledgement)
+REQUEST_FLOWS: tuple[str, ...] = ("ar", "aw", "w")
+RESPONSE_FLOWS: tuple[str, ...] = ("r", "b")
+
+
+def flow_kind(cls_idx: int, flow: str) -> int:
+    """Flit ``kind`` tag for class ``cls_idx``'s ``flow``."""
+    return N_FLOWS * cls_idx + AXI_FLOWS.index(flow)
+
+
+def kind_class(kind: int) -> int:
+    """Inverse of :func:`flow_kind`: the traffic-class index."""
+    return kind // N_FLOWS
+
+
+def kind_flow(kind: int) -> str:
+    """Inverse of :func:`flow_kind`: the AXI flow name."""
+    return AXI_FLOWS[kind % N_FLOWS]
 
 
 @dataclass(frozen=True)

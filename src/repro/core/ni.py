@@ -32,13 +32,27 @@ from . import routing
 
 @dataclass(frozen=True)
 class TransactionWindow:
-    """ROB-capacity model: at most `window` chunk transfers in flight."""
+    """ROB-capacity model: at most ``window`` read-direction chunk
+    transfers in flight, plus an independent ``write_window`` for the
+    write direction — AXI4 reads (AR -> R) and writes (AW -> W -> B)
+    hold separate outstanding budgets, so a gather stream and a scatter
+    stream flow-control independently (the cycle simulator models the
+    same split as per-class ``out_r``/``out_w`` ROB credits)."""
     chunks: int = 1
     window: int = 2
+    write_window: int = 2
 
     @property
     def rob_bytes_per_flit(self) -> Callable[[int], int]:
         return lambda total: (total // max(self.chunks, 1)) * self.window
+
+    @property
+    def rob_bytes_per_flit_rw(self) -> Callable[[int], int]:
+        """Both directions' working-set bound: the read ROB plus the
+        posted-write buffer (paper: the wide ROB is sized to 2
+        outstanding max-burst transactions per direction)."""
+        return lambda total: (total // max(self.chunks, 1)) \
+            * (self.window + self.write_window)
 
 
 def windowed_transactions(
@@ -61,6 +75,42 @@ def windowed_transactions(
             results[i - window] = gated
         results.append(thunk())
     return results
+
+
+def windowed_rw_transactions(
+    read_thunks: Sequence[Callable[[], jax.Array]],
+    write_thunks: Sequence[Callable[[], jax.Array]],
+    *,
+    window: int = 2,
+    write_window: int = 2,
+) -> tuple[list[jax.Array], list[jax.Array]]:
+    """Issue read- and write-direction transfers with INDEPENDENT
+    outstanding windows (the AXI AR/AW split).
+
+    Reads and writes interleave in program order so XLA can overlap
+    them on duplex links, but each direction's flow control only gates
+    its own stream: a full write window (unacked B's, in hardware)
+    never stalls read issue, and vice versa — the property PATRONoC
+    shows determines DNN-traffic behavior.  Each returned list matches
+    its thunks; the barriers are zero-cost token dependences exactly as
+    in :func:`windowed_transactions`.
+    """
+    reads: list[jax.Array] = []
+    writes: list[jax.Array] = []
+
+    def gate(results: list[jax.Array], i: int, win: int) -> None:
+        if win > 0 and i >= win:
+            token = results[i - win]
+            results[i - win] = lax.optimization_barrier((token,))[0]
+
+    for i in range(max(len(read_thunks), len(write_thunks))):
+        if i < len(read_thunks):
+            gate(reads, i, window)
+            reads.append(read_thunks[i]())
+        if i < len(write_thunks):
+            gate(writes, i, write_window)
+            writes.append(write_thunks[i]())
+    return reads, writes
 
 
 def chunked_all_reduce(

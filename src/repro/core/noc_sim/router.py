@@ -28,6 +28,10 @@ depth, F flit fields):
                                  output, or -1)
 
 Flit fields: [dest_router, src_router, inject_time, kind, txn_id, beat].
+``kind`` encodes the (traffic class, AXI flow) pair via
+:func:`repro.core.flit.flow_kind` — the fabric never decodes it (flits
+of AR/R reads and AW/W/B writes route identically); only the NI model
+in ``repro.noc.engine`` interprets kinds.
 The per-cycle update (`make_fabric_step`) is the hot loop; its phase-B
 arbitration is pluggable (``arbiter=``) so the Pallas kernel in
 ``kernels/noc_router.py`` can replace the jnp reference

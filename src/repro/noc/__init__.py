@@ -4,26 +4,32 @@
 
     spec = NocSpec.narrow_wide(nx=4, ny=4, cycles=8000)
     wl = Workload.make("fig5", rates={"narrow": 0.05, "wide": 1.0},
-                       counts={"narrow": 100, "wide": 200}, bidir=True)
+                       counts={"narrow": 100, "wide": 200}, bidir=True,
+                       write_frac={"wide": 0.5})    # half the wide txns
     result = simulate(spec, wl)                      # pure-jnp reference
     result = simulate(spec, wl, backend="pallas")    # Pallas router kernel
-    print(result.classes["narrow"].avg_lat)
+    print(result.classes["narrow"].avg_lat)          # reads (AR -> R)
+    print(result.classes["wide"].w_avg_lat)          # writes (AW -> W -> B)
 
 Specs declare a first-class topology (``Mesh(nx, ny)``, ``Torus(nx,
-ny)``, ``Mesh(nx, ny, express=(2,))`` for >5-port express routers) and
-channel layout (any number of physical networks with a class->channel
-map); workloads declare typed traffic patterns; sweeps vmap over
-rates/seeds/latencies in one jit (``simulate_batch``, ``sweep``).  The
-router hot loop is a pluggable backend (``backends.list_backends()``)
-behind the identical surface — every backend is flit-for-flit
-equivalent.
+ny)``, ``Mesh(nx, ny, express=(2,))`` for >5-port express routers), a
+channel layout (any number of physical networks), and the full AXI4
+flow map — every class's AR/R/AW/W/B flows assigned to channels (the
+paper maps address/ack flows narrow, data bursts wide).  Workloads
+declare typed traffic patterns with per-class read/write mixes; sweeps
+vmap over rates/seeds/latency distributions in one jit
+(``simulate_batch``, ``sweep``).  The router hot loop is a pluggable,
+flow-agnostic backend (``backends.list_backends()``) behind the
+identical surface — every backend is flit-for-flit equivalent,
+including on mixed read/write traffic.
 """
-from .api import (simulate, simulate_batch, simulate_schedules,  # noqa: F401
-                  stack_schedules, sweep)
+from .api import (jitter_table, simulate, simulate_batch,  # noqa: F401
+                  simulate_schedules, stack_schedules, sweep)
 from .backends import (get_backend, list_backends,  # noqa: F401
                        register_backend)
-from .engine import (build_channel_plan, compiled_sim,  # noqa: F401
-                     sim_cache_clear, sim_cache_stats)
+from .engine import (FlowPlan, build_channel_plan,  # noqa: F401
+                     build_flow_plan, compiled_sim, sim_cache_clear,
+                     sim_cache_stats)
 from .result import ChannelStats, ClassStats, SimResult  # noqa: F401
 from .spec import NocSpec, PhysicalChannel, TrafficClass  # noqa: F401
 from .topology import Mesh, Topology, Torus, hop_table  # noqa: F401

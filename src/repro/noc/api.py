@@ -1,8 +1,9 @@
 """`simulate(spec, workload)` — the one entry point for NoC experiments.
 
 The static half of an experiment (mesh dims, channel topology, FIFO
-depths, cycle horizon) lives in the frozen :class:`NocSpec` and keys a
-cached jitted simulator; the dynamic half (schedules, service latency,
+depths, cycle horizon, AXI flow map) lives in the frozen
+:class:`NocSpec` and keys a cached jitted simulator; the dynamic half
+(schedules + read/write mix, per-class service latency and jitter,
 outstanding limits, burst lengths) are traced operands.  That split is
 what makes sweeps cheap:
 
@@ -17,6 +18,14 @@ what makes sweeps cheap:
   masked against the group max, so a whole depth sweep shares one
   compilation (``sim_cache_stats()`` counts it).  Points that differ
   in any other static field (e.g. channel count) compile per group.
+
+Per-class service-latency *distributions*: ``service_lat`` accepts one
+int (every class) or a per-class vector of means; ``service_jitter``
+adds a per-request uniform offset in ``[-j, +j]`` drawn from a seeded
+static table (``jitter_seed``), so the target NIs answer after
+``mean + offset`` cycles.  Both are traced operands — a latency-
+distribution sweep vmaps like a rate sweep — and ``jitter=0``
+reproduces the deterministic model bit-for-bit.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import BIG, compiled_sim
+from .engine import BIG, JITTER_TABLE_LEN, compiled_sim
 from .result import SimResult
 from .spec import NocSpec
 from .workload import Workload
@@ -37,34 +46,87 @@ __all__ = ["simulate", "simulate_batch", "simulate_schedules", "sweep",
 
 
 def stack_schedules(spec: NocSpec,
-                    schedules: Mapping[str, tuple[np.ndarray, np.ndarray]],
-                    T: int | None = None) -> tuple[np.ndarray, np.ndarray]:
-    """Pad per-class (R, T_c) schedules to a common horizon and stack
-    into the (n_cls, R, T) operands the engine consumes."""
+                    schedules: Mapping[str, tuple],
+                    T: int | None = None) -> tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]:
+    """Pad per-class ``(times, dests[, writes])`` schedules to a common
+    horizon and stack into the (n_cls, R, T) operands the engine
+    consumes.  A 2-tuple entry (a custom schedule source predating the
+    write flag) is treated as all-reads."""
     R = spec.n_routers
     per_cls = []
     for cls in spec.classes:
-        t, d = schedules[cls.name]
+        entry = schedules[cls.name]
+        t, d = entry[0], entry[1]
         t = np.asarray(t, np.int32).reshape(R, -1)
         d = np.asarray(d, np.int32).reshape(R, -1)
-        per_cls.append((t, d))
-    T_need = max(t.shape[1] for t, _ in per_cls)
+        w = (np.asarray(entry[2], np.int32).reshape(R, -1)
+             if len(entry) > 2 else np.zeros_like(t))
+        if w.shape != t.shape:
+            raise ValueError(
+                f"class {cls.name!r}: writes shape {w.shape} != times "
+                f"shape {t.shape}")
+        per_cls.append((t, d, w))
+    T_need = max(t.shape[1] for t, _, _ in per_cls)
     T = T_need if T is None else max(T, T_need)
     times = np.full((len(per_cls), R, T), BIG, np.int32)
     dests = np.zeros((len(per_cls), R, T), np.int32)
-    for i, (t, d) in enumerate(per_cls):
+    writes = np.zeros((len(per_cls), R, T), np.int32)
+    for i, (t, d, w) in enumerate(per_cls):
         times[i, :, :t.shape[1]] = t
         dests[i, :, :d.shape[1]] = d
-    return times, dests
+        writes[i, :, :w.shape[1]] = w
+    return times, dests, writes
+
+
+def _per_class_vec(spec: NocSpec, v, default, name) -> np.ndarray:
+    """Normalize a scalar-or-per-class knob to an (n_cls,) int32 vector."""
+    n_cls = len(spec.classes)
+    if v is None:
+        v = np.asarray(default, np.int32)
+    v = np.asarray(v, np.int32)
+    if v.ndim == 0:
+        return np.full((n_cls,), int(v), np.int32)
+    if v.shape != (n_cls,):
+        raise ValueError(
+            f"{name} must be a scalar or length-{n_cls} per-class "
+            f"vector; got shape {v.shape}")
+    return v
 
 
 def _dyn_scalars(spec: NocSpec, service_lat, max_outstanding, burst_beats):
-    sl = np.int32(spec.service_lat if service_lat is None else service_lat)
-    mo = np.asarray([c.max_outstanding for c in spec.classes], np.int32) \
-        if max_outstanding is None else np.asarray(max_outstanding, np.int32)
-    bb = np.asarray([c.burst_beats for c in spec.classes], np.int32) \
-        if burst_beats is None else np.asarray(burst_beats, np.int32)
+    sl = _per_class_vec(
+        spec, service_lat,
+        [spec.service_lat if c.service_lat is None else c.service_lat
+         for c in spec.classes], "service_lat")
+    mo = _per_class_vec(spec, max_outstanding,
+                        [c.max_outstanding for c in spec.classes],
+                        "max_outstanding")
+    bb = _per_class_vec(spec, burst_beats,
+                        [c.burst_beats for c in spec.classes],
+                        "burst_beats")
     return sl, mo, bb
+
+
+def jitter_table(spec: NocSpec, service_jitter=None, *, seed: int = 0,
+                 service_lat=None) -> np.ndarray:
+    """Seeded static per-class jitter offsets, shape
+    ``(n_cls, JITTER_TABLE_LEN)``: row ``i`` holds uniform draws from
+    ``[-j_i, +j_i]`` (clipped so ``mean + offset >= 0``), indexed by
+    (issuing NI, transaction id) inside the engine so the draws
+    decorrelate across sources.  ``service_jitter=0`` rows are exactly
+    zero — the deterministic model.  The table is a traced operand:
+    sweeping jitter re-runs, never re-compiles."""
+    jit = _per_class_vec(spec, service_jitter,
+                         [c.service_jitter for c in spec.classes],
+                         "service_jitter")
+    if np.any(jit < 0):
+        raise ValueError(f"service_jitter must be >= 0, got {jit}")
+    sl, _, _ = _dyn_scalars(spec, service_lat, None, None)
+    rng = np.random.default_rng(np.uint32(0xF100) + np.uint32(seed))
+    tab = rng.integers(-jit[:, None], jit[:, None] + 1,
+                       size=(len(spec.classes), JITTER_TABLE_LEN))
+    return np.maximum(tab, -sl[:, None]).astype(np.int32)
 
 
 def _depths(spec: NocSpec) -> np.ndarray:
@@ -72,100 +134,130 @@ def _depths(spec: NocSpec) -> np.ndarray:
 
 
 def simulate_schedules(spec: NocSpec,
-                       schedules: Mapping[str, tuple[np.ndarray, np.ndarray]],
-                       *, service_lat: int | None = None,
+                       schedules: Mapping[str, tuple],
+                       *, service_lat=None,
                        max_outstanding: Sequence[int] | None = None,
                        burst_beats: Sequence[int] | None = None,
+                       service_jitter=None, jitter_seed: int = 0,
                        backend: str = "jnp") -> SimResult:
-    """Run one experiment from raw per-class schedules (the layer custom
-    schedule sources go through)."""
-    times, dests = stack_schedules(spec, schedules)
+    """Run one experiment from raw per-class ``(times, dests[, writes])``
+    schedules (the layer custom schedule sources go through)."""
+    times, dests, writes = stack_schedules(spec, schedules)
     sl, mo, bb = _dyn_scalars(spec, service_lat, max_outstanding,
                               burst_beats)
+    jt = jitter_table(spec, service_jitter, seed=jitter_seed,
+                      service_lat=service_lat)
     raw = compiled_sim(spec, times.shape[-1], backend)(
-        times, dests, sl, mo, bb, _depths(spec))
+        times, dests, writes, sl, mo, bb, jt, _depths(spec))
     return SimResult.from_raw(spec, raw)
 
 
 def simulate(spec: NocSpec, workload: Workload, *,
-             service_lat: int | None = None,
+             service_lat=None,
              max_outstanding: Sequence[int] | None = None,
              burst_beats: Sequence[int] | None = None,
+             service_jitter=None, jitter_seed: int = 0,
              backend: str = "jnp") -> SimResult:
     """Run one experiment; scalar keyword overrides shadow the spec's
     declared values without recompiling (they are traced operands).
-    ``backend`` picks the router hot-loop implementation ("jnp"
-    reference or the "pallas" arbiter kernel — see
-    :mod:`repro.noc.backends`); results are backend-invariant."""
+    ``service_lat``/``service_jitter`` take one int or a per-class
+    vector — the per-class service-latency distribution.  ``backend``
+    picks the router hot-loop implementation ("jnp" reference, the
+    "pallas" arbiter kernel, or the fused "pallas_fused" full-cycle
+    kernel — see :mod:`repro.noc.backends`); results are
+    backend-invariant."""
     return simulate_schedules(spec, workload.schedules(spec),
                               service_lat=service_lat,
                               max_outstanding=max_outstanding,
-                              burst_beats=burst_beats, backend=backend)
+                              burst_beats=burst_beats,
+                              service_jitter=service_jitter,
+                              jitter_seed=jitter_seed, backend=backend)
 
 
 def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
-                   service_lat: Sequence[int] | int | None = None,
-                   max_outstanding=None,
-                   burst_beats=None, backend: str = "jnp") -> SimResult:
+                   service_lat=None, max_outstanding=None,
+                   burst_beats=None, service_jitter=None,
+                   jitter_seed: int = 0,
+                   backend: str = "jnp") -> SimResult:
     """Run N operating points in ONE vmapped jit call.
 
-    ``workloads`` supplies per-point schedules (rate/seed/pattern
-    sweeps). ``service_lat`` may be one int (broadcast) or a length-N
-    sequence (swept). ``max_outstanding`` / ``burst_beats`` are
-    per-class: one int (all classes), a length-n_cls vector
-    (broadcast), or an (N, n_cls) array (swept per point).
-    Returns a SimResult whose arrays carry a leading sweep axis.
+    ``workloads`` supplies per-point schedules (rate/seed/pattern/mix
+    sweeps). The knobs (``service_lat``, ``max_outstanding``,
+    ``burst_beats``, ``service_jitter``) each take one int (all
+    classes, all points), a length-N sequence (swept per point), a
+    length-n_cls vector (per-class, broadcast across points), or an
+    (N, n_cls) array (fully swept).  When N == n_cls a 1-D vector is
+    ambiguous and resolves to each knob's historical meaning —
+    per-point for ``service_lat``, per-class for the rest; pass the
+    explicit (N, n_cls) form to be unambiguous.  Returns a SimResult
+    whose arrays carry a leading sweep axis.
     """
     n = len(workloads)
     if n == 0:
         raise ValueError("empty sweep")
     per_point = [wl.schedules(spec) for wl in workloads]
     T = max(max(np.asarray(t).reshape(spec.n_routers, -1).shape[1]
-                for t, _ in sched.values()) for sched in per_point)
+                for t, *_ in sched.values()) for sched in per_point)
     stacked = [stack_schedules(spec, sched, T=T) for sched in per_point]
-    times = np.stack([t for t, _ in stacked])          # (n, n_cls, R, T)
-    dests = np.stack([d for _, d in stacked])
+    times = np.stack([t for t, _, _ in stacked])       # (n, n_cls, R, T)
+    dests = np.stack([d for _, d, _ in stacked])
+    writes = np.stack([w for _, _, w in stacked])
     n_cls = len(spec.classes)
 
-    def scalar_axis(v, default, name):
-        """0-d -> broadcast; (n,) -> swept."""
+    def per_class_axis(v, default, name, prefer):
+        """scalar -> all classes; (n,) -> per-point; (n_cls,) ->
+        broadcast; (n, n_cls) -> swept.  When N == n_cls a 1-D vector
+        is ambiguous: ``prefer`` resolves it to the knob's historical
+        meaning (per-point for ``service_lat``, per-class for the
+        per-class knobs) — pass an explicit 2-D array to override."""
         if v is None:
-            return np.int32(default), None
+            return _per_class_vec(spec, None, default, name), None
         v = np.asarray(v, np.int32)
         if v.ndim == 0:
-            return v, None
-        if v.shape != (n,):
-            raise ValueError(
-                f"{name} must be a scalar or length-{n} sweep; got shape "
-                f"{v.shape}")
-        return v, 0
-
-    def per_class_axis(v, default, name):
-        """0-d -> all classes; (n_cls,) -> broadcast; (n, n_cls) -> swept."""
-        if v is None:
-            return np.asarray(default, np.int32), None
-        v = np.asarray(v, np.int32)
-        if v.ndim == 0:
-            return np.full((n_cls,), v, np.int32), None
-        if v.shape == (n_cls,):
+            return np.full((n_cls,), int(v), np.int32), None
+        interps = [("point", (n,)), ("class", (n_cls,))]
+        interps.sort(key=lambda it: it[0] != prefer)
+        for how, shape in interps:
+            if v.shape != shape:
+                continue
+            if how == "point":     # per-point scalar, swept
+                return np.broadcast_to(v[:, None], (n, n_cls)).copy(), 0
             return v, None
         if v.shape == (n, n_cls):
             return v, 0
         raise ValueError(
-            f"{name} must be a scalar, ({n_cls},) per-class vector, or "
-            f"({n}, {n_cls}) sweep; got shape {v.shape}")
+            f"{name} must be a scalar, length-{n} sweep, ({n_cls},) "
+            f"per-class vector, or ({n}, {n_cls}) array; got shape "
+            f"{v.shape}")
 
-    sl, sl_ax = scalar_axis(service_lat, spec.service_lat, "service_lat")
+    sl, sl_ax = per_class_axis(
+        service_lat,
+        [spec.service_lat if c.service_lat is None else c.service_lat
+         for c in spec.classes], "service_lat", prefer="point")
     mo, mo_ax = per_class_axis(
         max_outstanding, [c.max_outstanding for c in spec.classes],
-        "max_outstanding")
+        "max_outstanding", prefer="class")
     bb, bb_ax = per_class_axis(
-        burst_beats, [c.burst_beats for c in spec.classes], "burst_beats")
+        burst_beats, [c.burst_beats for c in spec.classes], "burst_beats",
+        prefer="class")
+    jit, jit_ax = per_class_axis(
+        service_jitter, [c.service_jitter for c in spec.classes],
+        "service_jitter", prefer="class")
+    if sl_ax is None and jit_ax is None:
+        jt = jitter_table(spec, jit, seed=jitter_seed, service_lat=sl)
+        jt_ax = None
+    else:                              # per-point means/jitter widths
+        jt = np.stack([jitter_table(
+            spec, jit[i] if jit_ax == 0 else jit, seed=jitter_seed,
+            service_lat=sl[i] if sl_ax == 0 else sl) for i in range(n)])
+        jt_ax = 0
 
     fn = compiled_sim(spec, T, backend)
-    raw = jax.vmap(fn, in_axes=(0, 0, sl_ax, mo_ax, bb_ax, None))(
-        jnp.asarray(times), jnp.asarray(dests), jnp.asarray(sl),
-        jnp.asarray(mo), jnp.asarray(bb), jnp.asarray(_depths(spec)))
+    raw = jax.vmap(fn, in_axes=(0, 0, 0, sl_ax, mo_ax, bb_ax, jt_ax,
+                                None))(
+        jnp.asarray(times), jnp.asarray(dests), jnp.asarray(writes),
+        jnp.asarray(sl), jnp.asarray(mo), jnp.asarray(bb),
+        jnp.asarray(jt), jnp.asarray(_depths(spec)))
     return SimResult.from_raw(spec, raw)
 
 
@@ -183,18 +275,21 @@ def _batch_depth_sweep(specs: Sequence[NocSpec], wls: Sequence[Workload],
     base = specs[0]
     per_point = [wl.schedules(s) for s, wl in zip(specs, wls)]
     T = max(max(np.asarray(t).reshape(base.n_routers, -1).shape[1]
-                for t, _ in sched.values()) for sched in per_point)
+                for t, *_ in sched.values()) for sched in per_point)
     stacked = [stack_schedules(s, sched, T=T)
                for s, sched in zip(specs, per_point)]
-    times = np.stack([t for t, _ in stacked])
-    dests = np.stack([d for _, d in stacked])
+    times = np.stack([t for t, _, _ in stacked])
+    dests = np.stack([d for _, d, _ in stacked])
+    writes = np.stack([w for _, _, w in stacked])
     sl, mo, bb = _dyn_scalars(base, None, None, None)
+    jt = jitter_table(base)
     depths = np.stack([_depths(s) for s in specs])         # (n, n_ch)
     fn = compiled_sim(base, T, backend,
                       max_depth=int(depths.max()))
-    raw = jax.vmap(fn, in_axes=(0, 0, None, None, None, 0))(
-        jnp.asarray(times), jnp.asarray(dests), jnp.asarray(sl),
-        jnp.asarray(mo), jnp.asarray(bb), jnp.asarray(depths))
+    raw = jax.vmap(fn, in_axes=(0, 0, 0, None, None, None, None, 0))(
+        jnp.asarray(times), jnp.asarray(dests), jnp.asarray(writes),
+        jnp.asarray(sl), jnp.asarray(mo), jnp.asarray(bb),
+        jnp.asarray(jt), jnp.asarray(depths))
     return SimResult.from_raw(base, raw)
 
 

@@ -31,8 +31,14 @@ The protocol:
   Returns ``(state, inj_ok (C, R), deliver_valid (C, R),
   deliver_flit (C, R, F), link_moves (C,))``.
 
-Backends are equivalence-tested flit-for-flit on the paper presets,
-torus, and express meshes (``tests/test_noc_api.py -k backend``).
+Backends are **flow-agnostic**: they move int32 flits whose ``kind``
+field encodes the (class, AXI flow) pair — AR/R reads and AW/W/B
+writes look identical down here, only the NI model in ``engine.py``
+interprets kinds.  That is what lets one fabric implementation serve
+the full AXI4 transaction set unchanged.  Backends are
+equivalence-tested flit-for-flit on the paper presets, torus, and
+express meshes, including mixed read/write traffic
+(``tests/test_noc_api.py -k backend``, ``tests/test_noc_axi4.py``).
 Register custom engines with :func:`register_backend`; select one with
 ``simulate(spec, wl, backend="pallas_fused")``.
 """

@@ -1,56 +1,71 @@
-"""Generalized N-channel FlooNoC cycle engine — the fused hot loop.
+"""Generalized N-channel FlooNoC cycle engine — fused hot loop with a
+full AXI4 flow model.
 
-This is the tentpole of the perf PR: the scan body that used to be a
-Python-unrolled tour over channels, classes, and queues (one fabric op
-sequence per channel, 6 scatters per ``_q_push``, per-class ``col``
-masked metric updates) is now three batched blocks per cycle:
+Every traffic class decomposes into the five AXI channels
+(:data:`repro.core.flit.AXI_FLOWS`): reads are AR -> R, writes are
+AW -> W -> B.  The *fabric* (``make_fabric_step`` + every backend in
+:mod:`repro.noc.backends`) stays completely flow-agnostic — routers
+move int32 flits whose ``kind`` field encodes (class, flow); only the
+batched NI model here interprets kinds.  The NI write path (paper
+§III-A, journal version's end-to-end parallel streams):
 
-1. **one stacked fabric call** — every physical channel's router update
-   runs as a single backend step over ``(n_ch, R, ...)`` state (the
-   ``"pallas_fused"`` backend collapses it further into ONE kernel
-   launch per cycle; see :mod:`repro.noc.backends`),
-2. **batched NI source/sink state** — schedule pointers, outstanding
-   counters, and metrics live as ``(R, n_cls)`` arrays; the response
-   reorder rings are ONE ``(R, n_q, cap, 6)`` array updated with a
-   single segment-style scatter per cycle (multi-class pushes into a
-   shared ring are ordered by a static prefix matrix, preserving the
-   sequential engine's slot order exactly),
-3. **traced FIFO depth** — state is sized by a static max and occupancy
-   checks compare against the dynamic per-channel ``depths`` operand,
-   so FIFO-depth sweeps share one compilation (``compiled_sim``'s
-   ``max_depth=`` padded mode; see :func:`repro.noc.api.sweep`).
+* **AW injection** — a scheduled write becomes a single-flit AW
+  candidate on its ``aw`` channel, gated by the class's *write* ROB
+  budget (reads and writes hold separate ``max_outstanding`` credits);
+* **W data trailing the AW grant** — the moment an AW wins injection,
+  a W burst entry (``burst_beats`` beats) is pushed into the class's
+  W ring; its beats stream onto the ``w`` channel from the next cycle
+  on, wormhole-atomic exactly like R response bursts;
+* **B responses on the response plumbing** — when the last W beat
+  lands, the target NI pushes a single-flit B entry into the response
+  ring of the class's ``b`` channel (sharing the ring — and therefore
+  the FIFO order — with R entries mapped to the same channel), ready
+  after the class's service latency; B delivery at the source
+  completes the write and frees its ROB slot.
 
 Per channel, the injection policy is derived from which flows the
 ``class_map`` routes onto it:
 
-* only response flows from one queue  -> direct streaming (paper's
-  dedicated narrow_rsp / wide networks),
-* only request flows                  -> static priority, latency-
-  critical (1-beat) classes first (paper's shared narrow_req carrying
-  narrow reqs + wide ARs with narrow priority),
-* requests and responses mixed       -> per-NI round-robin over all
-  flows with wormhole burst atomicity (the paper's wide-only ablation,
-  where a started burst excludes everything else on the link).
+* one response ring, nothing else      -> direct streaming (paper's
+  dedicated narrow_rsp network),
+* request-direction flows only         -> static priority: single-flit
+  address flows (AR/AW, latency-critical classes first), then W rings;
+  a started W burst is atomic and pins the channel,
+* response rings and request flows mixed -> per-NI round-robin over
+  [response rings..., one slot per class with request-direction flows]
+  with burst atomicity (the wide-only ablation).  Within a class slot,
+  AR/AW beat a fresh W burst; a started W burst pins the slot.
 
-Response reorder buffers are keyed by *response channel*: classes whose
-responses share one physical channel share one ring (the shared-FIFO
-ablation — one R channel on one link), classes with dedicated response
-channels get dedicated rings.  Ring capacity comes from the spec
-(``NocSpec.resp_q_cap``) so small studies stop carrying
-``(R, n_q, 256)``-sized state.  For the two paper presets this engine
-is cycle-exact with the seed simulator (golden-checked by the suite).
+The candidate structure is built so that **read-only traffic is
+flit-for-flit identical to the pre-AXI4 engine** (golden-checked): W
+rings and AW/B flows that never carry traffic never win arbitration,
+never advance round-robin state differently, and never reorder pushes.
 
-NI model (paper §III-A) is unchanged: end-to-end ROB flow control,
-read transactions req -> target NI -> after ``service_lat`` cycles a
-response of ``burst_beats`` beats streams back atomically, in-order
-delivery via deterministic table-driven routing.
+Service latency is a per-class *(mean, jitter)* distribution: the
+``service_lat`` operand is a per-class vector and a seeded static
+jitter table adds a per-request offset (indexed by txn id) to every
+R/B ready time — both traced, so latency-distribution sweeps vmap like
+every other knob, and ``jitter=0`` reproduces the fixed-latency model
+exactly.
+
+The per-cycle structure keeps the fused-hot-loop shape: ONE stacked
+fabric call for all channels, batched ``(R, n_cls)`` NI state, the
+response rings as one ``(R, n_rq, resp_q_cap, 6)`` array updated with
+a single segment-style scatter per cycle (the per-class W rings live
+in a separate small ``(R, n_cls, w_cap, 6)`` array — W occupancy is
+bounded by the write ROB credit, so it never pays the response-ring
+capacity), and FIFO depth as a traced operand (padded-depth sweeps
+share one compilation).  The engine also watches liveness: ``max_stall_cycles``
+(longest streak with transactions in flight but zero fabric activity)
+and ``drained`` (every scheduled transaction completed) surface the
+VC-less deadlock risk documented in ROADMAP.md.
 
 Static structure (topology, channel list, max FIFO depth, class->
-channel map, horizon) keys one jitted simulator per backend in a
+channel flow map, horizon) keys one jitted simulator per backend in a
 stats-instrumented cache (:func:`sim_cache_stats`); dynamic knobs
-(schedules, service latency, outstanding limits, burst lengths, FIFO
-depths) are traced operands so ``jax.vmap`` batches whole sweeps in one
-jit.
+(schedules incl. the write mask, per-class service latency + jitter
+table, outstanding limits, burst lengths, FIFO depths) are traced
+operands so ``jax.vmap`` batches whole sweeps in one jit.
 """
 from __future__ import annotations
 
@@ -64,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.flit import flow_kind
 from repro.core.noc_sim.router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME,
                                        F_TXN, N_FIELDS)
 from .backends import get_backend
@@ -71,23 +87,29 @@ from .spec import NocSpec
 
 BIG = 1 << 30
 
-# response-ring field order within the stacked (R, n_q, cap, 6) array
+# ring-entry field order, shared by the response and W ring arrays
 Q_READY, Q_DEST, Q_BEATS, Q_TIME0, Q_TXN, Q_KIND = range(6)
 N_QFIELDS = 6
 
+# static length of the seeded per-class jitter table (prime, so txn-id
+# indexing doesn't alias power-of-two burst/count periodicities)
+JITTER_TABLE_LEN = 251
+
 
 def req_kind(cls_idx: int) -> int:
+    """Legacy two-flow kind tag (pinned baseline engine only)."""
     return 2 * cls_idx
 
 
 def rsp_kind(cls_idx: int) -> int:
+    """Legacy two-flow kind tag (pinned baseline engine only)."""
     return 2 * cls_idx + 1
 
 
 class ChannelPlan(NamedTuple):
-    """Static routing of flows onto channels, derived from a NocSpec
-    (the *logical* half of the fabric; the physical half is the spec's
-    :class:`~repro.noc.topology.Topology`)."""
+    """Legacy read-shaped plan (kept for the pinned baseline engine and
+    collectives-derivation tests): request flows are the AR channels,
+    response queues the R channels — exactly the pre-AXI4 vocabulary."""
     n_cls: int
     n_ch: int
     n_q: int
@@ -120,59 +142,162 @@ def build_channel_plan(spec: NocSpec) -> ChannelPlan:
                        tuple(queue_of_class), tuple(reqs_on), queues_on)
 
 
+class FlowPlan(NamedTuple):
+    """Static routing of the five AXI flows onto channels and rings,
+    derived from a NocSpec (the *logical* half of the fabric; the
+    physical half is the spec's :class:`~repro.noc.topology.Topology`).
+
+    Ring space: response rings (one per distinct channel carrying any
+    R or B flow, first-appearance order) come first, then one W ring
+    per class (id ``n_rq + cls``).  Head/tail/started bookkeeping is
+    one stacked ``(R, n_q)`` set, but the entry storage is split:
+    response rings are ``(R, n_rq, resp_q_cap, 6)`` while W rings are
+    ``(R, n_cls, w_cap, 6)`` with ``w_cap`` derived from the classes'
+    declared ``max_outstanding`` — a W ring can never hold more
+    pending bursts than the write ROB grants credits, so it doesn't
+    pay the big response-ring capacity (raising ``max_outstanding``
+    above the declared value via the traced override can overflow the
+    W ring, the same unchecked-overflow contract as ``resp_q_cap``).
+    """
+    n_cls: int
+    n_ch: int
+    n_rq: int                        # response rings (channel-keyed)
+    n_q: int                         # n_rq + n_cls (per-class W rings)
+    w_cap: int                       # static W-ring capacity per class
+    rq_of_r: tuple[int, ...]         # class -> ring its R entries enter
+    rq_of_b: tuple[int, ...]         # class -> ring its B entries enter
+    chan_of_q: tuple[int, ...]       # every queue -> physical channel
+    # channel -> ordered single-flit address-flow slots ((cls, "ar"|"aw"))
+    singles_on: tuple[tuple[tuple[int, str], ...], ...]
+    wqs_on: tuple[tuple[int, ...], ...]   # channel -> W ring ids
+    rqs_on: tuple[tuple[int, ...], ...]   # channel -> response ring ids
+    # channel -> class ids with ANY request-direction flow on it (the
+    # round-robin class slots of mixed channels), prio order
+    rr_classes: tuple[tuple[int, ...], ...]
+    push_order_r: tuple[int, ...]    # R-push sequential order (class ids)
+
+
+def build_flow_plan(spec: NocSpec) -> FlowPlan:
+    n_cls, n_ch = len(spec.classes), len(spec.channels)
+    ch_of = {f: [spec.flow_channel(c.name, f) for c in spec.classes]
+             for f in ("ar", "aw", "w", "r", "b")}
+    # response rings: channel-keyed, first-appearance order over the R
+    # flows then the B flows — R-only specs get exactly the pre-AXI4
+    # ring order, B flows sharing an R channel share its ring (and its
+    # FIFO order: the shared-channel ablation covers acks too)
+    ring_ch: list[int] = []
+    for ch in [*ch_of["r"], *ch_of["b"]]:
+        if ch not in ring_ch:
+            ring_ch.append(ch)
+    n_rq = len(ring_ch)
+    prio = sorted(range(n_cls),
+                  key=lambda i: (spec.classes[i].burst_beats > 1, i))
+    singles_on = tuple(
+        tuple((i, f) for i in prio for f in ("ar", "aw")
+              if ch_of[f][i] == c)
+        for c in range(n_ch))
+    wqs_on = tuple(tuple(n_rq + i for i in prio if ch_of["w"][i] == c)
+                   for c in range(n_ch))
+    rqs_on = tuple(tuple(q for q in range(n_rq) if ring_ch[q] == c)
+                   for c in range(n_ch))
+    rr_classes = tuple(
+        tuple(i for i in prio
+              if c in (ch_of["ar"][i], ch_of["aw"][i], ch_of["w"][i]))
+        for c in range(n_ch))
+    # sequential R-push order of the read-only engine: channel-major,
+    # then the channel's priority order — preserves exact ring-slot
+    # ordering when several classes push one shared ring per cycle
+    push_order_r = tuple(i for c in range(n_ch) for i in prio
+                         if ch_of["ar"][i] == c)
+    return FlowPlan(
+        n_cls=n_cls, n_ch=n_ch, n_rq=n_rq, n_q=n_rq + n_cls,
+        w_cap=max(2, max(c.max_outstanding for c in spec.classes)),
+        rq_of_r=tuple(ring_ch.index(ch) for ch in ch_of["r"]),
+        rq_of_b=tuple(ring_ch.index(ch) for ch in ch_of["b"]),
+        chan_of_q=tuple(ring_ch) + tuple(ch_of["w"]),
+        singles_on=singles_on, wqs_on=wqs_on, rqs_on=rqs_on,
+        rr_classes=rr_classes, push_order_r=push_order_r)
+
+
 class _PlanArrays(NamedTuple):
-    """Static index/selector arrays derived from a ChannelPlan, shared
-    by every cycle of the batched NI update.  Kept as *numpy* so index
+    """Static index/selector arrays derived from a FlowPlan, shared by
+    every cycle of the batched NI update.  Kept as *numpy* so index
     lookups stay concrete at trace time (a jnp constant would turn
-    ``req_ch[i]`` into a traced op inside the scan body)."""
-    q_of_cls: np.ndarray      # (n_cls,) response queue per class
-    req_ch: np.ndarray        # (n_cls,) channel carrying each class's reqs
-    rsp_ch: np.ndarray        # (n_cls,) channel carrying each class's rsps
-    req_kinds: np.ndarray     # (n_cls,)
-    rsp_kinds: np.ndarray     # (n_cls,)
-    push_before: np.ndarray   # (n_cls, n_cls) 1 where j pushes the same
-    #                           queue as i earlier in the sequential order
-    q_onehot: np.ndarray      # (n_cls, n_q) class -> queue one-hot
+    ``ar_ch[i]`` into a traced op inside the scan body)."""
+    ar_ch: np.ndarray         # (n_cls,) channel per flow
+    aw_ch: np.ndarray
+    w_ch: np.ndarray
+    r_ch: np.ndarray
+    b_ch: np.ndarray
+    ar_kinds: np.ndarray      # (n_cls,) flit kind tags per flow
+    aw_kinds: np.ndarray
+    r_kinds: np.ndarray
+    w_kinds: np.ndarray
+    b_kinds: np.ndarray
+    # response-ring push machinery: slot s in [0, 2*n_cls) is the R
+    # push of class s or the B push of class s-n_cls; one masked
+    # scatter serves both (W pushes go to the per-class W-ring array,
+    # where each ring has exactly one pusher — no ordering needed).
+    q_of_slot: np.ndarray     # (2*n_cls,) destination ring per push slot
+    push_before: np.ndarray   # (2n, 2n) 1 where slot j pushes the same
+    #                           ring as slot i earlier in sequential order
+    q_onehot: np.ndarray      # (2*n_cls, n_rq) slot -> ring one-hot
 
 
-def _plan_arrays(spec: NocSpec, plan: ChannelPlan) -> _PlanArrays:
-    n_cls, n_q = plan.n_cls, plan.n_q
-    q_of = np.asarray(plan.queue_of_class, np.int32)
-    req_ch = np.asarray([spec.req_channel(c.name) for c in spec.classes],
-                        np.int32)
-    rsp_ch = np.asarray([spec.rsp_channel(c.name) for c in spec.classes],
-                        np.int32)
-    # sequential push order of the pre-fusion engine: channel-major, then
-    # the channel's priority order — preserves exact ring-slot ordering
-    # when several classes push one shared queue in the same cycle
-    order = [i for c in range(plan.n_ch) for i in plan.reqs_on[c]]
-    pos = np.empty(n_cls, np.int64)
-    pos[order] = np.arange(n_cls)
+def _plan_arrays(spec: NocSpec, plan: FlowPlan) -> _PlanArrays:
+    n_cls = plan.n_cls
+    ch = {f: np.asarray([spec.flow_channel(c.name, f)
+                         for c in spec.classes], np.int32)
+          for f in ("ar", "aw", "w", "r", "b")}
+    kinds = {f: np.asarray([flow_kind(i, f) for i in range(n_cls)],
+                           np.int32) for f in ("ar", "aw", "r", "w", "b")}
+    q_of_slot = np.concatenate([
+        np.asarray(plan.rq_of_r, np.int64),
+        np.asarray(plan.rq_of_b, np.int64)])
+    # sequential order: R pushes (read-only engine's channel-major
+    # order) first, then B pushes — read-only traffic never activates
+    # the trailing slots, so its slot order is exact
+    pos = np.empty(2 * n_cls, np.int64)
+    pos[list(plan.push_order_r)] = np.arange(n_cls)
+    pos[n_cls:] = np.arange(n_cls, 2 * n_cls)
     push_before = ((pos[None, :] < pos[:, None])
-                   & (q_of[None, :] == q_of[:, None])).astype(np.int32)
-    q_onehot = (q_of[:, None] == np.arange(n_q)[None, :]).astype(np.int32)
+                   & (q_of_slot[None, :] == q_of_slot[:, None])
+                   ).astype(np.int32)
+    q_onehot = (q_of_slot[:, None] == np.arange(plan.n_rq)[None, :]
+                ).astype(np.int32)
     return _PlanArrays(
-        q_of_cls=q_of, req_ch=req_ch, rsp_ch=rsp_ch,
-        req_kinds=np.asarray([req_kind(i) for i in range(n_cls)], np.int32),
-        rsp_kinds=np.asarray([rsp_kind(i) for i in range(n_cls)], np.int32),
-        push_before=push_before, q_onehot=q_onehot)
+        ar_ch=ch["ar"], aw_ch=ch["aw"], w_ch=ch["w"], r_ch=ch["r"],
+        b_ch=ch["b"], ar_kinds=kinds["ar"], aw_kinds=kinds["aw"],
+        r_kinds=kinds["r"], w_kinds=kinds["w"], b_kinds=kinds["b"],
+        q_of_slot=q_of_slot.astype(np.int32), push_before=push_before,
+        q_onehot=q_onehot)
 
 
 class NIState(NamedTuple):
     ptr: jax.Array          # (R, n_cls) schedule pointers
-    out: jax.Array          # (R, n_cls) outstanding (ROB flow control)
-    rq_head: jax.Array      # (R, n_q)
+    out_r: jax.Array        # (R, n_cls) outstanding reads (ROB credits)
+    out_w: jax.Array        # (R, n_cls) outstanding writes (write ROB)
+    rq_head: jax.Array      # (R, n_q) rsp rings first, then W rings
     rq_tail: jax.Array      # (R, n_q)
-    rq: jax.Array           # (R, n_q, cap, 6) stacked response rings
+    rq: jax.Array           # (R, n_rq, resp_q_cap, 6) response rings
+    wq: jax.Array           # (R, n_cls, w_cap, 6) per-class W rings
     w_started: jax.Array    # (R, n_q) burst mid-stream (inject atomicity)
     inj_rr: jax.Array       # (R, n_ch) mixed-channel round-robin
-    # per-class metrics: (R, n_cls)
+    # per-class read metrics: (R, n_cls), measured at the requester
     lat_sum: jax.Array
     lat_max: jax.Array
     done: jax.Array
     beats_rx: jax.Array
     first_t: jax.Array
     last_t: jax.Array
+    # per-class write metrics: latency/done at the issuing NI (B
+    # arrival), W-beat counts/span at the receiving NI
+    w_lat_sum: jax.Array
+    w_lat_max: jax.Array
+    w_done: jax.Array
+    w_beats_rx: jax.Array
+    w_first_t: jax.Array
+    w_last_t: jax.Array
 
 
 class SimState(NamedTuple):
@@ -180,93 +305,159 @@ class SimState(NamedTuple):
     ni: NIState
     cycle: jax.Array
     moves: jax.Array        # (n_ch,) link traversals per channel
+    cur_stall: jax.Array    # scalar: current zero-activity streak
+    max_stall: jax.Array    # scalar: longest such streak
 
 
-def init_ni(R: int, plan: ChannelPlan, cap: int) -> NIState:
+def init_ni(R: int, plan: FlowPlan, cap: int) -> NIState:
     zc = jnp.zeros((R, plan.n_cls), jnp.int32)
     zq = jnp.zeros((R, plan.n_q), jnp.int32)
+    big = jnp.full((R, plan.n_cls), BIG, jnp.int32)
     return NIState(
-        ptr=zc, out=zc, rq_head=zq, rq_tail=zq,
-        rq=jnp.zeros((R, plan.n_q, cap, N_QFIELDS), jnp.int32),
+        ptr=zc, out_r=zc, out_w=zc, rq_head=zq, rq_tail=zq,
+        rq=jnp.zeros((R, plan.n_rq, cap, N_QFIELDS), jnp.int32),
+        wq=jnp.zeros((R, plan.n_cls, plan.w_cap, N_QFIELDS), jnp.int32),
         w_started=jnp.zeros((R, plan.n_q), jnp.bool_),
         inj_rr=jnp.zeros((R, plan.n_ch), jnp.int32),
         lat_sum=zc, lat_max=zc, done=zc, beats_rx=zc,
-        first_t=jnp.full((R, plan.n_cls), BIG, jnp.int32), last_t=zc)
+        first_t=big, last_t=zc,
+        w_lat_sum=zc, w_lat_max=zc, w_done=zc, w_beats_rx=zc,
+        w_first_t=big, w_last_t=zc)
 
 
-def make_step(spec: NocSpec, plan: ChannelPlan, T: int, net_step):
+def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
     """Build the per-cycle transition. Dynamic operands arrive via the
-    closure-free ``dyn`` dict (schedules + scalar knobs + depths);
-    ``net_step`` is the backend's stacked one-cycle fabric update
-    (:class:`repro.noc.backends.Network`)."""
+    closure-free ``dyn`` dict (schedules + write mask + scalar knobs +
+    jitter table + depths); ``net_step`` is the backend's stacked
+    one-cycle fabric update (:class:`repro.noc.backends.Network`)."""
     R = spec.n_routers
     cap = spec.resp_q_cap
+    w_cap = plan.w_cap
     pa = _plan_arrays(spec, plan)
     rows = jnp.arange(R)
-    q_ids = jnp.arange(plan.n_q)
+    rq_ids = jnp.arange(plan.n_rq)
+    wq_ids = jnp.arange(plan.n_cls)
+    n_cls = plan.n_cls
 
     def step(dyn, state: SimState, _):
         times, dests = dyn["times"], dyn["dests"]     # (R, n_cls, T)
-        service_lat = dyn["service_lat"]
+        writes = dyn["writes"]                        # (R, n_cls, T)
+        service_lat = dyn["service_lat"]              # (n_cls,)
+        jitter = dyn["jitter"]                        # (n_cls, JT)
         max_out, burst_beats = dyn["max_out"], dyn["burst_beats"]
         ni = state.ni
         now = state.cycle
 
-        # ---- source side: per-class request candidates (ROB gated) ------
+        # ---- source side: per-class AR/AW candidates (ROB gated) --------
         p = jnp.clip(ni.ptr, 0, T - 1)[:, :, None]
         t_sel = jnp.take_along_axis(times, p, axis=2)[:, :, 0]
-        want = ((ni.ptr < T) & (t_sel <= now)
-                & (ni.out < max_out[None, :]))        # (R, n_cls)
+        is_wr = jnp.take_along_axis(writes, p, axis=2)[:, :, 0] > 0
+        due = (ni.ptr < T) & (t_sel <= now)            # (R, n_cls)
+        want_ar = due & ~is_wr & (ni.out_r < max_out[None, :])
+        want_aw = due & is_wr & (ni.out_w < max_out[None, :])
         req_d = jnp.take_along_axis(dests, p, axis=2)[:, :, 0]
 
-        # ---- target side: response ring heads, all queues at once -------
-        slot_h = ni.rq_head % cap                      # (R, n_q)
-        h = jnp.take_along_axis(ni.rq, slot_h[:, :, None, None],
-                                axis=2)[:, :, 0, :]    # (R, n_q, 6)
+        # ---- ring heads (response rings + W rings), all at once ---------
+        slot_hr = ni.rq_head[:, :plan.n_rq] % cap      # (R, n_rq)
+        slot_hw = ni.rq_head[:, plan.n_rq:] % w_cap    # (R, n_cls)
+        h = jnp.concatenate([
+            jnp.take_along_axis(ni.rq, slot_hr[:, :, None, None],
+                                axis=2)[:, :, 0, :],
+            jnp.take_along_axis(ni.wq, slot_hw[:, :, None, None],
+                                axis=2)[:, :, 0, :]], axis=1)  # (R, n_q, 6)
         have = ni.rq_head < ni.rq_tail
         h_ready = have & (h[..., Q_READY] <= now)
         h_dest, h_beats = h[..., Q_DEST], h[..., Q_BEATS]
         h_time0, h_txn, h_kind = h[..., Q_TIME0], h[..., Q_TXN], h[..., Q_KIND]
+        h_held = ni.w_started & (h_beats > 0)          # burst mid-stream
 
         # ---- per-channel injection policy (small static loop) -----------
-        sel_req: dict[int, jax.Array] = {}   # class -> selected this cycle
-        sel_rsp: dict[int, jax.Array] = {}   # queue -> streamed this cycle
+        sel_ar: dict[int, jax.Array] = {}   # class -> AR selected
+        sel_aw: dict[int, jax.Array] = {}   # class -> AW selected
+        sel_q: dict[int, jax.Array] = {}    # ring -> head streamed
         hold_of_ch: dict[int, jax.Array] = {}
         iv_cols, flit_cols = [], []
         zero = jnp.zeros((R,), jnp.int32)
+        false = jnp.zeros((R,), jnp.bool_)
+
+        def pick_head(q, s, dest, kind, txn, time, beat):
+            sel_q[q] = sel_q.get(q, false) | s
+            return (jnp.where(s, h_dest[:, q], dest),
+                    jnp.where(s, h_kind[:, q], kind),
+                    jnp.where(s, h_txn[:, q], txn),
+                    jnp.where(s, h_time0[:, q], time),
+                    jnp.where(s, h_beats[:, q], beat))
+
+        def pick_single(i, fl, s, dest, kind, txn, beat):
+            if fl == "ar":
+                sel_ar[i] = sel_ar.get(i, false) | s
+                kind_v = int(pa.ar_kinds[i])
+            else:
+                sel_aw[i] = sel_aw.get(i, false) | s
+                kind_v = int(pa.aw_kinds[i])
+            return (jnp.where(s, req_d[:, i], dest),
+                    jnp.where(s, kind_v, kind),
+                    jnp.where(s, ni.ptr[:, i], txn),
+                    jnp.where(s, 1, beat))
+
         for c in range(plan.n_ch):
-            reqs, qs = plan.reqs_on[c], plan.queues_on[c]
+            singles = plan.singles_on[c]
+            wqs, rqs = plan.wqs_on[c], plan.rqs_on[c]
+            rr_cls = plan.rr_classes[c]
             dest = kind = txn = beat = zero
             time = jnp.broadcast_to(now, (R,)).astype(jnp.int32)
-            if not reqs and not qs:          # idle channel: still steps
-                valid = jnp.zeros((R,), jnp.bool_)
-            elif not reqs and len(qs) == 1:
-                # dedicated response channel: stream the queue head
-                q = qs[0]
+            if not singles and not wqs and not rqs:    # idle channel
+                valid = false
+            elif not singles and not wqs and len(rqs) == 1:
+                # dedicated response channel: stream the ring head
+                q = rqs[0]
                 valid = h_ready[:, q]
-                sel_rsp[q] = valid
+                sel_q[q] = valid
                 dest, kind, txn = h_dest[:, q], h_kind[:, q], h_txn[:, q]
                 time, beat = h_time0[:, q], h_beats[:, q]
-            elif reqs and not qs:
-                # request-only channel: static priority, smalls first
-                taken = jnp.zeros((R,), jnp.bool_)
-                for i in reqs:
-                    s = want[:, i] & ~taken
-                    sel_req[i] = s
+            elif not rqs:
+                # request-direction channel: a started W burst pins the
+                # channel; else static priority — address flows
+                # (latency-critical classes first), then fresh W bursts
+                taken = false
+                for q in wqs:
+                    s = h_held[:, q] & ~taken
                     taken = taken | s
-                    dest = jnp.where(s, req_d[:, i], dest)
-                    kind = jnp.where(s, req_kind(i), kind)
-                    txn = jnp.where(s, ni.ptr[:, i], txn)
-                valid, beat = taken, jnp.where(taken, 1, 0)
+                    dest, kind, txn, time, beat = pick_head(
+                        q, s, dest, kind, txn, time, beat)
+                for i, fl in singles:
+                    cand = want_ar[:, i] if fl == "ar" else want_aw[:, i]
+                    s = cand & ~taken
+                    taken = taken | s
+                    dest, kind, txn, beat = pick_single(
+                        i, fl, s, dest, kind, txn, beat)
+                for q in wqs:
+                    s = h_ready[:, q] & ~taken
+                    taken = taken | s
+                    dest, kind, txn, time, beat = pick_head(
+                        q, s, dest, kind, txn, time, beat)
+                valid = taken
             else:
-                # mixed channel: round-robin over [rsp heads..., reqs...]
-                # with burst atomicity — an in-flight burst excludes all
-                cand = ([("rsp", q) for q in qs]
-                        + [("req", i) for i in reqs])
+                # mixed channel: round-robin over [response rings...,
+                # class slots...] with burst atomicity — an in-flight
+                # burst (response or W) excludes everything else
+                cand = [("rq", q) for q in rqs] + [("cls", i)
+                                                   for i in rr_cls]
                 n_cand = len(cand)
+
+                def cls_valid(i):
+                    v = false
+                    if int(pa.ar_ch[i]) == c:
+                        v = v | want_ar[:, i]
+                    if int(pa.aw_ch[i]) == c:
+                        v = v | want_aw[:, i]
+                    if int(pa.w_ch[i]) == c:
+                        v = v | h_ready[:, plan.n_rq + i]
+                    return v
+
                 cand_valid = jnp.stack(
-                    [h_ready[:, q] for q in qs]
-                    + [want[:, i] for i in reqs], axis=1)
+                    [h_ready[:, q] for q in rqs]
+                    + [cls_valid(i) for i in rr_cls], axis=1)
                 rr = ni.inj_rr[:, c] % n_cand
                 order = (jnp.arange(n_cand)[None, :] + rr[:, None]) % n_cand
                 ordered = jnp.take_along_axis(cand_valid, order, axis=1)
@@ -274,32 +465,54 @@ def make_step(spec: NocSpec, plan: ChannelPlan, T: int, net_step):
                 has_any = jnp.any(cand_valid, axis=1)
                 choice = jnp.take_along_axis(order, first[:, None],
                                              axis=1)[:, 0]
-                hold = jnp.zeros((R,), jnp.bool_)
-                for k, q in enumerate(qs):
-                    hq = ni.w_started[:, q] & (h_beats[:, q] > 0)
+                hold = false
+                for k, q in enumerate(rqs):
+                    hq = h_held[:, q]
                     choice = jnp.where(hq & ~hold, k, choice)
+                    hold = hold | hq
+                for k2, i in enumerate(rr_cls):
+                    if int(pa.w_ch[i]) != c:
+                        continue
+                    hq = h_held[:, plan.n_rq + i]
+                    choice = jnp.where(hq & ~hold, len(rqs) + k2, choice)
                     hold = hold | hq
                 hold_of_ch[c] = hold
                 valid0 = has_any | hold
 
-                valid = jnp.zeros((R,), jnp.bool_)
+                valid = false
                 for k, (tag, idx) in enumerate(cand):
-                    gate = h_ready[:, idx] if tag == "rsp" else want[:, idx]
-                    s = valid0 & (choice == k) & gate
-                    valid = valid | s
-                    if tag == "rsp":
-                        sel_rsp[idx] = s
-                        dest = jnp.where(s, h_dest[:, idx], dest)
-                        kind = jnp.where(s, h_kind[:, idx], kind)
-                        txn = jnp.where(s, h_txn[:, idx], txn)
-                        time = jnp.where(s, h_time0[:, idx], time)
-                        beat = jnp.where(s, h_beats[:, idx], beat)
-                    else:
-                        sel_req[idx] = s
-                        dest = jnp.where(s, req_d[:, idx], dest)
-                        kind = jnp.where(s, req_kind(idx), kind)
-                        txn = jnp.where(s, ni.ptr[:, idx], txn)
-                        beat = jnp.where(s, 1, beat)
+                    if tag == "rq":
+                        s = valid0 & (choice == k) & h_ready[:, idx]
+                        valid = valid | s
+                        dest, kind, txn, time, beat = pick_head(
+                            idx, s, dest, kind, txn, time, beat)
+                        continue
+                    # class slot: held W first, then AR/AW, then fresh W
+                    i = idx
+                    s_slot = valid0 & (choice == k)
+                    taken_in = false
+                    wq = plan.n_rq + i if int(pa.w_ch[i]) == c else None
+                    if wq is not None:
+                        s = s_slot & h_held[:, wq]
+                        taken_in = taken_in | s
+                        dest, kind, txn, time, beat = pick_head(
+                            wq, s, dest, kind, txn, time, beat)
+                    if int(pa.ar_ch[i]) == c:
+                        s = s_slot & want_ar[:, i] & ~taken_in
+                        taken_in = taken_in | s
+                        dest, kind, txn, beat = pick_single(
+                            i, "ar", s, dest, kind, txn, beat)
+                    if int(pa.aw_ch[i]) == c:
+                        s = s_slot & want_aw[:, i] & ~taken_in
+                        taken_in = taken_in | s
+                        dest, kind, txn, beat = pick_single(
+                            i, "aw", s, dest, kind, txn, beat)
+                    if wq is not None:
+                        s = s_slot & h_ready[:, wq] & ~taken_in
+                        taken_in = taken_in | s
+                        dest, kind, txn, time, beat = pick_head(
+                            wq, s, dest, kind, txn, time, beat)
+                    valid = valid | taken_in
             iv_cols.append(valid)
             flit = jnp.stack([dest, rows, time, kind, txn, beat], axis=1)
             flit_cols.append(jnp.where(valid[:, None], flit, 0))
@@ -310,76 +523,140 @@ def make_step(spec: NocSpec, plan: ChannelPlan, T: int, net_step):
         net, ok_ch, dv_ch, df_ch, lm = net_step(
             state.net, iv, iflit, dyn["depths"])
 
-        # ---- pointer / outstanding / ring-head updates ------------------
-        injected = jnp.stack(
-            [ok_ch[int(pa.req_ch[i])] & sel_req[i]
-             if i in sel_req else jnp.zeros((R,), jnp.bool_)
-             for i in range(plan.n_cls)], axis=1)      # (R, n_cls)
-        q_to_ch = {q: c for c in range(plan.n_ch) for q in plan.queues_on[c]}
+        # ---- pointer / ROB / ring-head updates --------------------------
+        inj_ar = jnp.stack(
+            [ok_ch[int(pa.ar_ch[i])] & sel_ar[i]
+             if i in sel_ar else false for i in range(n_cls)], axis=1)
+        inj_aw = jnp.stack(
+            [ok_ch[int(pa.aw_ch[i])] & sel_aw[i]
+             if i in sel_aw else false for i in range(n_cls)], axis=1)
         sent = jnp.stack(
-            [ok_ch[q_to_ch[q]] & sel_rsp[q]
-             if q in sel_rsp else jnp.zeros((R,), jnp.bool_)
-             for q in range(plan.n_q)], axis=1)        # (R, n_q)
+            [ok_ch[plan.chan_of_q[q]] & sel_q[q]
+             if q in sel_q else false for q in range(plan.n_q)], axis=1)
         inj_rr = ni.inj_rr
         for c, hold in hold_of_ch.items():
             inj_rr = inj_rr.at[:, c].add((ok_ch[c] & ~hold).astype(jnp.int32))
 
-        inj = injected.astype(jnp.int32)
+        ptr0 = ni.ptr                                  # pre-advance ptr
+        inj = (inj_ar | inj_aw).astype(jnp.int32)
         left = h_beats - sent.astype(jnp.int32)
-        rq = ni.rq.at[rows[:, None], q_ids[None, :], slot_h, Q_BEATS].set(
-            jnp.where(sent, left, h_beats))
+        beats_upd = jnp.where(sent, left, h_beats)     # (R, n_q)
+        rq = ni.rq.at[rows[:, None], rq_ids[None, :], slot_hr,
+                      Q_BEATS].set(beats_upd[:, :plan.n_rq])
+        wq = ni.wq.at[rows[:, None], wq_ids[None, :], slot_hw,
+                      Q_BEATS].set(beats_upd[:, plan.n_rq:])
         ni = ni._replace(
-            ptr=ni.ptr + inj, out=ni.out + inj, inj_rr=inj_rr, rq=rq,
+            ptr=ni.ptr + inj, out_r=ni.out_r + inj_ar.astype(jnp.int32),
+            out_w=ni.out_w + inj_aw.astype(jnp.int32), inj_rr=inj_rr,
+            rq=rq, wq=wq,
             rq_head=ni.rq_head + (sent & (left <= 0)).astype(jnp.int32),
             w_started=jnp.where(sent, left > 0, ni.w_started))
 
-        # ---- deliveries: batched push + batched per-class metrics -------
-        # gather each class's req/rsp delivery through its static channel
-        dv_req = dv_ch[pa.req_ch].T                    # (R, n_cls)
-        df_req = jnp.moveaxis(df_ch[pa.req_ch], 0, 1)  # (R, n_cls, F)
-        is_req = dv_req & (df_req[..., F_KIND] == pa.req_kinds[None, :])
+        # ---- deliveries: gather each flow through its static channel ----
+        def flow_dv(ch_arr, kind_arr):
+            dv = dv_ch[ch_arr].T                       # (R, n_cls)
+            df = jnp.moveaxis(df_ch[ch_arr], 0, 1)     # (R, n_cls, F)
+            return dv & (df[..., F_KIND] == kind_arr[None, :]), df
 
-        # ONE segment-style scatter pushes every class's response entry:
-        # slot = tail of its queue + #earlier same-queue pushes this cycle
-        offset = jnp.einsum("rj,ij->ri", is_req.astype(jnp.int32),
+        is_ar, df_ar = flow_dv(pa.ar_ch, pa.ar_kinds)
+        is_w, df_w = flow_dv(pa.w_ch, pa.w_kinds)
+        is_r, df_r = flow_dv(pa.r_ch, pa.r_kinds)
+        is_b, df_b = flow_dv(pa.b_ch, pa.b_kinds)
+        is_w_last = is_w & (df_w[..., F_BEAT] <= 1)
+
+        # ---- ring pushes: ONE response-ring scatter + one W scatter -----
+        # response slot layout: [R pushes | B pushes] per class; the
+        # slot's ring slot = its ring's tail + #earlier same-ring
+        # pushes.  W pushes land in the per-class W-ring array, where
+        # each ring has exactly one pusher per cycle (its own AW grant)
+        sl = service_lat[None, :].astype(jnp.int32)
+        jt = jnp.asarray(jitter, jnp.int32)
+
+        def jit_of(txn, src):                          # (R, n_cls) offsets
+            # key the per-request draw by (issuing NI, txn id) so the
+            # jitter decorrelates across sources — same-j transactions
+            # at different NIs must not share an offset (the table
+            # length is prime, so the affine fold cycles through all
+            # of it); with a zero table this is exactly the
+            # deterministic model
+            idx = ((txn + 131 * src) % JITTER_TABLE_LEN)[:, :, None]
+            return jnp.take_along_axis(
+                jnp.broadcast_to(jt[None, :, :],
+                                 (R, n_cls, JITTER_TABLE_LEN)),
+                idx, axis=2)[:, :, 0]
+
+        bb = jnp.broadcast_to(burst_beats[None, :], (R, n_cls))
+        push_r = jnp.stack([
+            now + sl + jit_of(df_ar[..., F_TXN], df_ar[..., F_SRC]),
+            df_ar[..., F_SRC], bb, df_ar[..., F_TIME],
+            df_ar[..., F_TXN],
+            jnp.broadcast_to(pa.r_kinds[None, :], (R, n_cls)),
+        ], axis=-1)
+        push_b = jnp.stack([
+            now + sl + jit_of(df_w[..., F_TXN], df_w[..., F_SRC]),
+            df_w[..., F_SRC], jnp.ones((R, n_cls), jnp.int32),
+            df_w[..., F_TIME], df_w[..., F_TXN],
+            jnp.broadcast_to(pa.b_kinds[None, :], (R, n_cls)),
+        ], axis=-1)
+        push_w = jnp.stack([
+            jnp.broadcast_to(now + 1, (R, n_cls)), req_d, bb,
+            jnp.broadcast_to(now, (R, n_cls)), ptr0,
+            jnp.broadcast_to(pa.w_kinds[None, :], (R, n_cls)),
+        ], axis=-1)
+        active = jnp.concatenate([is_ar, is_w_last], axis=1)
+        push_val = jnp.concatenate([push_r, push_b],
+                                   axis=1).astype(jnp.int32)
+        offset = jnp.einsum("rj,ij->ri", active.astype(jnp.int32),
                             jnp.asarray(pa.push_before))
-        tail_of_cls = ni.rq_tail[:, pa.q_of_cls]       # (R, n_cls)
-        slot_p = (tail_of_cls + offset) % cap
-        slot_p = jnp.where(is_req, slot_p, cap)  # masked -> OOB, dropped
-        push_val = jnp.stack([
-            jnp.broadcast_to(now + service_lat, is_req.shape),
-            df_req[..., F_SRC],
-            jnp.broadcast_to(burst_beats[None, :], is_req.shape),
-            df_req[..., F_TIME],
-            df_req[..., F_TXN],
-            jnp.broadcast_to(pa.rsp_kinds[None, :], is_req.shape),
-        ], axis=-1).astype(jnp.int32)                  # (R, n_cls, 6)
-        rq = ni.rq.at[rows[:, None], pa.q_of_cls[None, :],
+        tail_of_slot = ni.rq_tail[:, pa.q_of_slot]     # (R, 2*n_cls)
+        slot_p = (tail_of_slot + offset) % cap
+        slot_p = jnp.where(active, slot_p, cap)  # masked -> OOB, dropped
+        rq = ni.rq.at[rows[:, None], pa.q_of_slot[None, :],
                       slot_p].set(push_val, mode="drop")
-        tail_inc = is_req.astype(jnp.int32) @ pa.q_onehot
-        ni = ni._replace(rq=rq, rq_tail=ni.rq_tail + tail_inc)
+        tail_w = ni.rq_tail[:, plan.n_rq:]             # (R, n_cls)
+        slot_pw = jnp.where(inj_aw, tail_w % w_cap, w_cap)
+        wq = ni.wq.at[rows[:, None], wq_ids[None, :],
+                      slot_pw].set(push_w.astype(jnp.int32), mode="drop")
+        tail_inc = jnp.concatenate(
+            [active.astype(jnp.int32) @ pa.q_onehot,
+             inj_aw.astype(jnp.int32)], axis=1)        # (R, n_q)
+        ni = ni._replace(rq=rq, wq=wq, rq_tail=ni.rq_tail + tail_inc)
 
-        # per-class response metrics, fully vectorized over (R, n_cls)
-        dv_rsp = dv_ch[pa.rsp_ch].T
-        df_rsp = jnp.moveaxis(df_ch[pa.rsp_ch], 0, 1)
-        is_rsp = dv_rsp & (df_rsp[..., F_KIND] == pa.rsp_kinds[None, :])
-        last = is_rsp & (df_rsp[..., F_BEAT] <= 1)
-        lat = jnp.where(last, now - df_rsp[..., F_TIME], 0)
-        li = last.astype(jnp.int32)
+        # ---- per-class per-direction metrics, vectorized ----------------
+        last_r = is_r & (df_r[..., F_BEAT] <= 1)
+        lat_r = jnp.where(last_r, now - df_r[..., F_TIME], 0)
+        li_r = last_r.astype(jnp.int32)
+        lat_b = jnp.where(is_b, now - df_b[..., F_TIME], 0)
+        li_b = is_b.astype(jnp.int32)
         ni = ni._replace(
-            beats_rx=ni.beats_rx + is_rsp.astype(jnp.int32),
-            first_t=jnp.where(is_rsp, jnp.minimum(ni.first_t, now),
+            beats_rx=ni.beats_rx + is_r.astype(jnp.int32),
+            first_t=jnp.where(is_r, jnp.minimum(ni.first_t, now),
                               ni.first_t),
-            last_t=jnp.where(is_rsp, jnp.maximum(ni.last_t, now),
+            last_t=jnp.where(is_r, jnp.maximum(ni.last_t, now),
                              ni.last_t),
-            done=ni.done + li,
-            lat_sum=ni.lat_sum + lat,
-            lat_max=jnp.maximum(ni.lat_max, lat),
-            out=ni.out - li,
+            done=ni.done + li_r,
+            lat_sum=ni.lat_sum + lat_r,
+            lat_max=jnp.maximum(ni.lat_max, lat_r),
+            out_r=ni.out_r - li_r,
+            w_beats_rx=ni.w_beats_rx + is_w.astype(jnp.int32),
+            w_first_t=jnp.where(is_w, jnp.minimum(ni.w_first_t, now),
+                                ni.w_first_t),
+            w_last_t=jnp.where(is_w, jnp.maximum(ni.w_last_t, now),
+                               ni.w_last_t),
+            w_done=ni.w_done + li_b,
+            w_lat_sum=ni.w_lat_sum + lat_b,
+            w_lat_max=jnp.maximum(ni.w_lat_max, lat_b),
+            out_w=ni.out_w - li_b,
         )
 
+        # ---- liveness: stall streak while transactions are in flight ----
+        activity = (jnp.any(iv & ok_ch) | jnp.any(dv_ch)
+                    | (jnp.sum(lm) > 0))
+        pending = jnp.any((ni.out_r + ni.out_w) > 0)
+        cur = jnp.where(pending & ~activity, state.cur_stall + 1, 0)
         new_moves = state.moves + lm.astype(jnp.int32)
-        return SimState(net, ni, now + 1, new_moves), None
+        return SimState(net, ni, now + 1, new_moves, cur,
+                        jnp.maximum(state.max_stall, cur)), None
 
     return step
 
@@ -432,12 +709,15 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
     """One jitted simulator per (depth-normalized spec, horizon,
     backend) triple, from a stats-instrumented per-backend cache.
 
-    Returns ``fn(times, dests, service_lat, max_out, burst_beats,
-    depths)`` where ``times``/``dests`` are (n_cls, R, T) int32
-    schedules and the scalar knobs — including the per-channel FIFO
-    ``depths`` vector — are traced, so the whole function is vmappable
-    over a leading batch axis for rate/seed/latency/depth sweeps in a
-    single jit.
+    Returns ``fn(times, dests, writes, service_lat, max_out,
+    burst_beats, jitter, depths)`` where ``times``/``dests``/``writes``
+    are (n_cls, R, T) int32 schedules (``writes`` marks AXI write
+    transactions) and the knobs — per-class ``service_lat`` vector, the
+    (n_cls, JITTER_TABLE_LEN) service-jitter offset table, per-class
+    ``max_out``/``burst_beats``, and the per-channel FIFO ``depths``
+    vector — are traced, so the whole function is vmappable over a
+    leading batch axis for rate/seed/latency/depth sweeps in a single
+    jit.
 
     ``max_depth`` pads the FIFO state to a larger static bound than the
     spec declares, letting one compilation serve every depth up to that
@@ -446,11 +726,11 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
     the fabric hot loop (see :mod:`repro.noc.backends`); every backend
     must produce identical results behind this one surface.
 
-    Off-CPU the big ``times``/``dests`` operands are DONATED (the scan
-    carry workspace aliases them): pass numpy arrays (always safe — a
-    fresh device buffer is created per call, which is what every
-    ``repro.noc`` caller does) or fresh device arrays; reusing a jnp
-    array across calls on GPU/TPU raises "Array has been deleted".
+    Off-CPU the big ``times``/``dests``/``writes`` operands are DONATED
+    (the scan carry workspace aliases them): pass numpy arrays (always
+    safe — a fresh device buffer is created per call, which is what
+    every ``repro.noc`` caller does) or fresh device arrays; reusing a
+    jnp array across calls on GPU/TPU raises "Array has been deleted".
     """
     key_spec, d_max = _depth_normalized(spec, max_depth)
     key = (key_spec, T)
@@ -473,32 +753,44 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
 
 
 def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
-    plan = build_channel_plan(spec)
+    plan = build_flow_plan(spec)
     network = get_backend(backend)(spec.topology)
     step = make_step(spec, plan, T, network.step)
     n_ch, R = plan.n_ch, spec.n_routers
 
     # donating the big schedule operands lets XLA alias them into the
     # scan carry's workspace; CPU can't donate (it would only warn)
-    donate = () if jax.default_backend() == "cpu" else (0, 1)
+    donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
 
     @functools.partial(jax.jit, donate_argnums=donate)
-    def run(times, dests, service_lat, max_out, burst_beats, depths):
+    def run(times, dests, writes, service_lat, max_out, burst_beats,
+            jitter, depths):
         state = SimState(network.init(n_ch, d_max),
                          init_ni(R, plan, spec.resp_q_cap), jnp.int32(0),
-                         jnp.zeros((n_ch,), jnp.int32))
-        dyn = {"times": jnp.moveaxis(times, 0, 1),     # (R, n_cls, T)
+                         jnp.zeros((n_ch,), jnp.int32), jnp.int32(0),
+                         jnp.int32(0))
+        times = jnp.moveaxis(times, 0, 1)              # (R, n_cls, T)
+        dyn = {"times": times,
                "dests": jnp.moveaxis(dests, 0, 1),
+               "writes": jnp.moveaxis(writes, 0, 1),
                "service_lat": service_lat, "max_out": max_out,
-               "burst_beats": burst_beats,
+               "burst_beats": burst_beats, "jitter": jitter,
                "depths": jnp.asarray(depths, jnp.int32)}
         final, _ = jax.lax.scan(functools.partial(step, dyn), state, None,
                                 length=spec.cycles)
         ni = final.ni
+        n_sched = jnp.sum(times < BIG, axis=2)         # (R, n_cls)
+        drained = (jnp.all(ni.ptr >= n_sched) & jnp.all(ni.out_r == 0)
+                   & jnp.all(ni.out_w == 0))
         return {
             "done": ni.done, "lat_sum": ni.lat_sum, "lat_max": ni.lat_max,
             "beats_rx": ni.beats_rx, "first_t": ni.first_t,
-            "last_t": ni.last_t, "link_moves": final.moves,
+            "last_t": ni.last_t,
+            "w_done": ni.w_done, "w_lat_sum": ni.w_lat_sum,
+            "w_lat_max": ni.w_lat_max, "w_beats_rx": ni.w_beats_rx,
+            "w_first_t": ni.w_first_t, "w_last_t": ni.w_last_t,
+            "link_moves": final.moves,
+            "max_stall_cycles": final.max_stall, "drained": drained,
         }
 
     return run

@@ -2,8 +2,11 @@
 
 Replaces the seed's ad-hoc result dicts (benchmarks / examples each
 reshaping raw keys differently) with one typed :class:`SimResult`:
-per-class latency/bandwidth stats, per-channel link activity + energy
-(paper Fig. 6 pJ/B/hop model).
+per-class *per-direction* latency/bandwidth stats (reads AR -> R,
+writes AW -> W -> B), per-channel link activity + energy (paper Fig. 6
+pJ/B/hop model — B acks traverse their mapped channel, so write-ack
+energy shows up in that channel's ledger), and fabric liveness
+(``max_stall_cycles`` / ``drained``) for the VC-less deadlock studies.
 
 All arrays keep whatever leading batch dimensions the engine produced,
 so a vmapped sweep returns ONE ``SimResult`` whose stats have a leading
@@ -21,12 +24,24 @@ from .spec import NocSpec
 
 @dataclass(frozen=True)
 class ClassStats:
-    """Per-traffic-class metrics; arrays are (*batch, R)."""
-    done: np.ndarray          # completed transactions per NI
-    avg_lat: np.ndarray       # mean request->last-beat latency (cycles)
-    max_lat: np.ndarray       # worst-case latency (cycles)
-    beats_rx: np.ndarray      # response beats delivered per NI
-    eff_bw: np.ndarray        # beats / active-span cycles (link utilization)
+    """Per-traffic-class metrics; arrays are (*batch, R).
+
+    Read-direction fields keep their original names (``done`` ... are
+    *read* transactions, measured at the issuing NI).  Write-direction
+    fields carry a ``w_`` prefix: latency/done measured at the issuing
+    NI (AW injection -> B arrival), W-beat counts and bandwidth span
+    measured at the *receiving* NI (where the write data lands).
+    """
+    done: np.ndarray          # completed read transactions per NI
+    avg_lat: np.ndarray       # mean AR-inject -> last-R-beat latency
+    max_lat: np.ndarray       # worst-case read latency (cycles)
+    beats_rx: np.ndarray      # R beats delivered per NI
+    eff_bw: np.ndarray        # R beats / active-span cycles
+    w_done: np.ndarray        # completed write transactions per NI
+    w_avg_lat: np.ndarray     # mean AW-inject -> B-arrival latency
+    w_max_lat: np.ndarray     # worst-case write latency (cycles)
+    w_beats_rx: np.ndarray    # W beats landing per (target) NI
+    w_eff_bw: np.ndarray      # W beats / active-span cycles at target
 
 
 @dataclass(frozen=True)
@@ -42,31 +57,41 @@ class SimResult:
     cycles: int
     classes: Mapping[str, ClassStats]
     channels: Mapping[str, ChannelStats]
+    # liveness: longest streak of cycles with transactions in flight but
+    # ZERO fabric activity (no injection, delivery, or link move), and
+    # whether every scheduled transaction completed.  A VC-less torus
+    # under saturating wormhole bursts can wedge (ROADMAP): that shows
+    # up as drained=False with max_stall_cycles ~ the remaining horizon.
+    max_stall_cycles: np.ndarray = np.int32(0)   # (*batch,)
+    drained: np.ndarray = np.bool_(True)         # (*batch,)
 
     @classmethod
     def from_raw(cls, spec: NocSpec, raw: Mapping[str, Any]) -> "SimResult":
         from repro.core.noc_sim.energy import PAPER
-        done = np.asarray(raw["done"])
-        lat_sum = np.asarray(raw["lat_sum"])
-        lat_max = np.asarray(raw["lat_max"])
-        beats = np.asarray(raw["beats_rx"])
-        first_t = np.asarray(raw["first_t"])
-        last_t = np.asarray(raw["last_t"])
-        moves = np.asarray(raw["link_moves"])
+
+        def span(first_t, last_t):
+            return np.maximum(last_t - np.minimum(first_t, last_t), 1)
 
         classes = {}
         for i, tc in enumerate(spec.classes):
-            d = done[..., i]
-            span = np.maximum(
-                last_t[..., i] - np.minimum(first_t[..., i], last_t[..., i]),
-                1)
+            g = {k: np.asarray(raw[k])[..., i] for k in
+                 ("done", "lat_sum", "lat_max", "beats_rx", "first_t",
+                  "last_t", "w_done", "w_lat_sum", "w_lat_max",
+                  "w_beats_rx", "w_first_t", "w_last_t")}
             classes[tc.name] = ClassStats(
-                done=d,
-                avg_lat=lat_sum[..., i] / np.maximum(d, 1),
-                max_lat=lat_max[..., i],
-                beats_rx=beats[..., i],
-                eff_bw=beats[..., i] / span,
+                done=g["done"],
+                avg_lat=g["lat_sum"] / np.maximum(g["done"], 1),
+                max_lat=g["lat_max"],
+                beats_rx=g["beats_rx"],
+                eff_bw=g["beats_rx"] / span(g["first_t"], g["last_t"]),
+                w_done=g["w_done"],
+                w_avg_lat=g["w_lat_sum"] / np.maximum(g["w_done"], 1),
+                w_max_lat=g["w_lat_max"],
+                w_beats_rx=g["w_beats_rx"],
+                w_eff_bw=g["w_beats_rx"] / span(g["w_first_t"],
+                                                g["w_last_t"]),
             )
+        moves = np.asarray(raw["link_moves"])
         channels = {}
         for c, ch in enumerate(spec.channels):
             m = moves[..., c]
@@ -75,7 +100,9 @@ class SimResult:
                 energy_pj=m * (ch.width_bits / 8.0) * PAPER.pj_per_byte_hop,
             )
         return cls(spec=spec, cycles=spec.cycles, classes=classes,
-                   channels=channels)
+                   channels=channels,
+                   max_stall_cycles=np.asarray(raw["max_stall_cycles"]),
+                   drained=np.asarray(raw["drained"]))
 
     # ------------------------------------------------------------------ #
     @property
@@ -93,7 +120,10 @@ class SimResult:
         channels = {k: ChannelStats(link_moves=v.link_moves[i],
                                     energy_pj=v.energy_pj[i])
                     for k, v in self.channels.items()}
-        return SimResult(self.spec, self.cycles, classes, channels)
+        return SimResult(self.spec, self.cycles, classes, channels,
+                         max_stall_cycles=np.asarray(
+                             self.max_stall_cycles)[i],
+                         drained=np.asarray(self.drained)[i])
 
     @property
     def total_link_moves(self) -> np.ndarray:
@@ -108,18 +138,27 @@ class SimResult:
     def summary(self) -> dict[str, Any]:
         """Compact scalars (means over NIs with traffic) for reports."""
         out: dict[str, Any] = {"cycles": self.cycles}
-        for name, st in self.classes.items():
-            active = st.done > 0
+
+        def active_mean(per_ni, active):
             any_active = np.any(active, axis=-1)
             with np.errstate(invalid="ignore"):
-                avg = np.where(
+                return np.where(
                     any_active,
-                    np.sum(st.avg_lat * active, axis=-1)
+                    np.sum(per_ni * active, axis=-1)
                     / np.maximum(np.sum(active, axis=-1), 1), 0.0)
+
+        for name, st in self.classes.items():
             out[f"{name}_done"] = np.sum(st.done, axis=-1)
-            out[f"{name}_avg_lat"] = avg
+            out[f"{name}_avg_lat"] = active_mean(st.avg_lat, st.done > 0)
             out[f"{name}_max_lat"] = np.max(st.max_lat, axis=-1)
             out[f"{name}_peak_eff_bw"] = np.max(st.eff_bw, axis=-1)
+            out[f"{name}_w_done"] = np.sum(st.w_done, axis=-1)
+            out[f"{name}_w_avg_lat"] = active_mean(st.w_avg_lat,
+                                                   st.w_done > 0)
+            out[f"{name}_w_max_lat"] = np.max(st.w_max_lat, axis=-1)
+            out[f"{name}_w_peak_eff_bw"] = np.max(st.w_eff_bw, axis=-1)
         out["total_link_moves"] = self.total_link_moves
         out["total_energy_pj"] = self.total_energy_pj
+        out["max_stall_cycles"] = self.max_stall_cycles
+        out["drained"] = self.drained
         return out

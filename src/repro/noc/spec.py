@@ -5,8 +5,15 @@ A :class:`NocSpec` declares *what the network is* — a first-class
 mesh), an arbitrary list of physical channels (each its own complete
 network instance of that topology, per the paper's no-VC design), the
 traffic classes riding on them, and a ``class_map`` assigning every
-traffic flow (``"<class>.req"`` / ``"<class>.rsp"``) to a channel.  The paper's two
-configurations are presets:
+AXI4 flow to a channel.  Each class decomposes into the five AXI
+channels (:data:`repro.core.flit.AXI_FLOWS`): reads are
+``"<class>.ar"`` -> ``"<class>.r"``, writes are ``"<class>.aw"`` ->
+``"<class>.w"`` -> ``"<class>.b"``.  The paper's mapping puts the
+single-flit address/ack flows (AW / AR / B) on the narrow channels and
+the data bursts (W / R) on the wide one.  Legacy two-flow maps
+(``"<class>.req"`` / ``"<class>.rsp"``) are expanded automatically:
+``req`` covers AR + AW, ``rsp`` covers R + B, and W rides the class's
+R (data) channel.  The paper's two configurations are presets:
 
 * :meth:`NocSpec.narrow_wide` — three physical networks (narrow_req /
   narrow_rsp / wide), paper §III-B Table I,
@@ -27,21 +34,34 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Mapping, Sequence
 
+from repro.core.flit import AXI_FLOWS
 from .topology import Mesh, Topology, Torus  # noqa: F401  (re-exported)
 
 
 @dataclass(frozen=True)
 class TrafficClass:
-    """One AXI-like traffic class (paper: narrow vs wide).
+    """One AXI4 traffic class (paper: narrow vs wide).
 
-    ``burst_beats == 1`` marks a latency-critical class whose response is
-    a single flit; ``burst_beats > 1`` marks a bandwidth class whose
-    response is an atomic wormhole burst of that many beats.
+    ``burst_beats == 1`` marks a latency-critical class whose data
+    bursts (R read data, W write data) are single flits; ``burst_beats
+    > 1`` marks a bandwidth class whose bursts are atomic wormhole
+    trains of that many beats.  ``max_outstanding`` bounds reads and
+    writes *separately* (one ROB budget per direction, paper §III-A).
+
+    ``service_lat`` / ``service_jitter`` give the class its own target
+    service-latency *distribution*: the target NI answers a request
+    after ``service_lat + U[-jitter, +jitter]`` cycles (offsets come
+    from a seeded static table so runs are reproducible; both knobs are
+    traced operands at simulate() time).  ``service_lat=None`` falls
+    back to the spec-wide :attr:`NocSpec.service_lat` scalar, and
+    ``service_jitter=0`` reproduces the fixed-latency model exactly.
     """
     name: str
     burst_beats: int = 1
-    max_outstanding: int = 8       # end-to-end ROB flow control budget
+    max_outstanding: int = 8       # per-direction ROB flow control budget
     payload_bits: int = 64         # per-beat payload (accounting only)
+    service_lat: int | None = None   # None -> NocSpec.service_lat
+    service_jitter: int = 0          # +/- uniform jitter, 0 = deterministic
 
 
 @dataclass(frozen=True)
@@ -85,18 +105,26 @@ class NocSpec:
         PhysicalChannel("rsp", depth=2, width_bits=103),
         PhysicalChannel("wide", depth=2, width_bits=603),
     )
-    # flow ("<class>.req" | "<class>.rsp") -> channel name, stored sorted
+    # flow ("<class>.<ar|r|aw|w|b>") -> channel name, stored sorted.
+    # Legacy "<class>.req"/"<class>.rsp" entries are expanded (req ->
+    # AR+AW, rsp -> R+B, W rides the R data channel).  Default: the
+    # paper's narrow_wide mapping — AW/AR/B narrow, W/R wide for the
+    # wide class, everything narrow for the narrow class.
     class_map: tuple[tuple[str, str], ...] = (
-        ("narrow.req", "req"), ("narrow.rsp", "rsp"),
-        ("wide.req", "req"), ("wide.rsp", "wide"),
+        ("narrow.ar", "req"), ("narrow.aw", "req"), ("narrow.w", "req"),
+        ("narrow.r", "rsp"), ("narrow.b", "rsp"),
+        ("wide.ar", "req"), ("wide.aw", "req"), ("wide.b", "rsp"),
+        ("wide.w", "wide"), ("wide.r", "wide"),
     )
     service_lat: int = 10          # target memory + NI latency (cycles)
     cycles: int = 4000
     # per-NI response reorder-ring capacity (entries per queue).  Sizes
-    # the engine's (R, n_q, resp_q_cap, 6) ring state, so small studies
-    # can shrink it; must cover the worst-case responses pending at one
-    # NI (bounded by sum over classes of max_outstanding x #sources
-    # targeting it — the engine does not check overflow at runtime).
+    # the engine's (R, n_rq, resp_q_cap, 6) ring state, so small
+    # studies can shrink it; must cover the worst-case R+B responses
+    # pending at one NI (bounded by sum over classes of max_outstanding
+    # x #sources targeting it — the engine does not check overflow at
+    # runtime).  The per-class W rings are sized separately from the
+    # classes' declared max_outstanding.
     resp_q_cap: int = 256
 
     def __post_init__(self):
@@ -119,6 +147,7 @@ class NocSpec:
         items = list(cm.items()) if isinstance(cm, Mapping) else list(cm)
         if len({k for k, _ in items}) != len(items):
             raise ValueError("class_map has duplicate flow entries")
+        items = self._expand_legacy(items)
         # normalize (sort) regardless of input form so equivalent specs
         # hash equal and share one compiled simulator
         cm = tuple(sorted(items))
@@ -134,9 +163,16 @@ class NocSpec:
                 raise ValueError(
                     f"channel {ch.name!r} needs FIFO depth >= 1, got "
                     f"{ch.depth}")
+        for cls in self.classes:
+            if cls.service_lat is not None and cls.service_lat < 0:
+                raise ValueError(
+                    f"class {cls.name!r} service_lat must be >= 0")
+            if cls.service_jitter < 0:
+                raise ValueError(
+                    f"class {cls.name!r} service_jitter must be >= 0")
         flows = dict(cm)
         for cls in self.classes:
-            for d in ("req", "rsp"):
+            for d in AXI_FLOWS:
                 flow = f"{cls.name}.{d}"
                 if flow not in flows:
                     raise ValueError(f"class_map missing flow {flow!r}")
@@ -146,8 +182,36 @@ class NocSpec:
                         f"{flows[flow]!r}")
         for flow in flows:
             cls_name, _, d = flow.partition(".")
-            if cls_name not in names or d not in ("req", "rsp"):
+            if cls_name not in names or d not in AXI_FLOWS:
                 raise ValueError(f"class_map has unknown flow {flow!r}")
+
+    @staticmethod
+    def _expand_legacy(items: list[tuple[str, str]]) -> list[tuple[str, str]]:
+        """Expand legacy ``"<cls>.req"``/``"<cls>.rsp"`` entries into the
+        five AXI flows: req carries the address flows (AR, AW), rsp the
+        response flows (R, B), and W rides the class's R data channel —
+        W and R are the payload pair the paper puts on the wide link."""
+        if not any(k.endswith((".req", ".rsp")) for k, _ in items):
+            return items
+        explicit = {k for k, _ in items
+                    if not k.endswith((".req", ".rsp"))}
+        out, rsp_ch = [], {}
+        for k, ch in items:
+            cls_name, _, d = k.partition(".")
+            if d == "req":
+                out += [(f"{cls_name}.{f}", ch) for f in ("ar", "aw")
+                        if f"{cls_name}.{f}" not in explicit]
+            elif d == "rsp":
+                out += [(f"{cls_name}.{f}", ch) for f in ("r", "b")
+                        if f"{cls_name}.{f}" not in explicit]
+                rsp_ch[cls_name] = ch
+            else:
+                out.append((k, ch))
+        have = {k for k, _ in out}
+        for cls_name, ch in rsp_ch.items():
+            if f"{cls_name}.w" not in have:
+                out.append((f"{cls_name}.w", ch))
+        return out
 
     # ------------------------------------------------------------------ #
     @property
@@ -181,11 +245,19 @@ class NocSpec:
                 return i
         raise KeyError(name)
 
+    def flow_channel(self, cls_name: str, flow: str) -> int:
+        """Channel index carrying ``cls_name``'s AXI ``flow``."""
+        if flow not in AXI_FLOWS:
+            raise KeyError(f"unknown AXI flow {flow!r}; have {AXI_FLOWS}")
+        return self.channel_index(self.flow_map[f"{cls_name}.{flow}"])
+
     def req_channel(self, cls_name: str) -> int:
-        return self.channel_index(self.flow_map[f"{cls_name}.req"])
+        """Legacy alias: the channel carrying the class's AR flow."""
+        return self.flow_channel(cls_name, "ar")
 
     def rsp_channel(self, cls_name: str) -> int:
-        return self.channel_index(self.flow_map[f"{cls_name}.rsp"])
+        """Legacy alias: the channel carrying the class's R flow."""
+        return self.flow_channel(cls_name, "r")
 
     @property
     def burstlen(self) -> int:
@@ -205,7 +277,10 @@ class NocSpec:
                     cycles: int = 4000, max_narrow_outstanding: int = 8,
                     max_wide_outstanding: int = 8,
                     resp_q_cap: int = 256) -> "NocSpec":
-        """Paper §III-B: three independent physical networks.
+        """Paper §III-B: three independent physical networks, with the
+        AXI flows mapped per the paper — single-flit address/ack flows
+        (AR, AW, B) plus the narrow class's data on the narrow req/rsp
+        pair, wide W/R data bursts on the wide channel.
 
         ``topology`` overrides the default XY mesh (e.g. ``Torus(nx,
         ny)`` or ``Mesh(nx, ny, express=(2,))``)."""
@@ -220,8 +295,13 @@ class NocSpec:
                 PhysicalChannel("rsp", depth, 103),
                 PhysicalChannel("wide", depth, 603),
             ),
-            class_map=(("narrow.req", "req"), ("narrow.rsp", "rsp"),
-                       ("wide.req", "req"), ("wide.rsp", "wide")),
+            class_map=(
+                ("narrow.ar", "req"), ("narrow.aw", "req"),
+                ("narrow.w", "req"),
+                ("narrow.r", "rsp"), ("narrow.b", "rsp"),
+                ("wide.ar", "req"), ("wide.aw", "req"),
+                ("wide.b", "rsp"),
+                ("wide.w", "wide"), ("wide.r", "wide")),
             service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap)
 
     @classmethod
@@ -231,8 +311,9 @@ class NocSpec:
                   cycles: int = 4000, max_narrow_outstanding: int = 8,
                   max_wide_outstanding: int = 8,
                   resp_q_cap: int = 256) -> "NocSpec":
-        """Fig. 5 ablation: ONE network carries every flow; narrow flits
-        burn full wide-link cycles and bursts hold links end-to-end."""
+        """Fig. 5 ablation: ONE network carries all five flows of every
+        class; narrow flits burn full wide-link cycles and bursts hold
+        links end-to-end."""
         return cls(
             topology=_resolve_topology(nx, ny, topology),
             classes=(
@@ -240,8 +321,9 @@ class NocSpec:
                 TrafficClass("wide", burstlen, max_wide_outstanding, 512),
             ),
             channels=(PhysicalChannel("wide", depth, 603),),
-            class_map=(("narrow.req", "wide"), ("narrow.rsp", "wide"),
-                       ("wide.req", "wide"), ("wide.rsp", "wide")),
+            class_map=tuple((f"{c}.{f}", "wide")
+                            for c in ("narrow", "wide")
+                            for f in AXI_FLOWS),
             service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap)
 
     @classmethod
@@ -251,16 +333,21 @@ class NocSpec:
                      service_lat: int = 10, cycles: int = 4000,
                      resp_q_cap: int = 256) -> "NocSpec":
         """Journal-version style: ``n_wide`` parallel wide stream channels
-        (wide class i rides its own physical network) next to the shared
-        narrow req/rsp pair."""
+        (wide class i's W/R data bursts ride their own physical network)
+        next to the shared narrow req/rsp pair carrying every class's
+        AR/AW address flows and B acks."""
         classes = [TrafficClass("narrow", 1, 8, 64)]
         channels = [PhysicalChannel("req", depth, 119),
                     PhysicalChannel("rsp", depth, 103)]
-        cmap = [("narrow.req", "req"), ("narrow.rsp", "rsp")]
+        cmap = [("narrow.ar", "req"), ("narrow.aw", "req"),
+                ("narrow.w", "req"),
+                ("narrow.r", "rsp"), ("narrow.b", "rsp")]
         for i in range(n_wide):
             classes.append(TrafficClass(f"wide{i}", burstlen, 8, 512))
             channels.append(PhysicalChannel(f"wide{i}", depth, 603))
-            cmap += [(f"wide{i}.req", "req"), (f"wide{i}.rsp", f"wide{i}")]
+            cmap += [(f"wide{i}.ar", "req"), (f"wide{i}.aw", "req"),
+                     (f"wide{i}.b", "rsp"),
+                     (f"wide{i}.w", f"wide{i}"), (f"wide{i}.r", f"wide{i}")]
         return cls(topology=_resolve_topology(nx, ny, topology),
                    classes=tuple(classes), channels=tuple(channels),
                    class_map=tuple(sorted(cmap)),

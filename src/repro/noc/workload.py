@@ -1,12 +1,21 @@
 """Declarative traffic workloads typed against a NocSpec's classes.
 
 A :class:`Workload` names a registered *pattern* plus per-class
-parameters (rates in flits/cycle, transaction counts).  Patterns
-produce, for every declared :class:`~repro.noc.spec.TrafficClass`, a
-dense ``(R, T)`` schedule of desired inject times (sorted per NI; an
-entry at/after ``BIG`` disables the slot) and destinations, generalized
-from the seed's hardcoded narrow/wide pair to the spec's declared class
-list.
+parameters (rates in flits/cycle, transaction counts, read/write mix).
+Patterns produce, for every declared
+:class:`~repro.noc.spec.TrafficClass`, a dense ``(R, T)`` schedule of
+desired inject times (sorted per NI; an entry at/after ``BIG`` disables
+the slot), destinations, and a per-slot *write* flag — a write slot
+issues an AXI write transaction (AW -> W burst -> B ack) instead of a
+read (AR -> R burst).
+
+Every pattern takes ``write_frac`` (one float for all classes or a
+per-class mapping): the fraction of each class's transactions that are
+writes.  Deterministic patterns interleave writes evenly and
+deterministically (transaction ``j`` is a write iff
+``floor((j+1)*wf) > floor(j*wf)``); the seeded random patterns draw the
+direction from their rng.  ``write_frac=0`` (the default) reproduces
+the read-only schedules bit-for-bit.
 
 Built-in patterns:
 
@@ -85,11 +94,17 @@ class Workload:
         return {k: _thaw(v) for k, v in self.params}
 
     def schedules(self, spec: NocSpec) -> dict[str, tuple[np.ndarray,
+                                                          np.ndarray,
                                                           np.ndarray]]:
-        """Per-class (times, dests) arrays, one entry per declared class."""
+        """Per-class (times, dests, writes) arrays, one entry per
+        declared class; ``writes`` marks the slots that issue AXI write
+        transactions (AW/W/B) instead of reads (AR/R)."""
         out = PATTERNS[self.pattern](spec, **self.kwargs)
         for name in out:
             spec.class_index(name)      # typed against declared classes
+            if len(out[name]) == 2:     # pattern predates the write flag
+                t, d = out[name]
+                out[name] = (t, d, np.zeros_like(np.asarray(t, np.int32)))
         for cls in spec.classes:
             out.setdefault(cls.name, _empty(spec.n_routers))
         return out
@@ -98,8 +113,9 @@ class Workload:
 # --------------------------------------------------------------------- #
 # helpers shared by the patterns
 # --------------------------------------------------------------------- #
-def _empty(R: int) -> tuple[np.ndarray, np.ndarray]:
-    return (np.full((R, 1), BIG, np.int32), np.zeros((R, 1), np.int32))
+def _empty(R: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    return (np.full((R, 1), BIG, np.int32), np.zeros((R, 1), np.int32),
+            np.zeros((R, 1), np.int32))
 
 
 def _per_class(spec: NocSpec, m: Mapping[str, Any] | None,
@@ -108,6 +124,14 @@ def _per_class(spec: NocSpec, m: Mapping[str, Any] | None,
     for name in m:
         spec.class_index(name)          # raises on undeclared class
     return {c.name: m.get(c.name, default) for c in spec.classes}
+
+
+def _per_class_frac(spec: NocSpec,
+                    wf: Mapping[str, float] | float) -> dict[str, float]:
+    """Normalize a write_frac argument (scalar = every class)."""
+    if isinstance(wf, Mapping):
+        return _per_class(spec, wf, 0.0)
+    return {c.name: float(wf) for c in spec.classes}
 
 
 def _check_tile(spec: NocSpec, name: str, tile: int) -> int:
@@ -140,29 +164,58 @@ def _no_self_dests(rng: np.random.Generator, R: int,
     return (draws + 1 + np.arange(R)[:, None]).astype(np.int32) % R
 
 
+def _rand_writes(seed: int, cls_idx: int, R: int, count: int,
+                 wf: float) -> np.ndarray:
+    """Seeded write flags for the random patterns, drawn from an rng
+    stream INDEPENDENT of the times/dests draws and keyed per class —
+    turning the mix knob for one class must never reshuffle any
+    class's schedule (the sweep would confound the knob with a reroll
+    of the background traffic)."""
+    if not 0.0 <= wf <= 1.0:
+        raise ValueError(f"write_frac must be in [0, 1], got {wf}")
+    if wf <= 0:
+        return np.zeros((R, count), np.int32)
+    wrng = np.random.default_rng([seed, cls_idx, 0xA11])
+    return (wrng.random((R, count)) < wf).astype(np.int32)
+
+
+def _mix_writes(count: int, wf: float) -> np.ndarray:
+    """Deterministic evenly-interleaved write flags: transaction ``j``
+    is a write iff ``floor((j+1)*wf) > floor(j*wf)`` — exactly
+    ``round(count*wf)``-ish writes, spread through the sequence, with
+    ``wf=0`` all-reads and ``wf=1`` all-writes."""
+    if not 0.0 <= wf <= 1.0:
+        raise ValueError(f"write_frac must be in [0, 1], got {wf}")
+    j = np.arange(max(count, 1), dtype=np.float64)
+    return (np.floor((j + 1) * wf) > np.floor(j * wf)).astype(np.int32)
+
+
 class _Builder:
     """Accumulates per-NI schedules into dense sorted (R, T) arrays."""
 
     def __init__(self, R: int):
         self.R = R
-        self.rows: list[list[tuple[int, int]]] = [[] for _ in range(R)]
+        self.rows: list[list[tuple[int, int, int]]] = [[] for _ in range(R)]
 
-    def add(self, src: int, times: np.ndarray, dests) -> None:
+    def add(self, src: int, times: np.ndarray, dests, writes=0) -> None:
         dests = np.broadcast_to(np.asarray(dests, np.int32), times.shape)
-        for t, d in zip(times.tolist(), dests.tolist()):
+        writes = np.broadcast_to(np.asarray(writes, np.int32), times.shape)
+        for t, d, w in zip(times.tolist(), dests.tolist(), writes.tolist()):
             if t < BIG:
-                self.rows[src].append((t, d))
+                self.rows[src].append((t, d, w))
 
-    def build(self) -> tuple[np.ndarray, np.ndarray]:
+    def build(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         T = max(1, max(len(r) for r in self.rows))
         times = np.full((self.R, T), BIG, np.int32)
         dests = np.zeros((self.R, T), np.int32)
+        writes = np.zeros((self.R, T), np.int32)
         for s, r in enumerate(self.rows):
             r.sort()
-            for j, (t, d) in enumerate(r):
+            for j, (t, d, w) in enumerate(r):
                 times[s, j] = t
                 dests[s, j] = d
-        return times, dests
+                writes[s, j] = w
+        return times, dests, writes
 
 
 # --------------------------------------------------------------------- #
@@ -171,27 +224,31 @@ class _Builder:
 @register_pattern("fig5")
 def fig5(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
          counts: Mapping[str, int] | None = None, src: int | None = None,
-         dst: int | None = None, bidir: bool = False) -> dict:
+         dst: int | None = None, bidir: bool = False,
+         write_frac: Mapping[str, float] | float = 0.0) -> dict:
     """Cluster-to-cluster accesses between two tiles (paper Fig. 5).
 
-    Each class issues ``counts[cls]`` reads at ``rates[cls]`` flits/cycle
-    from src to dst (burst classes scale the AR gap by their burst
-    length, so rate 1.0 means back-to-back bursts); ``bidir`` mirrors
-    the traffic dst -> src.
+    Each class issues ``counts[cls]`` transactions at ``rates[cls]``
+    flits/cycle from src to dst (burst classes scale the address-flow
+    gap by their burst length, so rate 1.0 means back-to-back bursts);
+    ``bidir`` mirrors the traffic dst -> src.  ``write_frac[cls]`` of
+    the transactions are writes (AW/W/B), evenly interleaved.
     """
     R = spec.n_routers
     src = 0 if src is None else _check_tile(spec, "src", src)
     dst = R - 1 if dst is None else _check_tile(spec, "dst", dst)
     rates = _per_class(spec, rates, 0.0)
     counts = _per_class(spec, counts, 0)
+    wfrac = _per_class_frac(spec, write_frac)
     out = {}
     for cls in spec.classes:
         b = _Builder(R)
         times = _ramp(rates[cls.name], counts[cls.name],
                       stretch=cls.burst_beats)
-        b.add(src, times, dst)
+        wr = _mix_writes(times.shape[0], wfrac[cls.name])
+        b.add(src, times, dst, wr)
         if bidir:
-            b.add(dst, times, src)
+            b.add(dst, times, src, wr)
         out[cls.name] = b.build()
     return out
 
@@ -199,14 +256,17 @@ def fig5(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
 @register_pattern("uniform_random")
 def uniform_random(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
                    counts: Mapping[str, int] | None = None,
-                   seed: int = 0) -> dict:
-    """Uniform-random background traffic (all NIs, random non-self dests)."""
+                   seed: int = 0,
+                   write_frac: Mapping[str, float] | float = 0.0) -> dict:
+    """Uniform-random background traffic (all NIs, random non-self dests,
+    each transaction a write with probability ``write_frac[cls]``)."""
     R = spec.n_routers
     rng = np.random.default_rng(seed)
     rates = _per_class(spec, rates, 0.0)
     counts = _per_class(spec, counts, 0)
+    wfrac = _per_class_frac(spec, write_frac)
     out = {}
-    for cls in spec.classes:
+    for ci, cls in enumerate(spec.classes):
         rate, count = rates[cls.name], counts[cls.name]
         if count <= 0 or rate <= 0:
             out[cls.name] = _empty(R)
@@ -214,8 +274,10 @@ def uniform_random(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
         gap = _gap(rate, cls.burst_beats)
         times = 10 + np.cumsum(rng.integers(1, 2 * gap, size=(R, count)),
                                axis=1).astype(np.int32)
-        out[cls.name] = (times.astype(np.int32),
-                         _no_self_dests(rng, R, count))
+        dests = _no_self_dests(rng, R, count)
+        out[cls.name] = (times.astype(np.int32), dests,
+                         _rand_writes(seed, ci, R, count,
+                                      wfrac[cls.name]))
     return out
 
 
@@ -223,9 +285,12 @@ def uniform_random(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
 def hotspot(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
             counts: Mapping[str, int] | None = None,
             hot: int | None = None, hot_frac: float = 0.5,
-            seed: int = 0) -> dict:
+            seed: int = 0,
+            write_frac: Mapping[str, float] | float = 0.0) -> dict:
     """Uniform-random traffic with a fraction converging on one hot tile
-    (memory-controller / parameter-server congestion archetype)."""
+    (memory-controller / parameter-server congestion archetype; with
+    ``write_frac`` the hot tile absorbs write bursts — the DMA-into-HBM
+    shape)."""
     R = spec.n_routers
     if hot is None:
         hot = (spec.ny // 2) * spec.nx + spec.nx // 2
@@ -234,8 +299,9 @@ def hotspot(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
     rng = np.random.default_rng(seed)
     rates = _per_class(spec, rates, 0.0)
     counts = _per_class(spec, counts, 0)
+    wfrac = _per_class_frac(spec, write_frac)
     out = {}
-    for cls in spec.classes:
+    for ci, cls in enumerate(spec.classes):
         rate, count = rates[cls.name], counts[cls.name]
         if count <= 0 or rate <= 0:
             out[cls.name] = _empty(R)
@@ -250,13 +316,16 @@ def hotspot(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
         if R > 1:
             dests[hot] = _no_self_dests(
                 np.random.default_rng(seed + 1), R, count)[hot]
-        out[cls.name] = (times, dests)
+        out[cls.name] = (times, dests,
+                         _rand_writes(seed, ci, R, count,
+                                      wfrac[cls.name]))
     return out
 
 
 @register_pattern("transpose")
 def transpose(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
-              counts: Mapping[str, int] | None = None) -> dict:
+              counts: Mapping[str, int] | None = None,
+              write_frac: Mapping[str, float] | float = 0.0) -> dict:
     """Matrix-transpose permutation: tile (x, y) targets tile (y, x).
     Requires a square mesh; diagonal tiles stay silent."""
     if spec.nx != spec.ny:
@@ -264,28 +333,33 @@ def transpose(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
     R = spec.n_routers
     rates = _per_class(spec, rates, 0.0)
     counts = _per_class(spec, counts, 0)
+    wfrac = _per_class_frac(spec, write_frac)
     out = {}
     for cls in spec.classes:
         b = _Builder(R)
         times = _ramp(rates[cls.name], counts[cls.name],
                       stretch=cls.burst_beats)
+        wr = _mix_writes(times.shape[0], wfrac[cls.name])
         for r in range(R):
             x, y = r % spec.nx, r // spec.nx
             d = x * spec.nx + y
             if d != r:
-                b.add(r, times, d)
+                b.add(r, times, d, wr)
         out[cls.name] = b.build()
     return out
 
 
 @register_pattern("all_to_all")
 def all_to_all(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
-               rounds: Mapping[str, int] | None = None) -> dict:
+               rounds: Mapping[str, int] | None = None,
+               write_frac: Mapping[str, float] | float = 0.0) -> dict:
     """Every NI sweeps all other tiles in src-staggered round-robin order
-    (the DNN all-to-all / expert-exchange phase PATRONoC stresses)."""
+    (the DNN all-to-all / expert-exchange phase PATRONoC stresses; a
+    50/50 ``write_frac`` makes it the push+pull expert exchange)."""
     R = spec.n_routers
     rates = _per_class(spec, rates, 0.0)
     rounds = _per_class(spec, rounds, 0)
+    wfrac = _per_class_frac(spec, write_frac)
     out = {}
     for cls in spec.classes:
         rate, n_rounds = rates[cls.name], rounds[cls.name]
@@ -295,10 +369,11 @@ def all_to_all(spec: NocSpec, *, rates: Mapping[str, float] | None = None,
             continue
         b = _Builder(R)
         times = _ramp(rate, count, stretch=cls.burst_beats)
+        wr = _mix_writes(times.shape[0], wfrac[cls.name])
         offs = np.arange(count) % (R - 1)        # 0..R-2 repeated
         for s in range(R):
             dests = (s + 1 + offs) % R           # sweeps all non-self tiles
-            b.add(s, times, dests)
+            b.add(s, times, dests, wr)
         out[cls.name] = b.build()
     return out
 

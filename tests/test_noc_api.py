@@ -162,7 +162,7 @@ def test_uniform_random_never_self():
         wl = Workload.make("uniform_random",
                            rates={"narrow": 0.5, "wide": 0.5},
                            counts={"narrow": 200, "wide": 50}, seed=seed)
-        for name, (times, dests) in wl.schedules(spec).items():
+        for name, (times, dests, _) in wl.schedules(spec).items():
             live = times < (1 << 30)
             srcs = np.broadcast_to(
                 np.arange(spec.n_routers)[:, None], dests.shape)
@@ -180,9 +180,10 @@ def test_patterns_produce_valid_schedules():
     for wl in wls:
         sched = wl.schedules(spec)
         assert set(sched) == {"narrow", "wide"}
-        for times, dests in sched.values():
-            assert times.shape == dests.shape
+        for times, dests, writes in sched.values():
+            assert times.shape == dests.shape == writes.shape
             assert np.all((dests >= 0) & (dests < spec.n_routers))
+            assert np.all(writes == 0)       # read-only by default
             assert np.all(np.diff(
                 np.where(times < (1 << 30), times, np.int64(1 << 30)),
                 axis=1) >= 0)  # sorted per NI
@@ -192,7 +193,7 @@ def test_all_to_all_covers_every_pair():
     spec = NocSpec.narrow_wide(3, 3, cycles=100)
     wl = Workload.make("all_to_all", rates={"narrow": 1.0},
                        rounds={"narrow": 1})
-    times, dests = wl.schedules(spec)["narrow"]
+    times, dests, _ = wl.schedules(spec)["narrow"]
     R = spec.n_routers
     for s in range(R):
         live = times[s] < (1 << 30)

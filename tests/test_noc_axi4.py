@@ -1,0 +1,533 @@
+"""AXI4 flow-model tests: write transactions (AW/W/B) through every
+layer, golden bit-identity for read-only presets, per-class service
+latency distributions, and stall/deadlock observability.
+
+The goldens were captured from the pre-AXI4 read-only engine (commit
+4fcff85) on fixed workloads: the five-flow refactor must leave every
+read-only preset flit-for-flit identical — W rings and AW/B flows that
+never carry traffic must not perturb arbitration, ring order, or
+round-robin state.
+"""
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro.core.flit import (AXI_FLOWS, N_FLOWS, flow_kind, kind_class,
+                             kind_flow)
+from repro.noc import (Mesh, NocSpec, Torus, TrafficClass, Workload,
+                       build_flow_plan, hop_table, simulate,
+                       simulate_batch)
+from repro.noc.workload import _freeze, _mix_writes, _thaw
+
+BIG = 1 << 30
+
+
+# --------------------------------------------------------------------- #
+# flow vocabulary
+# --------------------------------------------------------------------- #
+def test_flow_kind_round_trips():
+    for i in range(4):
+        for f in AXI_FLOWS:
+            k = flow_kind(i, f)
+            assert kind_class(k) == i and kind_flow(k) == f
+    # class 0's read kinds keep the legacy req/rsp tag values
+    assert flow_kind(0, "ar") == 0 and flow_kind(0, "r") == 1
+    assert N_FLOWS == 5
+
+
+def test_paper_flow_mapping():
+    """ISSUE/paper mapping: AW/AR/B on the narrow channels, W/R on the
+    wide one (wide class); the narrow class rides narrow end-to-end."""
+    spec = NocSpec.narrow_wide()
+    ch = {f: spec.channels[spec.flow_channel("wide", f)].name
+          for f in AXI_FLOWS}
+    assert ch == {"ar": "req", "aw": "req", "b": "rsp",
+                  "w": "wide", "r": "wide"}
+    nch = {f: spec.channels[spec.flow_channel("narrow", f)].name
+           for f in AXI_FLOWS}
+    assert nch == {"ar": "req", "aw": "req", "w": "req",
+                   "r": "rsp", "b": "rsp"}
+
+
+def test_legacy_class_map_expands():
+    """Two-flow maps keep working: req -> AR+AW, rsp -> R+B, W joins R
+    on the class's data channel."""
+    spec = NocSpec(class_map=(("narrow.req", "req"), ("narrow.rsp", "rsp"),
+                              ("wide.req", "req"), ("wide.rsp", "wide")))
+    assert spec.flow_map["narrow.aw"] == "req"
+    assert spec.flow_map["narrow.b"] == "rsp"
+    assert spec.flow_map["narrow.w"] == "rsp"     # data channel
+    assert spec.flow_map["wide.w"] == "wide"
+    assert spec.flow_map["wide.b"] == "wide"
+    # explicit five-flow entries win over the expansion default
+    spec2 = NocSpec(class_map=(("narrow.req", "req"), ("narrow.rsp", "rsp"),
+                               ("narrow.w", "req"),
+                               ("wide.req", "req"), ("wide.rsp", "wide"),
+                               ("wide.b", "rsp")))
+    assert spec2.flow_map["narrow.w"] == "req"
+    assert spec2.flow_map["wide.b"] == "rsp"
+
+
+def test_flow_plan_rings():
+    """Response rings stay channel-keyed in the read-only order; every
+    class gets its own W ring appended."""
+    plan = build_flow_plan(NocSpec.narrow_wide())
+    assert plan.n_rq == 2 and plan.n_q == 4       # [rsp, wide] + 2 W rings
+    assert plan.rq_of_r == (0, 1)
+    assert plan.rq_of_b == (0, 0)                 # both B flows on rsp ring
+    wo = build_flow_plan(NocSpec.wide_only())
+    assert wo.n_rq == 1 and wo.n_q == 3
+    assert wo.rr_classes[0] == (0, 1)             # RR slots: ring + 2 classes
+
+
+# --------------------------------------------------------------------- #
+# golden bit-identity: read-only presets vs the pre-AXI4 engine
+# --------------------------------------------------------------------- #
+def _spec_of(tag, cycles=2500):
+    return {
+        "narrow_wide": lambda: NocSpec.narrow_wide(4, 4, cycles=cycles),
+        "wide_only": lambda: NocSpec.wide_only(4, 4, cycles=cycles),
+        "torus": lambda: NocSpec.narrow_wide(4, 4, topology=Torus(4, 4),
+                                             cycles=cycles),
+        "express": lambda: NocSpec.narrow_wide(
+            6, 1, topology=Mesh(6, 1, express=(2,)), cycles=cycles),
+    }[tag]()
+
+
+# (tag, workload kind) -> per-class (done, lat_sum, max_lat, beats_rx)
+# + per-channel link moves, captured from the read-only engine
+GOLDENS = {
+    ("narrow_wide", "fig5"): (
+        {"narrow": (80, 3040, 38, 80), "wide": (48, 2586, 54, 768)},
+        {"req": 768, "rsp": 480, "wide": 4608}),
+    ("wide_only", "fig5"): (
+        {"narrow": (80, 6502, 138, 80), "wide": (48, 4766, 138, 768)},
+        {"wide": 5856}),
+    ("torus", "fig5"): (
+        {"narrow": (80, 1760, 22, 80), "wide": (48, 1818, 38, 768)},
+        {"req": 256, "rsp": 160, "wide": 1536}),
+    ("express", "fig5"): (
+        {"narrow": (80, 2080, 26, 80), "wide": (48, 2010, 42, 768)},
+        {"req": 384, "rsp": 240, "wide": 2304}),
+    ("narrow_wide", "ur"): (
+        {"narrow": (192, 4834, 40, 192), "wide": (80, 5881, 167, 1280)},
+        {"req": 713, "rsp": 498, "wide": 3440}),
+    ("wide_only", "ur"): (
+        {"narrow": (192, 13901, 221, 192), "wide": (80, 8796, 232, 1280)},
+        {"wide": 4651}),
+    ("torus", "ur"): (
+        {"narrow": (192, 4323, 33, 192), "wide": (80, 5747, 160, 1280)},
+        {"req": 561, "rsp": 380, "wide": 2896}),
+    ("express", "ur"): (
+        {"narrow": (72, 1492, 28, 72), "wide": (30, 1371, 106, 480)},
+        {"req": 159, "rsp": 114, "wide": 720}),
+}
+
+
+@pytest.mark.parametrize("tag,wkind", sorted(GOLDENS))
+def test_read_only_presets_match_goldens(tag, wkind):
+    spec = _spec_of(tag)
+    if wkind == "fig5":
+        wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                           counts={"narrow": 40, "wide": 24},
+                           src=0, dst=spec.n_routers - 1, bidir=True)
+    else:
+        wl = Workload.make("uniform_random",
+                           rates={"narrow": 0.3, "wide": 0.8},
+                           counts={"narrow": 12, "wide": 5}, seed=7)
+    r = simulate(spec, wl)
+    want_cls, want_moves = GOLDENS[(tag, wkind)]
+    for cname, (done, lat_sum, max_lat, beats) in want_cls.items():
+        st_ = r.classes[cname]
+        got = (int(st_.done.sum()),
+               int(round(float((st_.avg_lat
+                                * np.maximum(st_.done, 1)).sum()))),
+               int(st_.max_lat.max()), int(st_.beats_rx.sum()))
+        assert got == (done, lat_sum, max_lat, beats), (cname, got)
+        # read-only: the write direction never activates
+        assert int(st_.w_done.sum()) == 0
+        assert int(st_.w_beats_rx.sum()) == 0
+    assert {ch: int(c.link_moves) for ch, c in r.channels.items()} \
+        == want_moves
+
+
+# --------------------------------------------------------------------- #
+# write path end-to-end
+# --------------------------------------------------------------------- #
+def test_pure_write_fig5_completes_with_analytic_flit_counts():
+    """Every write completes; AW/W/B flit counts x hop distance match
+    the per-channel link-move ledger exactly (narrow W rides req, wide
+    W rides wide, every B rides rsp — the paper mapping)."""
+    spec = NocSpec.narrow_wide(4, 4, cycles=3000)
+    n_n, n_w = 20, 10
+    wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                       counts={"narrow": n_n, "wide": n_w},
+                       src=0, dst=15, write_frac=1.0)
+    r = simulate(spec, wl)
+    hops = int(hop_table(spec.topology)[0, 15])
+    bl = spec.get_class("wide").burst_beats
+    for cname, n in (("narrow", n_n), ("wide", n_w)):
+        st_ = r.classes[cname]
+        assert int(st_.done.sum()) == 0               # no reads issued
+        assert int(st_.w_done.sum()) == n
+    assert int(r.classes["narrow"].w_beats_rx.sum()) == n_n
+    assert int(r.classes["wide"].w_beats_rx.sum()) == n_w * bl
+    # req: narrow AW + narrow W (single-beat) + wide AW
+    assert int(r.channels["req"].link_moves) == (2 * n_n + n_w) * hops
+    # rsp: one B ack per write
+    assert int(r.channels["rsp"].link_moves) == (n_n + n_w) * hops
+    # wide: the wide W bursts
+    assert int(r.channels["wide"].link_moves) == n_w * bl * hops
+    assert bool(r.drained)
+
+
+@pytest.mark.parametrize("pattern,kw", [
+    ("fig5", dict(rates={"narrow": 0.3, "wide": 1.0},
+                  counts={"narrow": 12, "wide": 6}, src=0, dst=15)),
+    ("transpose", dict(rates={"narrow": 0.3, "wide": 1.0},
+                       counts={"narrow": 4, "wide": 2})),
+    ("all_to_all", dict(rates={"narrow": 0.3, "wide": 1.0},
+                        rounds={"narrow": 1, "wide": 1})),
+    ("uniform_random", dict(rates={"narrow": 0.3, "wide": 1.0},
+                            counts={"narrow": 8, "wide": 4}, seed=11)),
+    ("hotspot", dict(rates={"narrow": 0.3, "wide": 1.0},
+                     counts={"narrow": 8, "wide": 4}, seed=11)),
+])
+@pytest.mark.parametrize("wf", [1.0, 0.5])
+def test_pattern_flit_counts_under_write_mix(pattern, kw, wf):
+    """Analytic transaction/beat conservation for every pattern under a
+    pure-write and a 50/50 mix: scheduled = reads + writes, R beats =
+    reads x burst, W beats = writes x burst, every txn completes."""
+    spec = NocSpec.narrow_wide(4, 4, cycles=12000)
+    wl = Workload.make(pattern, write_frac=wf, **kw)
+    sched = wl.schedules(spec)
+    r = simulate(spec, wl)
+    assert bool(r.drained), (pattern, wf)
+    for i, tc in enumerate(spec.classes):
+        times, _, writes = sched[tc.name]
+        live = times < BIG
+        n_total = int(live.sum())
+        n_writes = int((writes * live).sum())
+        st_ = r.classes[tc.name]
+        assert int(st_.done.sum()) == n_total - n_writes, (pattern, wf)
+        assert int(st_.w_done.sum()) == n_writes, (pattern, wf)
+        assert int(st_.beats_rx.sum()) == \
+            (n_total - n_writes) * tc.burst_beats
+        assert int(st_.w_beats_rx.sum()) == n_writes * tc.burst_beats
+        if wf == 1.0 and n_total:
+            assert n_writes == n_total
+        elif n_total and pattern in ("fig5", "transpose", "all_to_all"):
+            # deterministic interleave: half, up to one rounding txn
+            # per NI (odd per-NI counts, e.g. all_to_all's R-1 sweeps)
+            assert abs(2 * n_writes - n_total) <= spec.n_routers, \
+                (pattern, n_writes, n_total)
+        elif n_total:
+            # seeded random draw: a loose binomial sanity band
+            assert 0.25 * n_total < n_writes < 0.75 * n_total
+
+
+def test_write_rob_flow_control_limits_outstanding():
+    """The write ROB budget gates AW injection: even a tiny budget
+    drains a long write stream (end-to-end flow control, paper §III-A),
+    and reads keep their own independent credits."""
+    spec = NocSpec.narrow_wide(2, 2, cycles=4000, max_wide_outstanding=2)
+    wl = Workload.make("fig5", rates={"wide": 1.0}, counts={"wide": 48},
+                       src=0, dst=3, write_frac=0.5)
+    r = simulate(spec, wl)
+    assert int(r.classes["wide"].done[0]) == 24
+    assert int(r.classes["wide"].w_done[0]) == 24
+    assert bool(r.drained)
+
+
+def test_write_frac_validation_and_mix():
+    with pytest.raises(ValueError, match="write_frac"):
+        Workload.make("fig5", counts={"narrow": 4},
+                      rates={"narrow": 1.0},
+                      write_frac=1.5).schedules(NocSpec.narrow_wide(2, 2))
+    with pytest.raises(KeyError):
+        Workload.make("fig5", write_frac={"bogus": 0.5}).schedules(
+            NocSpec.narrow_wide(2, 2))
+    assert _mix_writes(8, 0.0).sum() == 0
+    assert _mix_writes(8, 1.0).sum() == 8
+    assert _mix_writes(8, 0.5).sum() == 4
+    assert _mix_writes(100, 0.25).sum() == 25
+
+
+def test_write_frac_never_reshuffles_schedules():
+    """Review regression: the random patterns draw write flags from an
+    independent per-class rng stream, so turning the mix knob for one
+    class leaves EVERY class's times/dests bit-identical — a mix sweep
+    varies only the direction of transactions, never the traffic."""
+    spec = NocSpec.narrow_wide(4, 4, cycles=100)
+    for pattern in ("uniform_random", "hotspot"):
+        kw = dict(rates={"narrow": 0.3, "wide": 0.8},
+                  counts={"narrow": 10, "wide": 5}, seed=0)
+        base = Workload.make(pattern, **kw).schedules(spec)
+        mixed = Workload.make(pattern, write_frac={"narrow": 0.5},
+                              **kw).schedules(spec)
+        for cls in ("narrow", "wide"):
+            np.testing.assert_array_equal(base[cls][0], mixed[cls][0],
+                                          err_msg=f"{pattern}:{cls} times")
+            np.testing.assert_array_equal(base[cls][1], mixed[cls][1],
+                                          err_msg=f"{pattern}:{cls} dests")
+        assert np.any(mixed["narrow"][2] > 0)
+        assert not np.any(mixed["wide"][2] > 0)
+
+
+def test_wide_only_carries_writes_too():
+    """The shared-link ablation serializes W bursts, B acks, and reads
+    on one physical channel and still drains."""
+    spec = NocSpec.wide_only(3, 3, cycles=6000)
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.3, "wide": 0.8},
+                       counts={"narrow": 10, "wide": 5}, seed=2,
+                       write_frac={"narrow": 0.5, "wide": 0.5})
+    r = simulate(spec, wl)
+    assert bool(r.drained)
+    assert int(r.classes["wide"].w_done.sum()) > 0
+    assert int(r.classes["narrow"].w_done.sum()) > 0
+    assert len(r.channels) == 1
+
+
+# --------------------------------------------------------------------- #
+# backend equivalence on mixed read/write traffic (acceptance)
+# --------------------------------------------------------------------- #
+def _assert_results_equal(a, b):
+    for cname in a.classes:
+        for f in ("done", "avg_lat", "max_lat", "beats_rx", "eff_bw",
+                  "w_done", "w_avg_lat", "w_max_lat", "w_beats_rx",
+                  "w_eff_bw"):
+            np.testing.assert_array_equal(
+                getattr(a.classes[cname], f), getattr(b.classes[cname], f),
+                err_msg=f"{cname}.{f}")
+    for ch in a.channels:
+        np.testing.assert_array_equal(a.channels[ch].link_moves,
+                                      b.channels[ch].link_moves)
+    np.testing.assert_array_equal(a.max_stall_cycles, b.max_stall_cycles)
+    np.testing.assert_array_equal(a.drained, b.drained)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+@pytest.mark.parametrize("case", ["mesh", "torus"])
+def test_backends_agree_on_mixed_write_traffic(case, backend):
+    """All three backends are flit-for-flit identical on mixed
+    read/write workloads — the fabric is flow-agnostic, so the AXI4
+    refactor must not open any backend-specific divergence."""
+    if case == "mesh":
+        spec = NocSpec.narrow_wide(4, 4, cycles=1500)
+        wl = Workload.make("uniform_random",
+                           rates={"narrow": 0.3, "wide": 0.8},
+                           counts={"narrow": 10, "wide": 5}, seed=3,
+                           write_frac=0.5)
+    else:
+        spec = NocSpec.wide_only(3, 3, topology=Torus(3, 3), cycles=1200)
+        wl = Workload.make("uniform_random",
+                           rates={"narrow": 0.2, "wide": 0.5},
+                           counts={"narrow": 8, "wide": 4}, seed=5,
+                           write_frac=0.6)
+    _assert_results_equal(simulate(spec, wl),
+                          simulate(spec, wl, backend=backend))
+
+
+def test_batched_write_sweep_matches_singles():
+    """write_frac sweeps vmap like any other workload axis."""
+    spec = NocSpec.narrow_wide(3, 3, cycles=2500)
+    wls = [Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                         counts={"narrow": 10, "wide": 5},
+                         src=0, dst=8, write_frac=wf)
+           for wf in (0.0, 0.5, 1.0)]
+    batched = simulate_batch(spec, wls)
+    for i, wl in enumerate(wls):
+        single = simulate(spec, wl)
+        _assert_results_equal(batched.point(i), single)
+    # the mix shifts work between directions, conserving transactions
+    done = batched.classes["wide"].done.sum(axis=-1)
+    w_done = batched.classes["wide"].w_done.sum(axis=-1)
+    np.testing.assert_array_equal(done + w_done, [5, 5, 5])
+    np.testing.assert_array_equal(w_done, [0, 2, 5])
+
+
+# --------------------------------------------------------------------- #
+# per-class service-latency distributions (satellite)
+# --------------------------------------------------------------------- #
+def test_jitter_zero_reproduces_exactly():
+    spec = NocSpec.narrow_wide(4, 4, cycles=2500)
+    wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                       counts={"narrow": 40, "wide": 24}, src=0, dst=15,
+                       write_frac=0.5)
+    _assert_results_equal(simulate(spec, wl),
+                          simulate(spec, wl, service_jitter=0))
+
+
+def test_per_class_service_lat_vector():
+    spec = NocSpec.narrow_wide(2, 2, cycles=1500)
+    wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 0.5},
+                       counts={"narrow": 10, "wide": 5}, src=0, dst=3)
+    lo = simulate(spec, wl, service_lat=[5, 40])
+    hi = simulate(spec, wl, service_lat=[40, 5])
+    assert float(lo.classes["narrow"].avg_lat[0]) < \
+        float(hi.classes["narrow"].avg_lat[0])
+    assert float(lo.classes["wide"].avg_lat[0]) > \
+        float(hi.classes["wide"].avg_lat[0])
+
+
+def test_spec_declared_distribution_and_seeded_table():
+    """TrafficClass (mean, jitter) feeds the engine; the jitter table is
+    seeded so equal seeds reproduce and different seeds differ."""
+    classes = (TrafficClass("narrow", 1, 8, 64, service_lat=8,
+                            service_jitter=6),
+               TrafficClass("wide", 16, 8, 512))
+    spec = NocSpec.narrow_wide(3, 3, cycles=2500).with_(classes=classes)
+    wl = Workload.make("uniform_random", rates={"narrow": 0.4},
+                       counts={"narrow": 30}, seed=1)
+    a = simulate(spec, wl)
+    b = simulate(spec, wl)
+    _assert_results_equal(a, b)                    # deterministic
+    c = simulate(spec, wl, jitter_seed=9)
+    assert not np.array_equal(a.classes["narrow"].avg_lat,
+                              c.classes["narrow"].avg_lat)
+    # jitter widens the observed latency spread vs the fixed-mean run
+    flat = simulate(spec, wl, service_jitter=0)
+    assert float(a.classes["narrow"].max_lat.max()) >= \
+        float(flat.classes["narrow"].max_lat.max())
+    assert int(a.classes["narrow"].done.sum()) == 30 * (spec.n_routers)
+
+
+def test_jitter_decorrelates_across_sources():
+    """Per-request offsets are keyed by (issuing NI, txn id): two NIs
+    issuing the same txn sequence to one target must not see identical
+    latency trajectories under jitter (review regression)."""
+    spec = NocSpec.narrow_wide(4, 1, cycles=3000)
+    # NIs 0 and 1 both send the same schedule to NI 3, one extra hop
+    # apart; under jitter their per-txn service draws must differ
+    sched = {
+        "narrow": (np.where(np.arange(4)[:, None] < 2,
+                            10 + 40 * np.arange(30)[None, :], BIG),
+                   np.full((4, 30), 3, np.int32)),
+        "wide": (np.full((4, 1), BIG, np.int32),
+                 np.zeros((4, 1), np.int32))}
+    from repro.noc import simulate_schedules
+    r = simulate_schedules(spec, sched, service_lat=10, service_jitter=8)
+    lat0 = r.classes["narrow"].avg_lat[0]
+    lat1 = r.classes["narrow"].avg_lat[1]
+    # NI 1 is one hop closer (4 router cycles less round trip); equal
+    # jitter draws would make the latency gap exactly 4 — it must not be
+    assert abs((float(lat0) - float(lat1)) - 4.0) > 1e-6, (lat0, lat1)
+
+
+def test_batch_per_class_vector_when_n_equals_n_cls():
+    """N == n_cls ambiguity: a 1-D per-class knob keeps its per-class
+    meaning (review regression — it must NOT become a per-point
+    sweep), matching what per-point runs with the same vector do."""
+    spec = NocSpec.narrow_wide(2, 2, cycles=1500)
+    wl = Workload.make("fig5", rates={"narrow": 0.3, "wide": 1.0},
+                       counts={"narrow": 8, "wide": 8}, src=0, dst=3)
+    mo = [1, 4]                      # per-class: narrow=1, wide=4
+    batched = simulate_batch(spec, [wl, wl], max_outstanding=mo)
+    single = simulate(spec, wl, max_outstanding=mo)
+    for i in range(2):
+        _assert_results_equal(batched.point(i), single)
+    # service_lat keeps its historical per-POINT meaning instead
+    sl_batched = simulate_batch(spec, [wl, wl], service_lat=[5, 30])
+    for i, sl in enumerate((5, 30)):
+        _assert_results_equal(sl_batched.point(i),
+                              simulate(spec, wl, service_lat=sl))
+
+
+def test_service_lat_jitter_sweep_vmaps():
+    """Latency-distribution knobs batch like every other operand."""
+    spec = NocSpec.narrow_wide(2, 2, cycles=1200)
+    wl = Workload.make("fig5", rates={"narrow": 0.2},
+                       counts={"narrow": 8}, src=0, dst=3)
+    jits = [0, 3, 9]
+    batched = simulate_batch(spec, [wl] * 3,
+                             service_jitter=np.asarray(jits))
+    for i, j in enumerate(jits):
+        single = simulate(spec, wl, service_jitter=j)
+        _assert_results_equal(batched.point(i), single)
+
+
+# --------------------------------------------------------------------- #
+# stall / deadlock observability (satellite)
+# --------------------------------------------------------------------- #
+def test_light_load_drains_with_small_stall():
+    spec = NocSpec.narrow_wide(3, 3, cycles=2000)
+    wl = Workload.make("fig5", rates={"narrow": 0.1, "wide": 0.5},
+                       counts={"narrow": 10, "wide": 4}, src=0, dst=8,
+                       write_frac=0.5)
+    r = simulate(spec, wl)
+    assert bool(r.drained)
+    # quiet stretches are bounded by service latency + scheduling gaps,
+    # nowhere near the horizon
+    assert int(r.max_stall_cycles) < 100
+
+
+def test_torus_saturating_bursts_deadlock_is_observable():
+    """Regression for the ROADMAP liveness caveat: deterministic
+    minimal-wrap routing on a VC-less torus — like the real VC-less
+    tori the paper's no-VC design space excludes — can deadlock under
+    saturating wormhole bursts, because wrap-around links close cyclic
+    channel-dependency chains that the mesh's dimension-ordered routing
+    provably cannot form.  The engine must *surface* the wedge
+    (drained=False, max_stall ~ the remaining horizon), not hang or
+    silently undercount; the same load on the mesh keeps moving every
+    cycle."""
+    wl = Workload.make("all_to_all", rates={"wide": 1.0},
+                       rounds={"wide": 4}, write_frac=0.5)
+    mk = lambda topo: NocSpec.wide_only(          # noqa: E731
+        4, 4, topology=topo, burstlen=32, cycles=2500,
+        max_wide_outstanding=16)
+    r_torus = simulate(mk(Torus(4, 4)), wl)
+    r_mesh = simulate(mk(None), wl)
+    assert not bool(r_torus.drained)
+    assert int(r_torus.max_stall_cycles) > 2500 // 2   # wedged for good
+    assert int(r_mesh.max_stall_cycles) <= 5           # continuous progress
+    assert int(r_mesh.classes["wide"].w_done.sum()) > \
+        int(r_torus.classes["wide"].w_done.sum())
+
+
+# --------------------------------------------------------------------- #
+# Workload frozen-params round-trip (satellite property test)
+# --------------------------------------------------------------------- #
+_scalars = st.one_of(st.integers(-1000, 1000), st.floats(
+    allow_nan=False, allow_infinity=False, width=32),
+    st.text(max_size=8), st.booleans())
+_nested = st.recursive(
+    _scalars,
+    lambda inner: st.one_of(
+        st.lists(inner, max_size=4),
+        st.dictionaries(st.text(max_size=6), inner, max_size=4)),
+    max_leaves=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(params=st.dictionaries(st.text(min_size=1, max_size=8), _nested,
+                              max_size=5))
+def test_freeze_thaw_round_trips_nested_mappings(params):
+    """_freeze/_thaw are exact inverses over arbitrarily nested
+    mappings/sequences (lists normalize to tuples), and frozen params
+    are hashable — the property Workload's cache-key role depends on."""
+    frozen = tuple(sorted((k, _freeze(v)) for k, v in params.items()))
+    hash(frozen)                                   # must be hashable
+
+    def norm(v):
+        if isinstance(v, dict):
+            return {k: norm(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return tuple(norm(x) for x in v)
+        return v
+
+    thawed = {k: _thaw(v) for k, v in frozen}
+    assert thawed == {k: norm(v) for k, v in params.items()}
+
+
+def test_workload_kwargs_round_trip_nested():
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.5, "wide": 1.0},
+                       counts={"narrow": 3},
+                       write_frac={"narrow": 0.25})
+    kw = wl.kwargs
+    assert kw["rates"] == {"narrow": 0.5, "wide": 1.0}
+    assert kw["write_frac"] == {"narrow": 0.25}
+    hash(wl)
