@@ -258,6 +258,84 @@ def bench_write_mix(smoke: bool = False):
     return rows
 
 
+def bench_routing(smoke: bool = False):
+    """Routing-policy x VC-count study: torus vs mesh throughput at
+    EQUAL saturating all-to-all load (paper-adjacent: the journal
+    FlooNoC routing evaluation + escape-VC deadlock freedom).
+
+    The VC-less minimal-wrap torus wedges under this load (drained
+    False, stall ~ horizon) — recorded as the contrast point.  With the
+    2-VC escape/dateline policy the torus drains and completes at least
+    as many transactions as the mesh in the same horizon (asserted:
+    that is the PR acceptance).  The escape-VC jnp/pallas_fused results
+    are also equivalence-asserted so the folded-table VC fabric stays
+    backend-exact inside the bench, not just the test suite."""
+    from repro.noc import Mesh, NocSpec, RoutingPolicy, Torus, Workload, \
+        simulate
+    cycles = 2000 if smoke else 3500
+    wl = Workload.make("all_to_all", rates={"wide": 1.0},
+                       rounds={"wide": 4}, write_frac=0.5)
+
+    def mk(topo, pol):
+        return NocSpec.wide_only(4, 4, topology=topo, burstlen=32,
+                                 cycles=cycles, max_wide_outstanding=16,
+                                 routing=pol)
+
+    configs = [
+        ("mesh_xy_1vc", Mesh(4, 4), RoutingPolicy.xy(1)),
+        ("torus_xy_1vc", Torus(4, 4), RoutingPolicy.xy(1)),
+        ("torus_xy_2vc", Torus(4, 4), RoutingPolicy.xy(2)),
+        ("mesh_o1turn_2vc", Mesh(4, 4), RoutingPolicy.o1turn(2)),
+        ("torus_o1turn_4vc", Torus(4, 4), RoutingPolicy.o1turn(4)),
+        ("mesh_valiant_4vc", Mesh(4, 4), RoutingPolicy.valiant(4)),
+    ]
+    done = {}
+    for tag, topo, pol in configs:
+        spec = mk(topo, pol)
+        m, us, cus = _timed(simulate, spec, wl)
+        st = m.classes["wide"]
+        n_done = int(st.done.sum()) + int(st.w_done.sum())
+        done[tag] = n_done
+        thpt = n_done / cycles
+        occ = m.channels["wide"].vc_occupancy
+        name = f"routing_{tag}"
+        print(f"{name},{us:.0f},done={n_done} thpt={thpt:.3f}/cyc "
+              f"drained={bool(m.drained)} "
+              f"max_stall={int(m.max_stall_cycles)} "
+              f"vc_occ={np.round(occ, 1).tolist()}")
+        _record(name, us, cus, txns_done=n_done, txns_per_cycle=thpt,
+                drained=bool(m.drained),
+                max_stall_cycles=int(m.max_stall_cycles),
+                n_vcs=pol.n_vcs, algorithm=pol.algorithm,
+                vc_peak_occupancy=[
+                    int(v) for v in m.channels["wide"].vc_peak_occupancy])
+
+    # escape-VC torus: backend-exact (jnp vs fused kernel, VC tables)
+    spec = mk(Torus(4, 4), RoutingPolicy.xy(2))
+    mj = simulate(spec, wl, backend="jnp")
+    mf = simulate(spec, wl, backend="pallas_fused")
+    equal = all(
+        np.array_equal(getattr(mj.classes[c], f),
+                       getattr(mf.classes[c], f))
+        for c in mj.classes
+        for f in ("done", "avg_lat", "beats_rx", "w_done", "w_beats_rx")
+    ) and np.array_equal(mj.channels["wide"].link_moves,
+                         mf.channels["wide"].link_moves)
+    assert equal, "VC fabric backend mismatch in bench_routing!"
+
+    torus_ge_mesh = done["torus_xy_2vc"] >= done["mesh_xy_1vc"]
+    print(f"routing_summary,0,torus2vc={done['torus_xy_2vc']} "
+          f"mesh={done['mesh_xy_1vc']} torus_ge_mesh={torus_ge_mesh} "
+          f"backends_equal={equal}")
+    _record("routing_summary", 0.0, torus_done=done["torus_xy_2vc"],
+            mesh_done=done["mesh_xy_1vc"], torus_ge_mesh=torus_ge_mesh,
+            vcless_torus_done=done["torus_xy_1vc"], backends_equal=equal)
+    assert torus_ge_mesh, (
+        f"escape-VC torus completed {done['torus_xy_2vc']} < mesh "
+        f"{done['mesh_xy_1vc']} at equal load")
+    return done
+
+
 def _count_eqns(jaxpr) -> int:
     """Total jaxpr equations, recursing into scan/jit sub-jaxprs — the
     trace-size metric the fusion work optimizes."""
@@ -538,6 +616,7 @@ def main() -> None:
     bench_rate_sweep(args.smoke)
     bench_backend_channels(args.smoke)
     bench_write_mix(args.smoke)
+    bench_routing(args.smoke)
     bench_engine_throughput(args.smoke)
     bench_straggler_sim(args.smoke)
     bench_train_step(args.smoke)

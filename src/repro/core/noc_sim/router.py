@@ -12,8 +12,16 @@ Faithful to §III-C / §V of the paper:
   ``repro.noc.topology``), so one step function covers the paper's XY
   mesh, the torus wrap-around variant, and >5-port express-link routers,
 * round-robin output arbitration with wormhole burst locking,
-* no virtual channels — each physical link (narrow_req / narrow_rsp / wide)
-  is its own complete network instance,
+* each physical link class (narrow_req / narrow_rsp / wide) is its own
+  complete network instance; *within* a network, virtual channels are
+  modelled by table expansion (see ``repro.noc.routing``): each
+  non-local physical port is unrolled into ``n_vcs`` virtual ports with
+  their own FIFO, output register, round-robin pointer and wormhole
+  lock, so the ordinary port-level arbitration below *is* VC-aware
+  arbitration.  The only genuinely new behaviour is drain
+  serialization (``n_vcs > 1``): one physical link still moves at most
+  one flit per cycle, so phase A picks a single ready VC per physical
+  port, highest VC index (the escape VC) first,
 * single-flit packets (header bits travel on parallel lines, no
   header/tail flits).
 
@@ -152,7 +160,7 @@ def feeder_tables(nbr: np.ndarray,
 
 
 def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
-                     arbiter=None):
+                     arbiter=None, n_vcs: int = 1):
     """Build the one-cycle update for a fabric described by static
     tables (see ``repro.noc.topology``): ``nbr[r, p]`` neighbor router
     per output port (-1 none, local port last), ``opp[r, p]`` the input
@@ -161,6 +169,15 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
     ``arbiter`` replaces the phase-B arbitration (same signature and
     semantics as :func:`arbiter_jnp`) — the hook the Pallas backend
     plugs into.
+
+    ``n_vcs > 1`` declares the tables VC-expanded (``repro.noc.routing``):
+    the ``P - 1`` non-local ports are ``(P - 1) / n_vcs`` physical links
+    x ``n_vcs`` virtual channels, port ``p = link * n_vcs + vc``.  The
+    update is identical except phase A drains at most one VC per
+    physical link per cycle, preferring the highest ready VC index — the
+    escape VC, so dateline traffic can always make progress.  With the
+    default ``n_vcs=1`` the built step is the exact original (the
+    serialization branch is not even traced).
 
     Returns ``step(state, inject_valid, inject_flit, depth) ->
     (new_state, inject_ok (R,), deliver_valid (R,), deliver_flit (R, F),
@@ -179,6 +196,21 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
                            + np.clip(src_o, 0, None), jnp.int32)  # (R, P)
     arb = arbiter_jnp if arbiter is None else arbiter
     r_idx = jnp.arange(R)
+    if (P - 1) % n_vcs:
+        raise ValueError(
+            f"{P - 1} non-local ports do not fold into {n_vcs} VCs")
+    n_phys = (P - 1) // n_vcs
+
+    def serialize_drain(ready):
+        """At most one drained VC per physical link: highest ready VC
+        index wins (escape-VC priority).  Identity when n_vcs == 1."""
+        if n_vcs == 1:
+            return ready
+        e = ready[:, :P - 1].reshape(R, n_phys, n_vcs)
+        rank = jnp.where(e, jnp.arange(n_vcs)[None, None, :], -1)
+        win = e & (rank == jnp.max(rank, axis=2, keepdims=True))
+        return jnp.concatenate(
+            [win.reshape(R, P - 1), ready[:, P - 1:]], axis=1)
 
     def step(state: NetState, inject_valid: jax.Array,
              inject_flit: jax.Array, depth: jax.Array):
@@ -191,7 +223,7 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
         can_drain = jnp.where(jnp.arange(P)[None, :] == PORT_L,
                               True,                     # Local: NI always sinks
                               (nbr_j >= 0) & (ds_count < depth))
-        drain = state.oreg_v & can_drain
+        drain = serialize_drain(state.oreg_v & can_drain)
 
         deliver_valid = drain[:, PORT_L]
         deliver_flit = state.oreg[:, PORT_L, :]

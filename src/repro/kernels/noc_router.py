@@ -152,7 +152,7 @@ def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
                   nfifo_ref, ncount_ref, nptr_ref, noreg_ref, noregv_ref,
                   nlock_ref, injok_ref, dv_ref, dflit_ref, lm_ref,
                   *, n_rows: int, n_ports: int, d_max: int, n_fields: int,
-                  f_dest: int, f_beat: int):
+                  f_dest: int, f_beat: int, n_vcs: int):
     N, P, D, F = n_rows, n_ports, d_max, n_fields
     fifo = fifo_ref[...].reshape(N, P, D, F)
     count = count_ref[...]                                 # (N, P)
@@ -172,6 +172,16 @@ def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
     ds_count = count.reshape(-1)[ds_idx]
     can_drain = jnp.where(is_local, True, (nbr >= 0) & (ds_count < depth))
     drain = oreg_v & can_drain
+    if n_vcs > 1:
+        # VC-expanded tables: one physical link moves one flit/cycle, so
+        # keep only the highest ready VC (escape VC first) per link
+        n_phys = (P - 1) // n_vcs
+        e = drain[:, :P - 1].reshape(N, n_phys, n_vcs)
+        v_ids = jax.lax.broadcasted_iota(jnp.int32, (N, n_phys, n_vcs), 2)
+        rank = jnp.where(e, v_ids, -1)
+        win = e & (rank == jnp.max(rank, axis=2, keepdims=True))
+        drain = jnp.concatenate(
+            [win.reshape(N, P - 1), drain[:, P - 1:]], axis=1)
 
     dv_ref[...] = drain[:, P - 1:].astype(jnp.int32)       # (N, 1)
     dflit_ref[...] = oreg[:, P - 1, :]
@@ -230,7 +240,8 @@ def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
 def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
                              inject_valid, inject_flit, depth_rows,
                              nbr_rows, opp_rows, route_rows, src_rows,
-                             *, interpret: bool | None = None):
+                             *, n_vcs: int = 1,
+                             interpret: bool | None = None):
     """One full fabric cycle for ``N`` stacked router rows (channels
     folded into rows by the caller; see ``repro.noc.backends``).
 
@@ -238,8 +249,11 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
     ``oreg (N, P, F)``, the rest ``(N, P)`` — and is flattened to the
     kernel's 2D ``(N, P*D*F)`` lane layout here.  The static tables are
     row-indexed: ``nbr_rows``/``src_rows`` hold *row* (not router)
-    indices, ``route_rows`` is ``(N, R)`` over per-network destinations.
-    ``depth_rows (N,)`` is the traced per-row FIFO depth.
+    indices, ``route_rows`` is ``(N, n_planes*R)`` over per-network (possibly
+    multi-plane virtual) destinations.  ``depth_rows (N,)`` is the
+    traced per-row FIFO depth.  Static ``n_vcs > 1`` declares the port
+    axis VC-expanded and enables the per-physical-link drain
+    serialization (escape VC first), matching the jnp engine.
 
     Returns ``(fifo, count, rr_ptr, oreg, oreg_v (int32), lock_in,
     inj_ok (N,) bool, deliver_valid (N,) bool, deliver_flit (N, F),
@@ -253,7 +267,7 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
 
     kernel = functools.partial(
         _fused_kernel, n_rows=N, n_ports=P, d_max=D, n_fields=F,
-        f_dest=F_DEST, f_beat=F_BEAT)
+        f_dest=F_DEST, f_beat=F_BEAT, n_vcs=n_vcs)
     out_shapes = [
         jax.ShapeDtypeStruct((N, P * D * F), jnp.int32),   # fifo
         jax.ShapeDtypeStruct((N, P), jnp.int32),           # count

@@ -15,7 +15,11 @@ Specs declare a first-class topology (``Mesh(nx, ny)``, ``Torus(nx,
 ny)``, ``Mesh(nx, ny, express=(2,))`` for >5-port express routers), a
 channel layout (any number of physical networks), and the full AXI4
 flow map — every class's AR/R/AW/W/B flows assigned to channels (the
-paper maps address/ack flows narrow, data bursts wide).  Workloads
+paper maps address/ack flows narrow, data bursts wide).  A
+``routing=RoutingPolicy(...)`` entry picks the routing algorithm and
+virtual-channel count (XY, O1TURN, Valiant; escape-VC dateline
+discipline makes the torus deadlock-free — see ``repro.noc.routing``).
+Workloads
 declare typed traffic patterns with per-class read/write mixes; sweeps
 vmap over rates/seeds/latency distributions in one jit
 (``simulate_batch``, ``sweep``).  The router hot loop is a pluggable,
@@ -31,6 +35,8 @@ from .engine import (FlowPlan, build_channel_plan,  # noqa: F401
                      build_flow_plan, compiled_sim, sim_cache_clear,
                      sim_cache_stats)
 from .result import ChannelStats, ClassStats, SimResult  # noqa: F401
+from .routing import RouteTables, RoutingPolicy  # noqa: F401
 from .spec import NocSpec, PhysicalChannel, TrafficClass  # noqa: F401
-from .topology import Mesh, Topology, Torus, hop_table  # noqa: F401
+from .topology import (Mesh, Topology, Torus, hop_table,  # noqa: F401
+                       validate_tables)
 from .workload import PATTERNS, Workload, register_pattern  # noqa: F401

@@ -31,6 +31,15 @@ The protocol:
   Returns ``(state, inj_ok (C, R), deliver_valid (C, R),
   deliver_flit (C, R, F), link_moves (C,))``.
 
+A backend factory takes ``(topology, routing=None)``: with a
+:class:`~repro.noc.routing.RoutingPolicy` the fabric runs on that
+policy's compiled VC/plane-expanded tables (each non-local physical
+port unrolled into ``n_vcs`` virtual ports, route tables widened to
+``n_planes`` virtual destination planes) and the same step machinery
+advances every VC; ``None`` keeps the topology's own base tables —
+bit-identical to the pre-VC engine, as is the default
+``RoutingPolicy.xy(n_vcs=1)``.
+
 Backends are **flow-agnostic**: they move int32 flits whose ``kind``
 field encodes the (class, AXI flow) pair — AR/R reads and AW/W/B
 writes look identical down here, only the NI model in ``engine.py``
@@ -65,11 +74,12 @@ class Network(NamedTuple):
     step: Callable                        # (state, iv, flit, depths) -> ...
 
 
-BACKENDS: dict[str, Callable[[Topology], Network]] = {}
+BACKENDS: dict[str, Callable[..., Network]] = {}
 
 
 def register_backend(name: str):
-    """Register ``fn(topology) -> Network`` under ``name``."""
+    """Register ``fn(topology, routing=None) -> Network`` under
+    ``name``."""
     def deco(fn):
         BACKENDS[name] = fn
         return fn
@@ -80,7 +90,17 @@ def list_backends() -> list[str]:
     return sorted(BACKENDS)
 
 
-def get_backend(name: str) -> Callable[[Topology], Network]:
+def _resolve_tables(topo: Topology, routing):
+    """``(nbr, opp, route, n_vcs)`` — the policy's compiled expanded
+    tables, or the topology's base tables when ``routing`` is None."""
+    if routing is None:
+        nbr, opp, route = topo.tables()
+        return nbr, opp, route, 1
+    rt = routing.compile(topo)
+    return rt.nbr, rt.opp, rt.route, rt.n_vcs
+
+
+def get_backend(name: str) -> Callable[..., Network]:
     try:
         return BACKENDS[name]
     except KeyError:
@@ -101,21 +121,21 @@ def _stacked_init(R: int, P: int) -> Callable[[int, int], NetState]:
     return init
 
 
-def _vmapped_network(topo: Topology, arbiter=None) -> Network:
-    nbr, opp, route = topo.tables()
+def _vmapped_network(topo: Topology, routing=None, arbiter=None) -> Network:
+    nbr, opp, route, n_vcs = _resolve_tables(topo, routing)
     R, P = nbr.shape
-    one = make_fabric_step(nbr, opp, route, arbiter=arbiter)
+    one = make_fabric_step(nbr, opp, route, arbiter=arbiter, n_vcs=n_vcs)
     return Network(init=_stacked_init(R, P),
                    step=jax.vmap(one, in_axes=(0, 0, 0, 0)))
 
 
 @register_backend("jnp")
-def _jnp_backend(topo: Topology) -> Network:
-    return _vmapped_network(topo)
+def _jnp_backend(topo: Topology, routing=None) -> Network:
+    return _vmapped_network(topo, routing)
 
 
 @register_backend("pallas")
-def _pallas_backend(topo: Topology) -> Network:
+def _pallas_backend(topo: Topology, routing=None) -> Network:
     from repro.kernels.noc_router import router_arbiter_pallas
 
     def arbiter(out_port, beat, rr_ptr, oreg_free, lock_in):
@@ -123,25 +143,27 @@ def _pallas_backend(topo: Topology) -> Network:
             out_port, beat, rr_ptr, oreg_free, lock_in)
         return winner, pop.astype(jnp.bool_), new_ptr, new_lock
 
-    return _vmapped_network(topo, arbiter=arbiter)
+    return _vmapped_network(topo, routing, arbiter=arbiter)
 
 
 @functools.lru_cache(maxsize=64)
-def _fused_tables(topo: Topology, n_ch: int):
+def _fused_tables(topo: Topology, routing, n_ch: int):
     """Row-folded static tables for the fused kernel: channel ``c``'s
     router ``r`` becomes row ``c*R + r``; neighbor/feeder indices are
     offset into the row space so one kernel advances every channel.
+    ``routing`` (a hashable policy or None) selects the VC/plane-
+    expanded table set — the fold is oblivious to which.
     Returned as *numpy* — this cache is often first populated inside a
     jit trace, and caching jnp constants would leak tracers into later
     traces."""
-    nbr, opp, route = topo.tables()
+    nbr, opp, route, _ = _resolve_tables(topo, routing)
     src_r, src_o = feeder_tables(nbr, opp)
     R, P = nbr.shape
     offs = (np.arange(n_ch) * R)[:, None, None]             # (C, 1, 1)
     nbr_rows = np.where(nbr[None] >= 0, nbr[None] + offs,
                         -1).reshape(n_ch * R, P)
     opp_rows = np.tile(opp, (n_ch, 1))
-    route_rows = np.tile(route, (n_ch, 1))                  # (C*R, R)
+    route_rows = np.tile(route, (n_ch, 1))                  # (C*R, K*R)
     src_rows = np.where(
         src_r[None] >= 0,
         (src_r[None] + offs) * P + src_o[None], -1).reshape(n_ch * R, P)
@@ -150,17 +172,17 @@ def _fused_tables(topo: Topology, n_ch: int):
 
 
 @register_backend("pallas_fused")
-def _pallas_fused_backend(topo: Topology) -> Network:
+def _pallas_fused_backend(topo: Topology, routing=None) -> Network:
     from repro.kernels.noc_router import fused_fabric_step_pallas
 
-    nbr, _, _ = topo.tables()
+    nbr, _, _, n_vcs = _resolve_tables(topo, routing)
     R, P = nbr.shape
 
     def step(state: NetState, inject_valid, inject_flit, depths):
         C = state.count.shape[0]
         D, F = state.fifo.shape[3], state.fifo.shape[4]
         N = C * R
-        tables = _fused_tables(topo, C)
+        tables = _fused_tables(topo, routing, C)
         depth_rows = jnp.repeat(depths.astype(jnp.int32), R)
         (fifo, count, rr_ptr, oreg, oreg_v, lock_in, inj_ok, dv, dflit,
          lm_rows) = fused_fabric_step_pallas(
@@ -171,7 +193,7 @@ def _pallas_fused_backend(topo: Topology) -> Network:
             state.oreg_v.reshape(N, P),
             state.lock_in.reshape(N, P),
             inject_valid.reshape(N), inject_flit.reshape(N, F),
-            depth_rows, *tables)
+            depth_rows, *tables, n_vcs=n_vcs)
         new_state = NetState(
             fifo=fifo.reshape(C, R, P, D, F),
             count=count.reshape(C, R, P),

@@ -57,8 +57,21 @@ bounded by the write ROB credit, so it never pays the response-ring
 capacity), and FIFO depth as a traced operand (padded-depth sweeps
 share one compilation).  The engine also watches liveness: ``max_stall_cycles``
 (longest streak with transactions in flight but zero fabric activity)
-and ``drained`` (every scheduled transaction completed) surface the
-VC-less deadlock risk documented in ROADMAP.md.
+and ``drained`` (every scheduled transaction completed) make deadlock
+observable, and per-VC FIFO occupancy (sum + peak per channel) shows
+*where* flits sit when the spec's
+:class:`~repro.noc.routing.RoutingPolicy` runs multiple virtual
+channels — a wedged single-VC torus pins VC0 full while the escape VC
+of a ``n_vcs>=2`` dateline policy keeps draining.
+
+The routing policy is threaded through statically: the backend gets
+``(spec.topology, spec.routing)`` and runs on the policy's compiled
+VC/plane-expanded tables; for multi-plane policies (O1TURN, Valiant)
+the NI picks each transaction's plane with a deterministic hash of
+(source, destination, txn id) folded into the flit's *virtual*
+destination ``plane * R + dest``, so every beat of a burst — and every
+retransmission of the same txn — takes the same path while different
+transactions spread across planes.
 
 Static structure (topology, channel list, max FIFO depth, class->
 channel flow map, horizon) keys one jitted simulator per backend in a
@@ -307,6 +320,8 @@ class SimState(NamedTuple):
     moves: jax.Array        # (n_ch,) link traversals per channel
     cur_stall: jax.Array    # scalar: current zero-activity streak
     max_stall: jax.Array    # scalar: longest such streak
+    vc_occ_sum: jax.Array   # (n_ch, n_vcs) summed per-VC FIFO occupancy
+    vc_occ_max: jax.Array   # (n_ch, n_vcs) peak per-VC FIFO occupancy
 
 
 def init_ni(R: int, plan: FlowPlan, cap: int) -> NIState:
@@ -334,6 +349,8 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
     cap = spec.resp_q_cap
     w_cap = plan.w_cap
     pa = _plan_arrays(spec, plan)
+    n_planes = spec.routing.n_planes
+    n_vcs = spec.routing.n_vcs
     rows = jnp.arange(R)
     rq_ids = jnp.arange(plan.n_rq)
     wq_ids = jnp.arange(plan.n_cls)
@@ -514,6 +531,14 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
                             wq, s, dest, kind, txn, time, beat)
                     valid = valid | taken_in
             iv_cols.append(valid)
+            if n_planes > 1:
+                # multi-plane policy: deterministic per-(src, dest, txn)
+                # plane choice, folded into the *virtual* destination
+                # plane*R + dest.  Every beat of a burst (constant
+                # dest/txn at its ring head) hashes to the same plane,
+                # so wormhole trains never straddle paths.
+                plane = (rows * 7 + dest * 13 + txn * 31) % n_planes
+                dest = plane * R + dest
             flit = jnp.stack([dest, rows, time, kind, txn, beat], axis=1)
             flit_cols.append(jnp.where(valid[:, None], flit, 0))
 
@@ -522,6 +547,13 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         iflit = jnp.stack(flit_cols)                   # (n_ch, R, F)
         net, ok_ch, dv_ch, df_ch, lm = net_step(
             state.net, iv, iflit, dyn["depths"])
+
+        # per-VC input-FIFO occupancy (non-local ports; virtual port
+        # q = link * n_vcs + vc under the routing policy's table fold)
+        occ = jnp.sum(net.count[:, :, :-1].reshape(
+            net.count.shape[0], R, -1, n_vcs), axis=(1, 2))   # (n_ch, V)
+        vc_occ_sum = state.vc_occ_sum + occ
+        vc_occ_max = jnp.maximum(state.vc_occ_max, occ)
 
         # ---- pointer / ROB / ring-head updates --------------------------
         inj_ar = jnp.stack(
@@ -656,7 +688,8 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         cur = jnp.where(pending & ~activity, state.cur_stall + 1, 0)
         new_moves = state.moves + lm.astype(jnp.int32)
         return SimState(net, ni, now + 1, new_moves, cur,
-                        jnp.maximum(state.max_stall, cur)), None
+                        jnp.maximum(state.max_stall, cur),
+                        vc_occ_sum, vc_occ_max), None
 
     return step
 
@@ -754,9 +787,10 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
 
 def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
     plan = build_flow_plan(spec)
-    network = get_backend(backend)(spec.topology)
+    network = get_backend(backend)(spec.topology, spec.routing)
     step = make_step(spec, plan, T, network.step)
     n_ch, R = plan.n_ch, spec.n_routers
+    n_vcs = spec.routing.n_vcs
 
     # donating the big schedule operands lets XLA alias them into the
     # scan carry's workspace; CPU can't donate (it would only warn)
@@ -768,7 +802,9 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
         state = SimState(network.init(n_ch, d_max),
                          init_ni(R, plan, spec.resp_q_cap), jnp.int32(0),
                          jnp.zeros((n_ch,), jnp.int32), jnp.int32(0),
-                         jnp.int32(0))
+                         jnp.int32(0),
+                         jnp.zeros((n_ch, n_vcs), jnp.int32),
+                         jnp.zeros((n_ch, n_vcs), jnp.int32))
         times = jnp.moveaxis(times, 0, 1)              # (R, n_cls, T)
         dyn = {"times": times,
                "dests": jnp.moveaxis(dests, 0, 1),
@@ -791,6 +827,8 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
             "w_first_t": ni.w_first_t, "w_last_t": ni.w_last_t,
             "link_moves": final.moves,
             "max_stall_cycles": final.max_stall, "drained": drained,
+            "vc_occ_sum": final.vc_occ_sum,
+            "vc_occ_max": final.vc_occ_max,
         }
 
     return run

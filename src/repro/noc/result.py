@@ -5,8 +5,12 @@ reshaping raw keys differently) with one typed :class:`SimResult`:
 per-class *per-direction* latency/bandwidth stats (reads AR -> R,
 writes AW -> W -> B), per-channel link activity + energy (paper Fig. 6
 pJ/B/hop model — B acks traverse their mapped channel, so write-ack
-energy shows up in that channel's ledger), and fabric liveness
-(``max_stall_cycles`` / ``drained``) for the VC-less deadlock studies.
+energy shows up in that channel's ledger), per-channel *per-virtual-
+channel* FIFO occupancy (mean + peak, shaped by the spec's
+:class:`~repro.noc.routing.RoutingPolicy` ``n_vcs``) so escape-VC
+deadlock freedom is observable rather than asserted, and fabric
+liveness (``max_stall_cycles`` / ``drained``) for the deadlock
+studies.
 
 All arrays keep whatever leading batch dimensions the engine produced,
 so a vmapped sweep returns ONE ``SimResult`` whose stats have a leading
@@ -46,9 +50,14 @@ class ClassStats:
 
 @dataclass(frozen=True)
 class ChannelStats:
-    """Per-physical-channel metrics; arrays are (*batch,)."""
+    """Per-physical-channel metrics; scalar-like arrays are (*batch,),
+    VC-resolved arrays (*batch, n_vcs) — one column per virtual channel
+    of the spec's routing policy (a single column under the default
+    single-VC policy, where it equals total FIFO occupancy)."""
     link_moves: np.ndarray    # link traversals over the run
     energy_pj: np.ndarray     # Fig. 6 model: moves * width_bytes * pJ/B/hop
+    vc_occupancy: np.ndarray       # mean flits resident per VC per cycle
+    vc_peak_occupancy: np.ndarray  # peak flits resident per VC
 
 
 @dataclass(frozen=True)
@@ -59,9 +68,11 @@ class SimResult:
     channels: Mapping[str, ChannelStats]
     # liveness: longest streak of cycles with transactions in flight but
     # ZERO fabric activity (no injection, delivery, or link move), and
-    # whether every scheduled transaction completed.  A VC-less torus
-    # under saturating wormhole bursts can wedge (ROADMAP): that shows
-    # up as drained=False with max_stall_cycles ~ the remaining horizon.
+    # whether every scheduled transaction completed.  A single-VC torus
+    # under saturating wormhole bursts can wedge: that shows up as
+    # drained=False with max_stall_cycles ~ the remaining horizon (and
+    # VC0 occupancy pinned at its peak), while an escape-VC routing
+    # policy (``RoutingPolicy.xy(n_vcs=2)``) keeps it draining.
     max_stall_cycles: np.ndarray = np.int32(0)   # (*batch,)
     drained: np.ndarray = np.bool_(True)         # (*batch,)
 
@@ -92,12 +103,16 @@ class SimResult:
                                                 g["w_last_t"]),
             )
         moves = np.asarray(raw["link_moves"])
+        occ_sum = np.asarray(raw["vc_occ_sum"])       # (*batch, n_ch, V)
+        occ_max = np.asarray(raw["vc_occ_max"])
         channels = {}
         for c, ch in enumerate(spec.channels):
             m = moves[..., c]
             channels[ch.name] = ChannelStats(
                 link_moves=m,
                 energy_pj=m * (ch.width_bits / 8.0) * PAPER.pj_per_byte_hop,
+                vc_occupancy=occ_sum[..., c, :] / float(spec.cycles),
+                vc_peak_occupancy=occ_max[..., c, :],
             )
         return cls(spec=spec, cycles=spec.cycles, classes=classes,
                    channels=channels,
@@ -117,8 +132,9 @@ class SimResult:
         classes = {k: ClassStats(**{f: getattr(v, f)[i]
                                     for f in ClassStats.__dataclass_fields__})
                    for k, v in self.classes.items()}
-        channels = {k: ChannelStats(link_moves=v.link_moves[i],
-                                    energy_pj=v.energy_pj[i])
+        channels = {k: ChannelStats(
+            **{f: getattr(v, f)[i]
+               for f in ChannelStats.__dataclass_fields__})
                     for k, v in self.channels.items()}
         return SimResult(self.spec, self.cycles, classes, channels,
                          max_stall_cycles=np.asarray(
@@ -157,6 +173,9 @@ class SimResult:
                                                    st.w_done > 0)
             out[f"{name}_w_max_lat"] = np.max(st.w_max_lat, axis=-1)
             out[f"{name}_w_peak_eff_bw"] = np.max(st.w_eff_bw, axis=-1)
+        for name, chs in self.channels.items():
+            out[f"{name}_vc_occupancy"] = chs.vc_occupancy
+            out[f"{name}_vc_peak_occupancy"] = chs.vc_peak_occupancy
         out["total_link_moves"] = self.total_link_moves
         out["total_energy_pj"] = self.total_energy_pj
         out["max_stall_cycles"] = self.max_stall_cycles

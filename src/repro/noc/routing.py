@@ -1,0 +1,348 @@
+"""Virtual channels + pluggable routing algorithms for deadlock-free
+cyclic fabrics.
+
+A frozen :class:`RoutingPolicy` — routing algorithm x VC count x VC
+assignment rule — compiles, per :class:`~repro.noc.topology.Topology`,
+into the same kind of static tables the table-driven fabric already
+consumes (:func:`repro.core.noc_sim.router.make_fabric_step`), so every
+backend (``jnp`` / ``pallas`` / ``pallas_fused``) gets virtual channels
+and adaptive routing without new per-cycle machinery.  Two reductions
+make that work:
+
+**Virtual channels are folded into the port axis.**  A router with
+``P`` physical ports and ``V`` VCs becomes a router with
+``P' = (P-1)*V + 1`` *virtual* ports: non-local port ``p`` expands to
+``V`` slots ``p*V + v`` — each its own input FIFO, output register,
+round-robin pointer, and wormhole lock (the per-VC locks the AXI
+preemptive-VC scheme needs) — while the local/NI port keeps one slot
+so injection and delivery are untouched.  The existing output
+arbitration over virtual inputs *is* VC-aware arbitration: it
+round-robins across the ready VCs of every input port and grants into
+per-(port, VC) output registers.  The only genuinely new fabric
+behavior is **link serialization**: one physical link still moves one
+flit per cycle, so the drain phase picks a single ready (port, VC)
+output register per link, escape-VC (highest index) first — see
+``make_fabric_step(n_vcs=...)``.
+
+**Route + VC selection are a wider static table.**  Multi-path
+algorithms emit ``n_planes`` candidate route tables; the flit's dest
+field carries a *virtual destination* ``plane*R + dest`` and the
+expanded route table ``(R, n_planes*R)`` maps it to a virtual output
+port — physical port *and* next-hop VC in one lookup.  The plane is
+chosen deterministically per (src, dst, txn) at the NI (all beats of a
+burst share it), so paths spread across planes without breaking
+wormhole atomicity.
+
+Provided algorithms (deadlock-freedom by VC partitioning — each plane
+owns a VC range whose channel-dependency graph is acyclic):
+
+* ``"xy"``     — the topology's own deterministic route table (1
+  plane).  On a torus, ``n_vcs >= 2`` enables the **dateline / escape
+  VC** discipline: a flit rides VC0 while the wrap link of its current
+  ring still lies ahead and flips into the escape VC when it crosses
+  (or never needed) the wrap — the classic proof that minimal-wrap
+  dimension-ordered torus routing is deadlock-free.  ``n_vcs=1``
+  reproduces today's VC-less fabric bit-for-bit (and on a torus keeps
+  its documented wedge).
+* ``"o1turn"`` — two planes, XY and YX dimension order, near-optimal
+  worst-case throughput on meshes.  Needs one VC per plane (2 on a
+  mesh; 4 on a torus, where each plane also needs its dateline bit).
+* ``"valiant"`` — ``n_valiant`` planes of two-phase detour routing
+  (X to a per-plane waypoint column, Y to the destination row, X to
+  the destination): phase 1+2 is plain XY routing to a waypoint and
+  rides the plane's VC0, the final X leg rides VC1, so each plane
+  needs 2 VCs.  Mesh only.
+
+Every compiled table set passes the same structural validation as the
+base topologies (:func:`repro.noc.topology.validate_tables`:
+termination, duplex links, local-port-last).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+
+from .topology import Mesh, Topology, Torus, validate_tables
+
+__all__ = ["RoutingPolicy", "RouteTables"]
+
+# direction order of the stride-1 port group (matches topology._DIRS)
+_N, _E, _S, _W = 0, 1, 2, 3
+
+
+class RouteTables(NamedTuple):
+    """Compiled fabric tables for one (policy, topology) pair.
+
+    ``nbr``/``opp`` are in *virtual-port* space (``(R, P')`` with
+    ``P' = (P-1)*n_vcs + 1``); ``route`` is ``(R, n_planes*R)`` over
+    virtual destinations ``plane*R + dest`` and yields virtual output
+    ports (physical port and next-hop VC in one lookup).  ``vc_of_hop``
+    keeps the per-plane VC assignment ``(n_planes, R, R)`` for
+    introspection and tests.  All arrays are read-only numpy (cached
+    and shared across simulators).
+    """
+    nbr: np.ndarray
+    opp: np.ndarray
+    route: np.ndarray
+    vc_of_hop: np.ndarray
+    n_vcs: int
+    n_planes: int
+    n_base_ports: int
+
+
+@dataclass(frozen=True)
+class RoutingPolicy:
+    """Frozen routing-algorithm x VC configuration of a NocSpec.
+
+    ``algorithm`` is one of ``"xy"`` / ``"o1turn"`` / ``"valiant"``;
+    ``n_vcs`` the virtual-channel count per physical link;
+    ``n_valiant`` the number of detour planes for ``"valiant"``.
+    Hashable — it lives inside a :class:`~repro.noc.spec.NocSpec` and
+    keys the cached jitted simulator like every other static field.
+    """
+    algorithm: str = "xy"
+    n_vcs: int = 1
+    n_valiant: int = 2
+
+    def __post_init__(self):
+        if self.algorithm not in ("xy", "o1turn", "valiant"):
+            raise ValueError(
+                f"unknown routing algorithm {self.algorithm!r}; "
+                f"have ('xy', 'o1turn', 'valiant')")
+        if not isinstance(self.n_vcs, int) or isinstance(self.n_vcs, bool) \
+                or self.n_vcs < 1:
+            raise ValueError(f"n_vcs must be an int >= 1, got {self.n_vcs!r}")
+        if self.algorithm == "valiant" and self.n_valiant < 1:
+            raise ValueError(
+                f"valiant needs n_valiant >= 1 planes, got {self.n_valiant}")
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def xy(cls, n_vcs: int = 1) -> "RoutingPolicy":
+        """The topology's own deterministic routing; ``n_vcs >= 2`` adds
+        the dateline/escape-VC discipline on cyclic fabrics."""
+        return cls("xy", n_vcs)
+
+    @classmethod
+    def o1turn(cls, n_vcs: int = 2) -> "RoutingPolicy":
+        return cls("o1turn", n_vcs)
+
+    @classmethod
+    def valiant(cls, n_vcs: int = 4, n_valiant: int = 2) -> "RoutingPolicy":
+        return cls("valiant", n_vcs, n_valiant)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_planes(self) -> int:
+        return {"xy": 1, "o1turn": 2,
+                "valiant": self.n_valiant}[self.algorithm]
+
+    def vcs_per_plane(self, topology: Topology) -> int:
+        """VCs one plane needs for its deadlock-freedom argument: 2
+        where the plane's own channel graph has a cycle hazard (torus
+        rings -> dateline bit; valiant's second X leg -> phase bit)."""
+        return 2 if (isinstance(topology, Torus)
+                     or self.algorithm == "valiant") else 1
+
+    def required_vcs(self, topology: Topology) -> int:
+        """VC count below which the policy's deadlock-freedom claim
+        does not hold on ``topology``."""
+        return self.n_planes * self.vcs_per_plane(topology)
+
+    def is_deadlock_free(self, topology: Topology) -> bool:
+        """Whether this (policy, topology) pair carries the escape-VC /
+        plane-partition deadlock-freedom guarantee.  ``xy`` on a mesh is
+        free by the turn model alone; on a torus it needs the dateline
+        VCs; multi-plane algorithms always validate their VC budget."""
+        if self.algorithm == "xy" and not isinstance(topology, Torus):
+            return True
+        return self.n_vcs >= self.required_vcs(topology)
+
+    def validate_for(self, topology: Topology) -> None:
+        """Raise early for (policy, topology) pairs that cannot compile
+        (called from NocSpec validation; cheap — no table build)."""
+        if self.algorithm != "xy":
+            if getattr(topology, "express", ()):
+                raise ValueError(
+                    f"{self.algorithm!r} routing supports plain Mesh/"
+                    f"Torus only, not express topologies ({topology!r})")
+            if self.algorithm == "valiant" and isinstance(topology, Torus):
+                raise ValueError(
+                    "valiant routing is mesh-only (torus would need a "
+                    "dateline bit per detour leg)")
+            if self.n_vcs < self.required_vcs(topology):
+                raise ValueError(
+                    f"{self.algorithm!r} on {topology!r} needs n_vcs >= "
+                    f"{self.required_vcs(topology)} for deadlock "
+                    f"freedom, got {self.n_vcs}")
+        n_ports = (topology.n_ports - 1) * self.n_vcs + 1
+        if n_ports >= 99:
+            raise ValueError(
+                f"n_vcs={self.n_vcs} expands {topology!r} to {n_ports} "
+                f"virtual ports, colliding with the NO-ROUTE sentinel (99)")
+
+    def compile(self, topology: Topology) -> RouteTables:
+        """Static tables for this policy on ``topology`` (cached)."""
+        self.validate_for(topology)
+        return _compile(self, topology)
+
+
+# --------------------------------------------------------------------- #
+# per-plane route construction (plain 5-port mesh/torus coordinates)
+# --------------------------------------------------------------------- #
+def _wrap_delta(a: np.ndarray, b: np.ndarray, size: int) -> np.ndarray:
+    """Signed minimal wrap distance a -> b on a ring (ties positive)."""
+    d = (b - a) % size
+    return np.where(d <= size - d, d, d - size)
+
+
+def _dim_port(delta: np.ndarray, axis: str) -> np.ndarray:
+    """Port for one signed step along ``axis`` (x: E/W, y: S/N)."""
+    if axis == "x":
+        return np.where(delta > 0, _E, _W)
+    return np.where(delta > 0, _S, _N)
+
+
+def _coords(R: int, nx: int):
+    r = np.arange(R)
+    return r % nx, r // nx
+
+
+def _dor_route(topo: Topology, order: str) -> np.ndarray:
+    """Dimension-ordered route table (R, R) for a plain mesh/torus:
+    ``order="xy"`` resolves X first, ``"yx"`` Y first.  Wrap deltas on
+    the torus, plain deltas on the mesh."""
+    nx, ny, R, P = topo.nx, topo.ny, topo.n_routers, topo.n_ports
+    x, y = _coords(R, nx)
+    dx_, dy_ = _coords(R, nx)
+    if isinstance(topo, Torus):
+        ddx = _wrap_delta(x[:, None], dx_[None, :], nx)
+        ddy = _wrap_delta(y[:, None], dy_[None, :], ny)
+    else:
+        ddx = dx_[None, :] - x[:, None]
+        ddy = dy_[None, :] - y[:, None]
+    px, py = _dim_port(ddx, "x"), _dim_port(ddy, "y")
+    if order == "xy":
+        route = np.where(ddx != 0, px, np.where(ddy != 0, py, P - 1))
+    else:
+        route = np.where(ddy != 0, py, np.where(ddx != 0, px, P - 1))
+    return route.astype(np.int64)
+
+
+def _valiant_route(topo: Mesh, k: int) -> np.ndarray:
+    """Plane ``k`` of valiant-style detour routing on a mesh: X to the
+    waypoint column ``c_k(dest)``, Y to the destination row, X to the
+    destination column.  Functional in (router, dest), so it fits the
+    table-driven fabric; the waypoint varies per plane and per dest so
+    txn-spread traffic covers ``n_valiant`` distinct paths."""
+    nx, ny, R, P = topo.nx, topo.ny, topo.n_routers, topo.n_ports
+    x, y = _coords(R, nx)
+    dx_, dy_ = _coords(R, nx)
+    c = (dx_ + 1 + k) % nx                               # waypoint col per dest
+    ddx = dx_[None, :] - x[:, None]
+    ddy = dy_[None, :] - y[:, None]
+    ddc = c[None, :] - x[:, None]
+    at_row = ddy == 0
+    # final X leg once on the destination row; else X to waypoint, then Y
+    route = np.where(
+        at_row, np.where(ddx != 0, _dim_port(ddx, "x"), P - 1),
+        np.where(ddc != 0, _dim_port(ddc, "x"), _dim_port(ddy, "y")))
+    return route.astype(np.int64)
+
+
+def _dateline_bits(topo: Torus, route: np.ndarray) -> np.ndarray:
+    """Per-(router, dest) dateline bit for one torus route plane: 0
+    while the current ring's wrap link still lies ahead of the next
+    hop, 1 (the escape VC) once the flit has crossed it — or never
+    needed it.  Wrap links therefore always *deliver into* the escape
+    VC, splitting each ring's channel-dependency cycle into two acyclic
+    runs."""
+    nx, ny, R = topo.nx, topo.ny, topo.n_routers
+    x, y = _coords(R, nx)
+    dx_, dy_ = _coords(R, nx)
+    x2 = {_E: (x + 1) % nx, _W: (x - 1) % nx}
+    y2 = {_N: (y - 1) % ny, _S: (y + 1) % ny}
+    wrap_ahead = np.zeros_like(route, dtype=bool)
+    for p, ahead in (
+            (_E, x2[_E][:, None] > dx_[None, :]),
+            (_W, x2[_W][:, None] < dx_[None, :]),
+            (_S, y2[_S][:, None] > dy_[None, :]),
+            (_N, y2[_N][:, None] < dy_[None, :])):
+        wrap_ahead |= (route == p) & ahead
+    return np.where(wrap_ahead, 0, 1).astype(np.int64)
+
+
+def _plane_tables(policy: RoutingPolicy,
+                  topo: Topology) -> tuple[list[np.ndarray],
+                                           list[np.ndarray]]:
+    """(route planes, per-plane VC bits), each (R, R)."""
+    base_route = topo.tables()[2]
+    zeros = np.zeros_like(base_route)
+    if policy.algorithm == "xy":
+        planes = [np.asarray(base_route, np.int64)]
+        bits = [_dateline_bits(topo, planes[0])
+                if isinstance(topo, Torus) and policy.n_vcs >= 2 else zeros]
+    elif policy.algorithm == "o1turn":
+        planes = [np.asarray(base_route, np.int64),
+                  _dor_route(topo, "yx")]
+        bits = ([_dateline_bits(topo, p) for p in planes]
+                if isinstance(topo, Torus) else [zeros, zeros])
+    else:                                                # valiant (mesh)
+        planes = [_valiant_route(topo, k)
+                  for k in range(policy.n_valiant)]
+        # phase bit: the final X leg (already on the destination row)
+        # rides each plane's second VC — the plane-private escape lane
+        _, y = _coords(topo.n_routers, topo.nx)
+        _, dy_ = _coords(topo.n_routers, topo.nx)
+        phase = (y[:, None] == dy_[None, :]).astype(np.int64)
+        bits = [phase for _ in planes]
+    return planes, bits
+
+
+# --------------------------------------------------------------------- #
+# VC expansion: fold the VC axis into the port axis
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=64)
+def _compile(policy: RoutingPolicy, topo: Topology) -> RouteTables:
+    nbr, opp, _ = topo.tables()
+    R, P = nbr.shape
+    V, K = policy.n_vcs, policy.n_planes
+    v_pp = policy.vcs_per_plane(topo)
+    planes, bits = _plane_tables(policy, topo)
+
+    # per-plane VC of each hop, clamped into the declared VC budget
+    # (only reachable for xy, where fewer VCs is allowed — documented
+    # as forfeiting the torus deadlock-freedom guarantee)
+    vc_of_hop = np.stack([np.minimum(k * v_pp + b, V - 1)
+                          for k, b in enumerate(bits)])  # (K, R, R)
+    dest_ids = np.arange(R)
+    for k in range(K):                                   # no VC on delivery
+        vc_of_hop[k, dest_ids, dest_ids] = 0
+
+    # virtual ports: non-local port p -> slots p*V + v, local port last
+    Pv = (P - 1) * V + 1
+    nbr_v = np.full((R, Pv), -1, np.int64)
+    opp_v = np.full((R, Pv), Pv - 1, np.int64)
+    for p in range(P - 1):
+        for v in range(V):
+            q = p * V + v
+            nbr_v[:, q] = nbr[:, p]
+            opp_v[:, q] = np.where(nbr[:, p] >= 0, opp[:, p] * V + v, Pv - 1)
+
+    route_v = np.full((R, K * R), Pv - 1, np.int64)
+    off_diag = dest_ids[:, None] != dest_ids[None, :]    # (R, R)
+    for k in range(K):
+        virt = planes[k] * V + vc_of_hop[k]              # (R, R)
+        block = route_v[:, k * R:(k + 1) * R]
+        block[off_diag] = virt[off_diag]
+
+    validate_tables(nbr_v, opp_v, route_v)
+    vc_of_hop.setflags(write=False)
+    for a in (nbr_v, opp_v, route_v):
+        a.setflags(write=False)
+    return RouteTables(nbr=nbr_v, opp=opp_v, route=route_v,
+                       vc_of_hop=vc_of_hop, n_vcs=V, n_planes=K,
+                       n_base_ports=P)

@@ -2,10 +2,13 @@
 
 A :class:`NocSpec` declares *what the network is* — a first-class
 :class:`~repro.noc.topology.Topology` (XY mesh, torus, express-link
-mesh), an arbitrary list of physical channels (each its own complete
-network instance of that topology, per the paper's no-VC design), the
-traffic classes riding on them, and a ``class_map`` assigning every
-AXI4 flow to a channel.  Each class decomposes into the five AXI
+mesh), a :class:`~repro.noc.routing.RoutingPolicy` (routing algorithm
+x virtual-channel count; the default ``RoutingPolicy.xy(n_vcs=1)`` is
+the paper's plain VC-less XY configuration, bit-identical to the
+pre-VC engine), an arbitrary list of physical channels (each its own
+complete network instance of that topology), the traffic classes
+riding on them, and a ``class_map`` assigning every AXI4 flow to a
+channel.  Each class decomposes into the five AXI
 channels (:data:`repro.core.flit.AXI_FLOWS`): reads are
 ``"<class>.ar"`` -> ``"<class>.r"``, writes are ``"<class>.aw"`` ->
 ``"<class>.w"`` -> ``"<class>.b"``.  The paper's mapping puts the
@@ -35,6 +38,7 @@ from dataclasses import dataclass, replace
 from typing import Mapping, Sequence
 
 from repro.core.flit import AXI_FLOWS
+from .routing import RoutingPolicy
 from .topology import Mesh, Topology, Torus  # noqa: F401  (re-exported)
 
 
@@ -66,7 +70,9 @@ class TrafficClass:
 
 @dataclass(frozen=True)
 class PhysicalChannel:
-    """One physical network instance (complete router mesh, no VCs)."""
+    """One physical network instance (a complete router mesh; the
+    spec-level :class:`~repro.noc.routing.RoutingPolicy` decides how
+    many virtual channels each of its links carries)."""
     name: str
     depth: int = 2                 # input FIFO depth per router port
     width_bits: int = 603          # link width incl. header lines (accounting)
@@ -92,6 +98,11 @@ class NocSpec:
     ``topology`` is a first-class value (:class:`Mesh`, :class:`Torus`,
     or ``Mesh(..., express=...)`` for >5-port express-link routers) —
     every physical channel is one complete network instance of it.
+    ``routing`` selects the routing algorithm and virtual-channel count
+    every channel runs (:class:`~repro.noc.routing.RoutingPolicy`); the
+    default single-VC XY policy reproduces the pre-VC engine
+    bit-for-bit, while e.g. ``RoutingPolicy.xy(n_vcs=2)`` enables the
+    dateline/escape-VC discipline that makes the torus deadlock-free.
     """
     topology: Topology = Mesh(4, 4)
     classes: tuple[TrafficClass, ...] = (
@@ -126,6 +137,9 @@ class NocSpec:
     # runtime).  The per-class W rings are sized separately from the
     # classes' declared max_outstanding.
     resp_q_cap: int = 256
+    # routing algorithm x VC count (last field: keeps older positional
+    # constructions valid).  Validated against the topology below.
+    routing: RoutingPolicy = RoutingPolicy()
 
     def __post_init__(self):
         if not isinstance(self.resp_q_cap, int) or isinstance(
@@ -137,6 +151,10 @@ class NocSpec:
             raise TypeError(
                 f"topology must be a hashable Topology (Mesh/Torus) with "
                 f"static tables(), got {self.topology!r}")
+        if not isinstance(self.routing, RoutingPolicy):
+            raise TypeError(
+                f"routing must be a RoutingPolicy, got {self.routing!r}")
+        self.routing.validate_for(self.topology)
         if isinstance(self.classes, Sequence) and not isinstance(
                 self.classes, tuple):
             object.__setattr__(self, "classes", tuple(self.classes))
@@ -276,14 +294,17 @@ class NocSpec:
                     burstlen: int = 16, service_lat: int = 10,
                     cycles: int = 4000, max_narrow_outstanding: int = 8,
                     max_wide_outstanding: int = 8,
-                    resp_q_cap: int = 256) -> "NocSpec":
+                    resp_q_cap: int = 256,
+                    routing: RoutingPolicy | None = None) -> "NocSpec":
         """Paper §III-B: three independent physical networks, with the
         AXI flows mapped per the paper — single-flit address/ack flows
         (AR, AW, B) plus the narrow class's data on the narrow req/rsp
         pair, wide W/R data bursts on the wide channel.
 
         ``topology`` overrides the default XY mesh (e.g. ``Torus(nx,
-        ny)`` or ``Mesh(nx, ny, express=(2,))``)."""
+        ny)`` or ``Mesh(nx, ny, express=(2,))``); ``routing``
+        overrides the default single-VC XY policy (e.g.
+        ``RoutingPolicy.xy(n_vcs=2)`` for a deadlock-free torus)."""
         return cls(
             topology=_resolve_topology(nx, ny, topology),
             classes=(
@@ -302,7 +323,8 @@ class NocSpec:
                 ("wide.ar", "req"), ("wide.aw", "req"),
                 ("wide.b", "rsp"),
                 ("wide.w", "wide"), ("wide.r", "wide")),
-            service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap)
+            service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap,
+            routing=RoutingPolicy() if routing is None else routing)
 
     @classmethod
     def wide_only(cls, nx: int = 4, ny: int = 4, *,
@@ -310,7 +332,8 @@ class NocSpec:
                   burstlen: int = 16, service_lat: int = 10,
                   cycles: int = 4000, max_narrow_outstanding: int = 8,
                   max_wide_outstanding: int = 8,
-                  resp_q_cap: int = 256) -> "NocSpec":
+                  resp_q_cap: int = 256,
+                  routing: RoutingPolicy | None = None) -> "NocSpec":
         """Fig. 5 ablation: ONE network carries all five flows of every
         class; narrow flits burn full wide-link cycles and bursts hold
         links end-to-end."""
@@ -324,14 +347,16 @@ class NocSpec:
             class_map=tuple((f"{c}.{f}", "wide")
                             for c in ("narrow", "wide")
                             for f in AXI_FLOWS),
-            service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap)
+            service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap,
+            routing=RoutingPolicy() if routing is None else routing)
 
     @classmethod
     def multi_stream(cls, nx: int = 4, ny: int = 4, *, n_wide: int = 2,
                      topology: Topology | None = None,
                      depth: int = 2, burstlen: int = 16,
                      service_lat: int = 10, cycles: int = 4000,
-                     resp_q_cap: int = 256) -> "NocSpec":
+                     resp_q_cap: int = 256,
+                     routing: RoutingPolicy | None = None) -> "NocSpec":
         """Journal-version style: ``n_wide`` parallel wide stream channels
         (wide class i's W/R data bursts ride their own physical network)
         next to the shared narrow req/rsp pair carrying every class's
@@ -352,4 +377,5 @@ class NocSpec:
                    classes=tuple(classes), channels=tuple(channels),
                    class_map=tuple(sorted(cmap)),
                    service_lat=service_lat, cycles=cycles,
-                   resp_q_cap=resp_q_cap)
+                   resp_q_cap=resp_q_cap,
+                   routing=RoutingPolicy() if routing is None else routing)

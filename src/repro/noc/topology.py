@@ -25,10 +25,17 @@ Provided fabrics:
   both dimensions (>5-port routers), with greedy largest-stride-first
   dimension-ordered routing (never overshoots, still deterministic),
 * :class:`Torus` — 2D torus with minimal-wrap dimension-ordered
-  routing (ties break to the positive direction).  Note the engine has
-  no virtual channels, so like real VC-less tori the wrap links can in
-  principle deadlock under sustained wormhole bursts; the journal
-  FlooNoC and PATRONoC both study such fabrics at the loads we model.
+  routing (ties break to the positive direction).  Under the default
+  VC-less routing policy the wrap links can deadlock under sustained
+  wormhole bursts, like any real VC-less torus; give the spec a
+  ``RoutingPolicy`` with ``n_vcs >= 2`` (:mod:`repro.noc.routing`) to
+  run the dateline/escape-VC discipline that makes the torus
+  deadlock-free.
+
+:func:`validate_tables` is the reusable structural check (termination,
+duplex links, local-port-last) every table set goes through — the base
+topologies here and the expanded multi-plane/VC table sets
+:mod:`repro.noc.routing` generates.
 """
 from __future__ import annotations
 
@@ -192,49 +199,78 @@ def _torus_tables(topo: Torus):
 def _freeze_tables(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray):
     """Validate then mark read-only: the tables are cached and shared
     with every caller, so a mutation would corrupt all later sims."""
-    _check_tables(nbr, opp, route)
+    validate_tables(nbr, opp, route)
     for a in (nbr, opp, route):
         a.setflags(write=False)
     return nbr, opp, route
 
 
-def _check_tables(nbr: np.ndarray, opp: np.ndarray,
-                  route: np.ndarray) -> None:
-    """Structural invariants every topology must satisfy (real raises,
-    not asserts — these guard simulation correctness under ``-O`` too:
-    a port index reaching the arbiter's NO-ROUTE sentinel would make
-    valid heads silently never granted)."""
+def validate_tables(nbr: np.ndarray, opp: np.ndarray,
+                    route: np.ndarray) -> np.ndarray:
+    """Structural invariants every fabric table set must satisfy (real
+    raises, not asserts — these guard simulation correctness under
+    ``-O`` too: a port index reaching the arbiter's NO-ROUTE sentinel
+    would make valid heads silently never granted).
+
+    Accepts any table set shaped like the fabric's contract — the base
+    topologies' ``(R, R)`` route tables and the multi-plane/VC-expanded
+    ``(R, n_planes*R)`` sets :mod:`repro.noc.routing` generates, where
+    column ``j`` addresses destination router ``j % R``.  Checks:
+
+    * port count stays below the arbiter's NO-ROUTE sentinel,
+    * the local port is last and carries no link,
+    * every wired link is duplex (the neighbor's ``opp`` port links
+      straight back),
+    * routes only use wired links and reserve the local port for the
+      destination router,
+    * every route terminates (no livelock) — returned as the
+      ``(R, n_dest)`` hop-count table.
+    """
     R, P = nbr.shape
+    n_dest = route.shape[1]
+    if n_dest % R:
+        raise ValueError(
+            f"route table has {n_dest} destination columns, not a "
+            f"multiple of {R} routers")
     if P >= 99:
         raise ValueError(
             f"{P} ports collides with the NO-ROUTE sentinel (99)")
+    if np.any(nbr[:, P - 1] >= 0):
+        raise ValueError("local port (last index) must not carry a link")
     for r in range(R):
         for p in range(P - 1):
             t = nbr[r, p]
             if t >= 0 and nbr[t, opp[r, p]] != r:
                 raise ValueError(f"link {r}:{p} is not duplex")
-    rr = np.arange(R)[:, None].repeat(R, axis=1)         # (R, R) row index
-    off_diag = rr != rr.T
+    rr = np.arange(R)[:, None].repeat(n_dest, axis=1)    # (R, n_dest) row idx
+    dd = np.arange(n_dest)[None, :].repeat(R, axis=0) % R     # dest router
+    off_diag = rr != dd
+    if np.any(route[~off_diag] != P - 1):
+        raise ValueError("route to self must use the local port")
+    if np.any(route[off_diag] == P - 1):
+        raise ValueError("route reaches the local port before the "
+                         "destination router")
     if not np.all(nbr[rr[off_diag], route[off_diag]] >= 0):
         raise ValueError("route uses a missing link")
+
+    cur = rr.copy()
+    hops = np.zeros((R, n_dest), np.int64)
+    vdest = np.arange(n_dest)[None, :].repeat(R, axis=0)
+    for _ in range(4 * n_dest + 4):
+        live = cur != dd
+        if not live.any():
+            return hops
+        step = nbr[cur, route[cur, vdest]]
+        cur = np.where(live, step, cur)
+        hops += live
+    raise ValueError("routing does not terminate")
 
 
 @functools.lru_cache(maxsize=64)
 def hop_table(topo: Topology) -> np.ndarray:
     """(R, R) hop counts along each deterministic route (0 on the
     diagonal). Also proves every route terminates (no livelock)."""
-    nbr, _, route = topo.tables()
-    R = nbr.shape[0]
-    src = np.arange(R)[:, None].repeat(R, axis=1)
-    dest = np.arange(R)[None, :].repeat(R, axis=0)
-    cur = src.copy()
-    hops = np.zeros((R, R), np.int64)
-    for _ in range(4 * R + 4):
-        live = cur != dest
-        if not live.any():
-            hops.setflags(write=False)       # cached + shared with callers
-            return hops
-        step = nbr[cur, route[cur, dest]]
-        cur = np.where(live, step, cur)
-        hops += live
-    raise ValueError(f"routing on {topo} does not terminate")
+    nbr, opp, route = topo.tables()
+    hops = validate_tables(nbr, opp, route)
+    hops.setflags(write=False)           # cached + shared with callers
+    return hops
