@@ -372,6 +372,60 @@ def _scan_body_eqns(jaxpr) -> int:
     return 0
 
 
+def bench_ledger_replay(smoke: bool = False):
+    """Replay a REAL decode step's collective ledger through all three
+    backends.  The trace (``benchmarks/decode_ledger.json``) was
+    captured once from ``build_decode_step`` on a 2x2 device mesh
+    (llama3.2-1b smoke) and committed via ``Ledger.to_json`` — the
+    bench replays it with ``Workload.from_ledger`` on the job's own
+    rank mapping, times each backend, and asserts the replayed traffic
+    is flit-for-flit identical across them (including the per-stream
+    completion stats)."""
+    from pathlib import Path
+
+    from repro.core.channels import Ledger
+    from repro.noc import NocSpec, Workload, simulate
+
+    led = Ledger.from_json(
+        (Path(__file__).parent / "decode_ledger.json").read_text())
+    spec = NocSpec.narrow_wide(4, 4, cycles=2500 if smoke else 4000)
+    wl = Workload.from_ledger(led, spec, mapping={"data": 2, "model": 2},
+                              scale=0.25)
+    results = {}
+    for backend in ("jnp", "pallas", "pallas_fused"):
+        r, us, compile_us = _timed(simulate, spec, wl, backend=backend,
+                                   repeat=1 if smoke else 3)
+        results[backend] = (r, us, compile_us)
+    ref = results["jnp"][0]
+    for backend in ("pallas", "pallas_fused"):
+        r = results[backend][0]
+        for cname, c in ref.classes.items():
+            other = r.classes[cname]
+            for f in ("done", "avg_lat", "w_done", "w_avg_lat",
+                      "stream_done", "stream_last_t", "stream_w_done",
+                      "stream_w_last_t"):
+                np.testing.assert_array_equal(
+                    getattr(c, f), getattr(other, f),
+                    err_msg=f"{backend}:{cname}.{f}")
+        for ch in ref.channels:
+            np.testing.assert_array_equal(
+                ref.channels[ch].link_moves, r.channels[ch].link_moves,
+                err_msg=f"{backend}:{ch}.link_moves")
+    txns = sum(int(c.done.sum() + c.w_done.sum())
+               for c in ref.classes.values())
+    makespan = max(int(c.stream_w_last_t.max())
+                   for c in ref.classes.values())
+    for backend in ("jnp", "pallas", "pallas_fused"):
+        _, us, compile_us = results[backend]
+        print(f"ledger_replay_{backend},{us:.0f},txns={txns} "
+              f"makespan={makespan} drained={bool(ref.drained)} "
+              f"equal=True")
+        _record(f"ledger_replay_{backend}", us, compile_us,
+                txns=txns, makespan=makespan,
+                drained=bool(ref.drained), backends_equal=True,
+                entries=len(led.entries))
+
+
 def bench_engine_throughput(smoke: bool = False):
     """Perf tentpole bench: the fused hot loop vs the PINNED pre-PR
     engine (``_baseline_engine.py``), measured in the same process on
@@ -618,6 +672,7 @@ def main() -> None:
     bench_write_mix(args.smoke)
     bench_routing(args.smoke)
     bench_engine_throughput(args.smoke)
+    bench_ledger_replay(args.smoke)
     bench_straggler_sim(args.smoke)
     bench_train_step(args.smoke)
     bench_channels_ablation(args.smoke)

@@ -42,7 +42,13 @@ class LedgerEntry:
 
 @dataclass
 class Ledger:
-    """Static per-trace record of the collective schedule (for EXPERIMENTS)."""
+    """Static per-trace record of the collective schedule (for EXPERIMENTS).
+
+    Serializable: ``to_json()`` / ``from_json()`` round-trip exactly, so
+    a trace captured once (e.g. in a multi-device subprocess or a 512-
+    chip dry-run) can be committed and replayed on the NoC simulator
+    (``repro.noc.Workload.from_ledger``) without re-tracing the step.
+    """
     entries: list[LedgerEntry] = field(default_factory=list)
     phase: str = "fwd"
 
@@ -58,6 +64,25 @@ class Ledger:
             agg["count"] += 1
             agg["bytes"] += e.nbytes
         return {f"{c}/{o}": v for (c, o), v in out.items()}
+
+    def to_json(self) -> str:
+        import json
+        return json.dumps({
+            "phase": self.phase,
+            "entries": [{"phase": e.phase, "op": e.op,
+                         "axes": list(e.axes), "nbytes": e.nbytes,
+                         "traffic_class": e.traffic_class,
+                         "note": e.note} for e in self.entries]})
+
+    @classmethod
+    def from_json(cls, s: str) -> "Ledger":
+        import json
+        d = json.loads(s)
+        return cls(entries=[
+            LedgerEntry(e["phase"], e["op"], tuple(e["axes"]),
+                        int(e["nbytes"]), e["traffic_class"],
+                        e.get("note", ""))
+            for e in d["entries"]], phase=d.get("phase", "fwd"))
 
 
 def _nbytes(x: jax.Array) -> int:

@@ -39,6 +39,14 @@ class StepArtifact:
     in_sds: tuple
     backend: Backend
 
+    @property
+    def ledger(self):
+        """The backend's collective byte ledger.  Populated at trace
+        time — run ``fn.lower(*in_sds)`` (or call ``fn``) first; feed
+        it to ``repro.noc.Workload.from_ledger`` to replay the step's
+        traffic on a simulated NoC."""
+        return self.backend.ledger
+
 
 # ---------------------------------------------------------------------------
 # helpers

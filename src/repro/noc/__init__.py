@@ -39,4 +39,6 @@ from .routing import RouteTables, RoutingPolicy  # noqa: F401
 from .spec import NocSpec, PhysicalChannel, TrafficClass  # noqa: F401
 from .topology import (Mesh, Topology, Torus, hop_table,  # noqa: F401
                        validate_tables)
+from .traces import (EXPANDERS, expand_collective,  # noqa: F401
+                     ledger_schedules, register_expander)
 from .workload import PATTERNS, Workload, register_pattern  # noqa: F401

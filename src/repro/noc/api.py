@@ -45,34 +45,79 @@ __all__ = ["simulate", "simulate_batch", "simulate_schedules", "sweep",
            "stack_schedules"]
 
 
+def _split_streams(cls_name, t, d, w, s, S):
+    """Partition one class's per-NI schedule rows into ``S`` per-stream
+    lanes, preserving each NI's entry order within a stream.  Rows are
+    compacted with a stable argsort (stream-s entries first, original
+    order kept) and re-padded with BIG sentinels."""
+    valid = t < BIG
+    if s is None:
+        # 3-tuple schedule on a multi-stream class: deal entries
+        # round-robin across the AXI ID streams per NI
+        s = np.where(valid, (np.cumsum(valid, axis=1) - 1) % S, 0)
+    else:
+        bad = valid & ((s < 0) | (s >= S))
+        if np.any(bad):
+            raise ValueError(
+                f"class {cls_name!r}: stream ids must be in [0, "
+                f"n_streams={S}); got {np.unique(s[bad])}")
+    lanes = []
+    for si in range(S):
+        mask = valid & (s == si)
+        order = np.argsort(~mask, axis=1, kind="stable")
+        mm = np.take_along_axis(mask, order, axis=1)
+        width = max(1, int(mask.sum(axis=1).max()))
+        tt = np.where(mm, np.take_along_axis(t, order, axis=1), BIG)
+        dd = np.where(mm, np.take_along_axis(d, order, axis=1), 0)
+        ww = np.where(mm, np.take_along_axis(w, order, axis=1), 0)
+        lanes.append((tt[:, :width], dd[:, :width], ww[:, :width]))
+    return lanes
+
+
 def stack_schedules(spec: NocSpec,
                     schedules: Mapping[str, tuple],
                     T: int | None = None) -> tuple[np.ndarray, np.ndarray,
                                                    np.ndarray]:
-    """Pad per-class ``(times, dests[, writes])`` schedules to a common
-    horizon and stack into the (n_cls, R, T) operands the engine
-    consumes.  A 2-tuple entry (a custom schedule source predating the
-    write flag) is treated as all-reads."""
+    """Pad per-class ``(times, dests[, writes[, streams]])`` schedules
+    to a common horizon and stack into the (n_lanes, R, T) operands the
+    engine consumes — one lane per (class, AXI ID stream), class-major.
+    A 2-tuple entry (a custom schedule source predating the write flag)
+    is treated as all-reads; a 3-tuple on a class with ``n_streams >
+    1`` is dealt round-robin across its streams; a 4-tuple's ``streams``
+    array assigns each entry's AXI ID stream explicitly.  Classes at
+    the default ``n_streams=1`` pass through without repacking, so
+    single-stream operands are bit-identical to the pre-stream layout
+    (n_lanes == n_cls)."""
     R = spec.n_routers
-    per_cls = []
+    per_lane = []
     for cls in spec.classes:
         entry = schedules[cls.name]
         t, d = entry[0], entry[1]
         t = np.asarray(t, np.int32).reshape(R, -1)
         d = np.asarray(d, np.int32).reshape(R, -1)
         w = (np.asarray(entry[2], np.int32).reshape(R, -1)
-             if len(entry) > 2 else np.zeros_like(t))
-        if w.shape != t.shape:
-            raise ValueError(
-                f"class {cls.name!r}: writes shape {w.shape} != times "
-                f"shape {t.shape}")
-        per_cls.append((t, d, w))
-    T_need = max(t.shape[1] for t, _, _ in per_cls)
+             if len(entry) > 2 and entry[2] is not None
+             else np.zeros_like(t))
+        s = (np.asarray(entry[3], np.int32).reshape(R, -1)
+             if len(entry) > 3 and entry[3] is not None else None)
+        for name, a in (("writes", w), ("streams", s)):
+            if a is not None and a.shape != t.shape:
+                raise ValueError(
+                    f"class {cls.name!r}: {name} shape {a.shape} != "
+                    f"times shape {t.shape}")
+        if cls.n_streams == 1:
+            # stream ids collapse onto the single AXI ID (so one
+            # 4-tuple schedule compares n_streams settings directly)
+            per_lane.append((t, d, w))
+        else:
+            per_lane.extend(_split_streams(cls.name, t, d, w, s,
+                                           cls.n_streams))
+    T_need = max(t.shape[1] for t, _, _ in per_lane)
     T = T_need if T is None else max(T, T_need)
-    times = np.full((len(per_cls), R, T), BIG, np.int32)
-    dests = np.zeros((len(per_cls), R, T), np.int32)
-    writes = np.zeros((len(per_cls), R, T), np.int32)
-    for i, (t, d, w) in enumerate(per_cls):
+    times = np.full((len(per_lane), R, T), BIG, np.int32)
+    dests = np.zeros((len(per_lane), R, T), np.int32)
+    writes = np.zeros((len(per_lane), R, T), np.int32)
+    for i, (t, d, w) in enumerate(per_lane):
         times[i, :, :t.shape[1]] = t
         dests[i, :, :d.shape[1]] = d
         writes[i, :, :w.shape[1]] = w

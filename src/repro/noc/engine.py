@@ -10,8 +10,11 @@ batched NI model here interprets kinds.  The NI write path (paper
 §III-A, journal version's end-to-end parallel streams):
 
 * **AW injection** — a scheduled write becomes a single-flit AW
-  candidate on its ``aw`` channel, gated by the class's *write* ROB
-  budget (reads and writes hold separate ``max_outstanding`` credits);
+  candidate on its ``aw`` channel, gated by the issuing *lane*'s write
+  ROB budget: reads and writes hold separate credits, and a class's
+  ``max_outstanding`` is split (near-)evenly across its ``n_streams``
+  AXI ID lanes, NOT pooled per (NI, class) — two streams of one class
+  stall independently (journal version's parallel multi-stream ROB);
 * **W data trailing the AW grant** — the moment an AW wins injection,
   a W burst entry (``burst_beats`` beats) is pushed into the class's
   W ring; its beats stream onto the ``w`` channel from the next cycle
@@ -49,7 +52,8 @@ every other knob, and ``jitter=0`` reproduces the fixed-latency model
 exactly.
 
 The per-cycle structure keeps the fused-hot-loop shape: ONE stacked
-fabric call for all channels, batched ``(R, n_cls)`` NI state, the
+fabric call for all channels, batched ``(R, n_cls)`` NI state (one
+column per (class, AXI ID stream) *lane* — see :class:`FlowPlan`), the
 response rings as one ``(R, n_rq, resp_q_cap, 6)`` array updated with
 a single segment-style scatter per cycle (the per-class W rings live
 in a separate small ``(R, n_cls, w_cap, 6)`` array — W occupancy is
@@ -160,51 +164,72 @@ class FlowPlan(NamedTuple):
     derived from a NocSpec (the *logical* half of the fabric; the
     physical half is the spec's :class:`~repro.noc.topology.Topology`).
 
+    The plan's unit is the **lane** — one (class, AXI ID stream) pair.
+    A class declaring ``n_streams=S`` contributes S consecutive lanes
+    (class-major order), each with its own schedule pointer, its own
+    slice of the class's per-direction ROB credits, its own W ring and
+    its own round-robin slot, so independent streams never
+    false-serialize (journal version's end-to-end parallel multi-stream
+    support).  With every class at the default ``n_streams=1`` lanes
+    coincide with classes and the plan is field-for-field the pre-
+    stream plan — ``n_cls`` keeps its name but counts lanes.
+
     Ring space: response rings (one per distinct channel carrying any
     R or B flow, first-appearance order) come first, then one W ring
-    per class (id ``n_rq + cls``).  Head/tail/started bookkeeping is
+    per lane (id ``n_rq + lane``).  Head/tail/started bookkeeping is
     one stacked ``(R, n_q)`` set, but the entry storage is split:
     response rings are ``(R, n_rq, resp_q_cap, 6)`` while W rings are
-    ``(R, n_cls, w_cap, 6)`` with ``w_cap`` derived from the classes'
+    ``(R, n_lanes, w_cap, 6)`` with ``w_cap`` derived from the classes'
     declared ``max_outstanding`` — a W ring can never hold more
     pending bursts than the write ROB grants credits, so it doesn't
     pay the big response-ring capacity (raising ``max_outstanding``
     above the declared value via the traced override can overflow the
     W ring, the same unchecked-overflow contract as ``resp_q_cap``).
     """
-    n_cls: int
+    n_cls: int                       # number of LANES (see class doc)
     n_ch: int
     n_rq: int                        # response rings (channel-keyed)
-    n_q: int                         # n_rq + n_cls (per-class W rings)
-    w_cap: int                       # static W-ring capacity per class
-    rq_of_r: tuple[int, ...]         # class -> ring its R entries enter
-    rq_of_b: tuple[int, ...]         # class -> ring its B entries enter
+    n_q: int                         # n_rq + n_lanes (per-lane W rings)
+    w_cap: int                       # static W-ring capacity per lane
+    rq_of_r: tuple[int, ...]         # lane -> ring its R entries enter
+    rq_of_b: tuple[int, ...]         # lane -> ring its B entries enter
     chan_of_q: tuple[int, ...]       # every queue -> physical channel
-    # channel -> ordered single-flit address-flow slots ((cls, "ar"|"aw"))
+    # channel -> ordered single-flit address-flow slots ((lane, "ar"|"aw"))
     singles_on: tuple[tuple[tuple[int, str], ...], ...]
     wqs_on: tuple[tuple[int, ...], ...]   # channel -> W ring ids
     rqs_on: tuple[tuple[int, ...], ...]   # channel -> response ring ids
-    # channel -> class ids with ANY request-direction flow on it (the
-    # round-robin class slots of mixed channels), prio order
+    # channel -> lane ids with ANY request-direction flow on it (the
+    # round-robin lane slots of mixed channels), prio order
     rr_classes: tuple[tuple[int, ...], ...]
-    push_order_r: tuple[int, ...]    # R-push sequential order (class ids)
+    push_order_r: tuple[int, ...]    # R-push sequential order (lane ids)
+    cls_of_lane: tuple[int, ...]     # lane -> declaring class index
+    stream_of_lane: tuple[int, ...]  # lane -> AXI ID stream within class
 
 
 def build_flow_plan(spec: NocSpec) -> FlowPlan:
-    n_cls, n_ch = len(spec.classes), len(spec.channels)
-    ch_of = {f: [spec.flow_channel(c.name, f) for c in spec.classes]
+    n_ch = len(spec.channels)
+    # lanes: one per (class, stream), class-major — every class with
+    # n_streams=1 contributes exactly one lane, so single-stream specs
+    # reproduce the per-class plan verbatim
+    lanes = [(ci, s) for ci, c in enumerate(spec.classes)
+             for s in range(c.n_streams)]
+    n_ln = len(lanes)
+    lane_cls = [spec.classes[ci] for ci, _ in lanes]
+    ch_of = {f: [spec.flow_channel(c.name, f) for c in lane_cls]
              for f in ("ar", "aw", "w", "r", "b")}
     # response rings: channel-keyed, first-appearance order over the R
     # flows then the B flows — R-only specs get exactly the pre-AXI4
     # ring order, B flows sharing an R channel share its ring (and its
-    # FIFO order: the shared-channel ablation covers acks too)
+    # FIFO order: the shared-channel ablation covers acks too).  Lanes
+    # of one class share that class's channels, so streams share rings;
+    # deliveries de-mux on the lane-specific flit kind.
     ring_ch: list[int] = []
     for ch in [*ch_of["r"], *ch_of["b"]]:
         if ch not in ring_ch:
             ring_ch.append(ch)
     n_rq = len(ring_ch)
-    prio = sorted(range(n_cls),
-                  key=lambda i: (spec.classes[i].burst_beats > 1, i))
+    prio = sorted(range(n_ln),
+                  key=lambda l: (lane_cls[l].burst_beats > 1, l))
     singles_on = tuple(
         tuple((i, f) for i in prio for f in ("ar", "aw")
               if ch_of[f][i] == c)
@@ -219,25 +244,30 @@ def build_flow_plan(spec: NocSpec) -> FlowPlan:
         for c in range(n_ch))
     # sequential R-push order of the read-only engine: channel-major,
     # then the channel's priority order — preserves exact ring-slot
-    # ordering when several classes push one shared ring per cycle
+    # ordering when several lanes push one shared ring per cycle
     push_order_r = tuple(i for c in range(n_ch) for i in prio
                          if ch_of["ar"][i] == c)
     return FlowPlan(
-        n_cls=n_cls, n_ch=n_ch, n_rq=n_rq, n_q=n_rq + n_cls,
+        n_cls=n_ln, n_ch=n_ch, n_rq=n_rq, n_q=n_rq + n_ln,
         w_cap=max(2, max(c.max_outstanding for c in spec.classes)),
         rq_of_r=tuple(ring_ch.index(ch) for ch in ch_of["r"]),
         rq_of_b=tuple(ring_ch.index(ch) for ch in ch_of["b"]),
         chan_of_q=tuple(ring_ch) + tuple(ch_of["w"]),
         singles_on=singles_on, wqs_on=wqs_on, rqs_on=rqs_on,
-        rr_classes=rr_classes, push_order_r=push_order_r)
+        rr_classes=rr_classes, push_order_r=push_order_r,
+        cls_of_lane=tuple(ci for ci, _ in lanes),
+        stream_of_lane=tuple(s for _, s in lanes))
 
 
 class _PlanArrays(NamedTuple):
     """Static index/selector arrays derived from a FlowPlan, shared by
     every cycle of the batched NI update.  Kept as *numpy* so index
     lookups stay concrete at trace time (a jnp constant would turn
-    ``ar_ch[i]`` into a traced op inside the scan body)."""
-    ar_ch: np.ndarray         # (n_cls,) channel per flow
+    ``ar_ch[i]`` into a traced op inside the scan body).  All arrays
+    are lane-indexed; the flit ``kind`` encodes (lane, flow), so a
+    stream's identity rides the fabric's opaque kind field and
+    deliveries de-mux back to the issuing lane."""
+    ar_ch: np.ndarray         # (n_lanes,) channel per flow
     aw_ch: np.ndarray
     w_ch: np.ndarray
     r_ch: np.ndarray
@@ -247,20 +277,21 @@ class _PlanArrays(NamedTuple):
     r_kinds: np.ndarray
     w_kinds: np.ndarray
     b_kinds: np.ndarray
-    # response-ring push machinery: slot s in [0, 2*n_cls) is the R
-    # push of class s or the B push of class s-n_cls; one masked
-    # scatter serves both (W pushes go to the per-class W-ring array,
+    # response-ring push machinery: slot s in [0, 2*n_lanes) is the R
+    # push of lane s or the B push of lane s-n_lanes; one masked
+    # scatter serves both (W pushes go to the per-lane W-ring array,
     # where each ring has exactly one pusher — no ordering needed).
-    q_of_slot: np.ndarray     # (2*n_cls,) destination ring per push slot
+    q_of_slot: np.ndarray     # (2*n_lanes,) destination ring per push slot
     push_before: np.ndarray   # (2n, 2n) 1 where slot j pushes the same
     #                           ring as slot i earlier in sequential order
-    q_onehot: np.ndarray      # (2*n_cls, n_rq) slot -> ring one-hot
+    q_onehot: np.ndarray      # (2*n_lanes, n_rq) slot -> ring one-hot
 
 
 def _plan_arrays(spec: NocSpec, plan: FlowPlan) -> _PlanArrays:
     n_cls = plan.n_cls
+    lane_cls = [spec.classes[ci] for ci in plan.cls_of_lane]
     ch = {f: np.asarray([spec.flow_channel(c.name, f)
-                         for c in spec.classes], np.int32)
+                         for c in lane_cls], np.int32)
           for f in ("ar", "aw", "w", "r", "b")}
     kinds = {f: np.asarray([flow_kind(i, f) for i in range(n_cls)],
                            np.int32) for f in ("ar", "aw", "r", "w", "b")}
@@ -744,13 +775,18 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
 
     Returns ``fn(times, dests, writes, service_lat, max_out,
     burst_beats, jitter, depths)`` where ``times``/``dests``/``writes``
-    are (n_cls, R, T) int32 schedules (``writes`` marks AXI write
-    transactions) and the knobs — per-class ``service_lat`` vector, the
-    (n_cls, JITTER_TABLE_LEN) service-jitter offset table, per-class
-    ``max_out``/``burst_beats``, and the per-channel FIFO ``depths``
-    vector — are traced, so the whole function is vmappable over a
-    leading batch axis for rate/seed/latency/depth sweeps in a single
-    jit.
+    are (n_lanes, R, T) int32 schedules — one row per (class, AXI ID
+    stream) lane, class-major, so with every class at ``n_streams=1``
+    that is exactly the per-class (n_cls, R, T) layout
+    (:func:`repro.noc.stack_schedules` builds them either way) and
+    ``writes`` marks AXI write transactions.  The knobs stay
+    per-CLASS — the ``service_lat`` vector, the (n_cls,
+    JITTER_TABLE_LEN) service-jitter offset table,
+    ``max_out``/``burst_beats`` — and are expanded to lanes inside the
+    jit (each lane gets ``max_out[cls]//S`` credits, earlier streams
+    take the remainder); with the per-channel FIFO ``depths`` vector
+    all are traced, so the whole function is vmappable over a leading
+    batch axis for rate/seed/latency/depth sweeps in a single jit.
 
     ``max_depth`` pads the FIFO state to a larger static bound than the
     spec declares, letting one compilation serve every depth up to that
@@ -792,6 +828,25 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
     n_ch, R = plan.n_ch, spec.n_routers
     n_vcs = spec.routing.n_vcs
 
+    # lane expansion of the per-CLASS traced knobs: static gather
+    # indices (class of each lane) plus the credit split — lane s of a
+    # class with S streams gets max_out//S credits, the first
+    # max_out%S lanes one extra.  Single-stream specs skip the gather
+    # entirely so their jaxpr (and goldens) are untouched.
+    multi_stream = any(c.n_streams > 1 for c in spec.classes)
+    cls_of = np.asarray(plan.cls_of_lane, np.int32)
+    s_of = np.asarray(plan.stream_of_lane, np.int32)
+    S_of = np.asarray([spec.classes[ci].n_streams
+                       for ci in plan.cls_of_lane], np.int32)
+
+    def to_lanes(service_lat, max_out, burst_beats, jitter):
+        if not multi_stream:
+            return service_lat, max_out, burst_beats, jitter
+        mo_c = max_out[cls_of]
+        mo = mo_c // S_of + (s_of < mo_c % S_of)
+        return (service_lat[cls_of], mo, burst_beats[cls_of],
+                jitter[cls_of])
+
     # donating the big schedule operands lets XLA alias them into the
     # scan carry's workspace; CPU can't donate (it would only warn)
     donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
@@ -805,7 +860,9 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
                          jnp.int32(0),
                          jnp.zeros((n_ch, n_vcs), jnp.int32),
                          jnp.zeros((n_ch, n_vcs), jnp.int32))
-        times = jnp.moveaxis(times, 0, 1)              # (R, n_cls, T)
+        service_lat, max_out, burst_beats, jitter = to_lanes(
+            service_lat, max_out, burst_beats, jitter)
+        times = jnp.moveaxis(times, 0, 1)              # (R, n_lanes, T)
         dyn = {"times": times,
                "dests": jnp.moveaxis(dests, 0, 1),
                "writes": jnp.moveaxis(writes, 0, 1),

@@ -35,6 +35,12 @@ class ClassStats:
     fields carry a ``w_`` prefix: latency/done measured at the issuing
     NI (AW injection -> B arrival), W-beat counts and bandwidth span
     measured at the *receiving* NI (where the write data lands).
+
+    The class-level arrays aggregate over the class's AXI ID streams
+    (``TrafficClass.n_streams``); the ``stream_`` fields resolve the
+    same completion metrics per stream, shaped (*batch, n_streams, R)
+    — with the default single stream they are the class metrics with a
+    length-1 stream axis.
     """
     done: np.ndarray          # completed read transactions per NI
     avg_lat: np.ndarray       # mean AR-inject -> last-R-beat latency
@@ -46,6 +52,15 @@ class ClassStats:
     w_max_lat: np.ndarray     # worst-case write latency (cycles)
     w_beats_rx: np.ndarray    # W beats landing per (target) NI
     w_eff_bw: np.ndarray      # W beats / active-span cycles at target
+    # per-AXI-ID-stream completion stats, (*batch, n_streams, R)
+    stream_done: np.ndarray
+    stream_avg_lat: np.ndarray
+    stream_max_lat: np.ndarray
+    stream_last_t: np.ndarray      # last R beat per stream (makespan)
+    stream_w_done: np.ndarray
+    stream_w_avg_lat: np.ndarray
+    stream_w_max_lat: np.ndarray
+    stream_w_last_t: np.ndarray    # last W beat landing per stream
 
 
 @dataclass(frozen=True)
@@ -83,24 +98,55 @@ class SimResult:
         def span(first_t, last_t):
             return np.maximum(last_t - np.minimum(first_t, last_t), 1)
 
+        # raw arrays are lane-resolved (*batch, R, n_lanes), class-major
+        # — slice each class's stream block, aggregate for the class
+        # view (sums / maxes / span mins are exact identities at
+        # n_streams=1) and keep the per-stream slice alongside
         classes = {}
-        for i, tc in enumerate(spec.classes):
-            g = {k: np.asarray(raw[k])[..., i] for k in
+        off = 0
+        for tc in spec.classes:
+            S = tc.n_streams
+            g = {k: np.asarray(raw[k])[..., off:off + S] for k in
                  ("done", "lat_sum", "lat_max", "beats_rx", "first_t",
                   "last_t", "w_done", "w_lat_sum", "w_lat_max",
                   "w_beats_rx", "w_first_t", "w_last_t")}
+            off += S
+            a = {  # class aggregate over the stream axis
+                "done": g["done"].sum(-1),
+                "lat_sum": g["lat_sum"].sum(-1),
+                "lat_max": g["lat_max"].max(-1),
+                "beats_rx": g["beats_rx"].sum(-1),
+                "first_t": g["first_t"].min(-1),
+                "last_t": g["last_t"].max(-1),
+                "w_done": g["w_done"].sum(-1),
+                "w_lat_sum": g["w_lat_sum"].sum(-1),
+                "w_lat_max": g["w_lat_max"].max(-1),
+                "w_beats_rx": g["w_beats_rx"].sum(-1),
+                "w_first_t": g["w_first_t"].min(-1),
+                "w_last_t": g["w_last_t"].max(-1),
+            }
+            st = {k: np.moveaxis(v, -1, -2) for k, v in g.items()}
             classes[tc.name] = ClassStats(
-                done=g["done"],
-                avg_lat=g["lat_sum"] / np.maximum(g["done"], 1),
-                max_lat=g["lat_max"],
-                beats_rx=g["beats_rx"],
-                eff_bw=g["beats_rx"] / span(g["first_t"], g["last_t"]),
-                w_done=g["w_done"],
-                w_avg_lat=g["w_lat_sum"] / np.maximum(g["w_done"], 1),
-                w_max_lat=g["w_lat_max"],
-                w_beats_rx=g["w_beats_rx"],
-                w_eff_bw=g["w_beats_rx"] / span(g["w_first_t"],
-                                                g["w_last_t"]),
+                done=a["done"],
+                avg_lat=a["lat_sum"] / np.maximum(a["done"], 1),
+                max_lat=a["lat_max"],
+                beats_rx=a["beats_rx"],
+                eff_bw=a["beats_rx"] / span(a["first_t"], a["last_t"]),
+                w_done=a["w_done"],
+                w_avg_lat=a["w_lat_sum"] / np.maximum(a["w_done"], 1),
+                w_max_lat=a["w_lat_max"],
+                w_beats_rx=a["w_beats_rx"],
+                w_eff_bw=a["w_beats_rx"] / span(a["w_first_t"],
+                                                a["w_last_t"]),
+                stream_done=st["done"],
+                stream_avg_lat=st["lat_sum"] / np.maximum(st["done"], 1),
+                stream_max_lat=st["lat_max"],
+                stream_last_t=st["last_t"],
+                stream_w_done=st["w_done"],
+                stream_w_avg_lat=st["w_lat_sum"]
+                / np.maximum(st["w_done"], 1),
+                stream_w_max_lat=st["w_lat_max"],
+                stream_w_last_t=st["w_last_t"],
             )
         moves = np.asarray(raw["link_moves"])
         occ_sum = np.asarray(raw["vc_occ_sum"])       # (*batch, n_ch, V)

@@ -59,13 +59,23 @@ class TrafficClass:
     traced operands at simulate() time).  ``service_lat=None`` falls
     back to the spec-wide :attr:`NocSpec.service_lat` scalar, and
     ``service_jitter=0`` reproduces the fixed-latency model exactly.
+
+    ``n_streams`` is the journal version's end-to-end AXI4 parallel
+    multi-stream support: the class's transactions are spread over that
+    many independent AXI ID streams, each with its own schedule pointer,
+    its own slice of the ``max_outstanding`` credits (split as evenly as
+    integer division allows, earlier streams get the remainder) and its
+    own ROB/reorder slots — so a slow transaction on one stream never
+    false-serializes traffic on another.  ``n_streams=1`` (the default)
+    is the single-ID behaviour, bit-identical to the pre-stream engine.
     """
     name: str
     burst_beats: int = 1
-    max_outstanding: int = 8       # per-direction ROB flow control budget
+    max_outstanding: int = 8       # per-direction ROB budget (all streams)
     payload_bits: int = 64         # per-beat payload (accounting only)
     service_lat: int | None = None   # None -> NocSpec.service_lat
     service_jitter: int = 0          # +/- uniform jitter, 0 = deterministic
+    n_streams: int = 1               # independent AXI ID streams
 
 
 @dataclass(frozen=True)
@@ -188,6 +198,13 @@ class NocSpec:
             if cls.service_jitter < 0:
                 raise ValueError(
                     f"class {cls.name!r} service_jitter must be >= 0")
+            if not isinstance(cls.n_streams, int) or isinstance(
+                    cls.n_streams, bool) or not (
+                    1 <= cls.n_streams <= cls.max_outstanding):
+                raise ValueError(
+                    f"class {cls.name!r} n_streams must be an int in "
+                    f"[1, max_outstanding={cls.max_outstanding}], got "
+                    f"{cls.n_streams!r}")
         flows = dict(cm)
         for cls in self.classes:
             for d in AXI_FLOWS:

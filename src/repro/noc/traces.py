@@ -1,0 +1,295 @@
+"""Replay ``repro.dist`` collective ledgers as NoC traffic.
+
+This is the bridge between the repo's two halves: the traffic
+*producer* (``repro.dist`` train/prefill/decode steps, whose
+:class:`~repro.core.channels.Backend` seam records every cross-device
+byte in a trace-time :class:`~repro.core.channels.Ledger`) and the
+traffic *consumer* (the ``repro.noc`` cycle simulator).  A ledger entry
+``(phase, op, axes, nbytes, traffic_class)`` is expanded into the link-
+level transfers its collective actually performs on a group of ranks
+(:data:`EXPANDERS`), the ranks are mapped onto mesh tiles, and the
+transfers become timed per-class ``(times, dests, writes, streams)``
+schedules — so "what does Llama-3 decode do to a 7x7 wide NoC" is
+``simulate(spec, Workload.from_ledger(art.ledger, spec))``.
+
+Ledger byte conventions (what the dist backend logs, reproduced here):
+
+=================  =====================================================
+op                 logged ``nbytes``
+=================  =====================================================
+``all_gather``     bytes *received* per rank, ``chunk * (n-1)``
+``reduce_scatter`` bytes *sent* per rank over the ring, ``full*(n-1)/n``
+``psum``/``pmax``  the full reduced tensor (all-reduce)
+``ring_rs_ag``     the full tensor of the bucketed ring all-reduce
+``all_to_all``     bytes *sent* per rank to the others, ``full*(n-1)/n``
+other              treated as a point-to-point send of ``nbytes``
+=================  =====================================================
+
+Expansion algorithms: ``"ring"`` (default — ``n-1`` neighbor rounds for
+AG/RS/A2A, ``2(n-1)`` for all-reduce = RS+AG) or
+``"recursive_doubling"`` (``log2 n`` pairwise-exchange rounds; group
+sizes must be powers of two).  Rounds serialize — round ``r+1``'s
+transfers start after round ``r``'s longest sender has issued all its
+bursts plus a latency slack — and ledger entries serialize after one
+another (the trace is the step's sequential program order), with an
+optional ``compute_ns`` gap between entries converted through
+``cycle_time_ns``.
+
+Rank -> tile mapping: ``mapping=None`` treats the whole mesh as one
+group for every entry (all R tiles participate in each collective);
+``mapping={"data": 2, "model": 4}`` lays the 8 ranks out row-major on
+tiles 0..7, and an entry over ``("model",)`` runs 2 concurrent
+4-rank groups (one per data index) — the axes a collective names select
+which mesh dimensions it spans, exactly like ``shard_map``.
+
+Multi-stream replay: each entry's transactions all ride ONE AXI ID
+stream of their class, chosen round-robin per class
+(``entry_counter % n_streams``) — consecutive collectives of a class
+land on different AXI IDs, so with ``TrafficClass(n_streams>1)`` a slow
+bulk collective no longer false-serializes the next one in the ROB
+(the journal version's parallel multi-stream case).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from .spec import NocSpec
+from .workload import BIG, register_pattern
+
+__all__ = ["EXPANDERS", "register_expander", "expand_collective",
+           "ledger_schedules", "ledger_replay"]
+
+# op name -> expander(n, nbytes, algorithm) -> rounds, each round a list
+# of (src_local, dst_local, move_bytes) link moves within an n-rank group
+EXPANDERS: dict[str, Callable] = {}
+
+
+def register_expander(*ops: str):
+    def deco(fn):
+        for op in ops:
+            EXPANDERS[op] = fn
+        return fn
+    return deco
+
+
+def _chunk(nbytes: int, parts: int) -> int:
+    return max(1, -(-int(nbytes) // parts))
+
+
+def _check_pow2(n: int, op: str) -> int:
+    k = n.bit_length() - 1
+    if (1 << k) != n:
+        raise ValueError(
+            f"recursive_doubling expansion of {op!r} needs a power-of-two "
+            f"group, got n={n}; use algorithm='ring'")
+    return k
+
+
+@register_expander("all_gather")
+def _ag(n: int, nbytes: int, algorithm: str):
+    # logged nbytes = chunk * (n-1) received per rank
+    if algorithm == "ring":
+        c = _chunk(nbytes, n - 1)
+        return [[(i, (i + 1) % n, c) for i in range(n)]
+                for _ in range(n - 1)]
+    k = _check_pow2(n, "all_gather")
+    c = _chunk(nbytes, n - 1)
+    return [[(i, i ^ (1 << r), c * (1 << r)) for i in range(n)]
+            for r in range(k)]
+
+
+@register_expander("reduce_scatter")
+def _rs(n: int, nbytes: int, algorithm: str):
+    # logged nbytes = full * (n-1)/n sent per rank over the ring
+    if algorithm == "ring":
+        c = _chunk(nbytes, n - 1)
+        return [[(i, (i + 1) % n, c) for i in range(n)]
+                for _ in range(n - 1)]
+    k = _check_pow2(n, "reduce_scatter")
+    full = int(nbytes) * n // max(n - 1, 1)
+    return [[(i, i ^ (1 << r), _chunk(full, 2 << r)) for i in range(n)]
+            for r in range(k)]
+
+
+@register_expander("psum", "pmax", "ring_rs_ag", "all_reduce")
+def _ar(n: int, nbytes: int, algorithm: str):
+    # logged nbytes = the full reduced tensor; ring all-reduce is
+    # RS (n-1 rounds) then AG (n-1 rounds) of full/n chunks
+    if algorithm == "ring":
+        c = _chunk(nbytes, n)
+        return [[(i, (i + 1) % n, c) for i in range(n)]
+                for _ in range(2 * (n - 1))]
+    k = _check_pow2(n, "all_reduce")
+    return [[(i, i ^ (1 << r), int(nbytes)) for i in range(n)]
+            for r in range(k)]
+
+
+@register_expander("all_to_all")
+def _a2a(n: int, nbytes: int, algorithm: str):
+    # logged nbytes = full * (n-1)/n sent per rank; full exchange in
+    # n-1 src-staggered rounds (rank i's round-r partner is i+1+r)
+    c = _chunk(nbytes, n - 1)
+    return [[(i, (i + 1 + r) % n, c) for i in range(n)]
+            for r in range(n - 1)]
+
+
+def _p2p(n: int, nbytes: int, algorithm: str):
+    # fallback for ops without a registered expander (ppermute, pipeline
+    # edges, halo sends): one neighbor hop of the logged bytes
+    return [[(i, (i + 1) % n, int(nbytes)) for i in range(n)]]
+
+
+def expand_collective(op: str, n: int, nbytes: int,
+                      algorithm: str = "ring"):
+    """Link moves of one collective over an ``n``-rank group: a list of
+    rounds, each a list of ``(src_local, dst_local, move_bytes)``.
+    Unregistered ops fall back to a point-to-point neighbor send."""
+    if n <= 1 or nbytes <= 0:
+        return []
+    if algorithm not in ("ring", "recursive_doubling"):
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; have 'ring', "
+            f"'recursive_doubling'")
+    return EXPANDERS.get(op, _p2p)(int(n), int(nbytes), algorithm)
+
+
+# --------------------------------------------------------------------- #
+# rank -> tile mapping
+# --------------------------------------------------------------------- #
+def _norm_mapping(spec: NocSpec, mapping) -> tuple[tuple[str, int], ...]:
+    if mapping is None:
+        return ()
+    items = (tuple(mapping.items()) if isinstance(mapping, Mapping)
+             else tuple((str(a), int(s)) for a, s in mapping))
+    if len({a for a, _ in items}) != len(items):
+        raise ValueError(f"mapping has duplicate axes: {items}")
+    total = math.prod(s for _, s in items) if items else 1
+    if any(s < 1 for _, s in items) or total > spec.n_routers:
+        raise ValueError(
+            f"mapping {items} needs {total} tiles but the "
+            f"{spec.nx}x{spec.ny} mesh has {spec.n_routers}")
+    return items
+
+
+def _groups(spec: NocSpec, mapping: tuple[tuple[str, int], ...],
+            axes: tuple[str, ...]) -> list[list[int]]:
+    """Tile groups one collective over ``axes`` runs on: ranks laid out
+    row-major over the mapping's axis order, one group per combination
+    of the non-collective axes."""
+    if not mapping:
+        return [list(range(spec.n_routers))]
+    names = [a for a, _ in mapping]
+    sizes = [s for _, s in mapping]
+    for a in axes:
+        if a not in names:
+            raise ValueError(
+                f"collective axis {a!r} not in mapping axes {names}; "
+                f"pass mapping={{...}} covering every ledger axis")
+    coll = [names.index(a) for a in axes]
+    fixed = [i for i in range(len(names)) if i not in coll]
+    grid = np.arange(math.prod(sizes)).reshape(sizes)
+    # move collective axes last, flatten the fixed axes into groups
+    perm = fixed + coll
+    g = np.transpose(grid, perm).reshape(
+        -1, math.prod(sizes[i] for i in coll) if coll else 1)
+    return [list(map(int, row)) for row in g if len(row) > 1]
+
+
+# --------------------------------------------------------------------- #
+# schedule synthesis
+# --------------------------------------------------------------------- #
+def ledger_schedules(spec: NocSpec, entries: Sequence[tuple], *,
+                     cycle_time_ns: float = 1.0, mapping=None,
+                     algorithm: str = "ring", scale: float = 1.0,
+                     as_writes: bool = True, compute_ns: float = 0.0,
+                     start: int = 10, round_slack: int | None = None
+                     ) -> dict[str, tuple]:
+    """Convert ledger entries ``(phase, op, axes, nbytes, cls)`` into
+    per-class ``(times, dests, writes, streams)`` schedule 4-tuples.
+
+    ``scale`` multiplies every entry's bytes (shrink production-sized
+    tensors to simulable burst counts); ``as_writes`` issues the
+    transfers as AXI writes (AW/W/B — the DMA-push shape of PATRONoC
+    traffic) instead of reads; ``compute_ns / cycle_time_ns`` cycles of
+    compute separate consecutive entries; ``round_slack`` (default:
+    class service latency + mesh diameter) pads each round for the
+    in-flight tail before the next round's dependent transfers begin."""
+    if cycle_time_ns <= 0:
+        raise ValueError(f"cycle_time_ns must be > 0, got {cycle_time_ns}")
+    if scale <= 0:
+        raise ValueError(f"scale must be > 0, got {scale}")
+    mapping = _norm_mapping(spec, mapping)
+    R = spec.n_routers
+    rows: dict[str, list[list[tuple[int, int, int, int]]]] = {
+        c.name: [[] for _ in range(R)] for c in spec.classes}
+    counters = {c.name: 0 for c in spec.classes}
+    gap_cycles = max(0, int(round(float(compute_ns) / cycle_time_ns)))
+    now = int(start)
+    for e in entries:
+        phase, op, axes, nbytes, cls_name = e[0], e[1], tuple(e[2]), \
+            int(e[3]), e[4]
+        spec.class_index(cls_name)      # typed against declared classes
+        cls = spec.get_class(cls_name)
+        nbytes = max(1, int(round(nbytes * scale))) if nbytes > 0 else 0
+        groups = _groups(spec, mapping, axes)
+        if not groups or nbytes <= 0:
+            continue
+        stream = counters[cls_name] % cls.n_streams
+        counters[cls_name] += 1
+        burst_bytes = max(1, cls.burst_beats * cls.payload_bits // 8)
+        gap = cls.burst_beats
+        sl = (spec.service_lat if cls.service_lat is None
+              else cls.service_lat)
+        slack = (sl + spec.nx + spec.ny if round_slack is None
+                 else int(round_slack))
+        # every group of this entry has the same size, so one expansion
+        # serves all of them (groups differ only in their tile sets)
+        rounds = expand_collective(op, len(groups[0]), nbytes, algorithm)
+        wr = 1 if as_writes else 0
+        for moves in rounds:
+            round_txns = 0
+            for src_l, dst_l, mbytes in moves:
+                txns = -(-int(mbytes) // burst_bytes)
+                round_txns = max(round_txns, txns)
+                for g in groups:
+                    src, dst = g[src_l], g[dst_l]
+                    if src == dst:
+                        continue
+                    r = rows[cls_name][src]
+                    for j in range(txns):
+                        r.append((now + j * gap, dst, wr, stream))
+            now += round_txns * gap + slack
+        now += gap_cycles
+    out = {}
+    for c in spec.classes:
+        rr = rows[c.name]
+        T = max(1, max(len(r) for r in rr))
+        t = np.full((R, T), BIG, np.int32)
+        d = np.zeros((R, T), np.int32)
+        w = np.zeros((R, T), np.int32)
+        s = np.zeros((R, T), np.int32)
+        for src, r in enumerate(rr):
+            r.sort(key=lambda m: m[0])
+            for j, (tt, dd, ww, ss) in enumerate(r):
+                t[src, j], d[src, j], w[src, j], s[src, j] = tt, dd, ww, ss
+        out[c.name] = (t, d, w, s)
+    return out
+
+
+@register_pattern("ledger_replay")
+def ledger_replay(spec: NocSpec, *, entries: Sequence[tuple] = (),
+                  cycle_time_ns: float = 1.0, mapping=(),
+                  algorithm: str = "ring", scale: float = 1.0,
+                  as_writes: bool = True, compute_ns: float = 0.0,
+                  start: int = 10, round_slack: int | None = None) -> dict:
+    """The :class:`~repro.noc.workload.Workload` pattern behind
+    :meth:`Workload.from_ledger` — parameters as frozen tuples so replay
+    workloads hash/sweep like any other pattern."""
+    return ledger_schedules(
+        spec, entries, cycle_time_ns=cycle_time_ns,
+        mapping=tuple(mapping) or None, algorithm=algorithm, scale=scale,
+        as_writes=as_writes, compute_ns=compute_ns, start=start,
+        round_slack=round_slack)

@@ -9,6 +9,20 @@ the slot), destinations, and a per-slot *write* flag — a write slot
 issues an AXI write transaction (AW -> W burst -> B ack) instead of a
 read (AR -> R burst).
 
+Schedule tuple compatibility (3-tuple -> 4-tuple rule): a pattern may
+return per class
+
+* ``(times, dests)``                   — all-reads, single stream,
+* ``(times, dests, writes)``           — the pre-stream form; on a
+  class with ``n_streams > 1`` the entries are dealt round-robin
+  across its AXI ID streams by :func:`repro.noc.stack_schedules`,
+* ``(times, dests, writes, streams)``  — ``streams`` pins each entry's
+  AXI ID stream explicitly (ints in ``[0, n_streams)``).
+
+All three forms stay accepted everywhere a schedule mapping is taken
+(``simulate_schedules``, ``stack_schedules``, custom patterns);
+single-stream classes are bit-identical under every form.
+
 Every pattern takes ``write_frac`` (one float for all classes or a
 per-class mapping): the fraction of each class's transactions that are
 writes.  Deterministic patterns interleave writes evenly and
@@ -93,12 +107,47 @@ class Workload:
     def kwargs(self) -> dict[str, Any]:
         return {k: _thaw(v) for k, v in self.params}
 
-    def schedules(self, spec: NocSpec) -> dict[str, tuple[np.ndarray,
-                                                          np.ndarray,
-                                                          np.ndarray]]:
-        """Per-class (times, dests, writes) arrays, one entry per
-        declared class; ``writes`` marks the slots that issue AXI write
-        transactions (AW/W/B) instead of reads (AR/R)."""
+    @classmethod
+    def from_ledger(cls, ledger, spec: NocSpec, *,
+                    cycle_time_ns: float = 1.0, mapping=None,
+                    **kw) -> "Workload":
+        """Replay a ``repro.dist`` collective :class:`~repro.core.
+        channels.Ledger` (a :class:`~repro.dist.step.StepArtifact`'s
+        trace-time byte record) as NoC traffic on ``spec``'s topology.
+
+        Each entry's collective is expanded into its link-level
+        transfers (ring or recursive-doubling — see
+        :mod:`repro.noc.traces`), ranks are laid onto tiles via
+        ``mapping`` (``None`` = the whole mesh is one group;
+        ``{"data": 2, "model": 4}`` = row-major rank grid with
+        concurrent groups per non-collective axis), and consecutive
+        same-class collectives round-robin across the class's AXI ID
+        streams.  Extra keywords (``algorithm``, ``scale``,
+        ``as_writes``, ``compute_ns``, ``start``, ``round_slack``) pass
+        through to :func:`repro.noc.traces.ledger_schedules`.
+
+        ``simulate(spec, Workload.from_ledger(art.ledger, spec))`` is
+        the one-call real-workload experiment."""
+        from . import traces  # deferred: registers "ledger_replay"
+        entries = tuple(
+            (e.phase, e.op, tuple(e.axes), int(e.nbytes),
+             e.traffic_class) for e in ledger.entries)
+        mapping_t = (tuple(mapping.items()) if isinstance(mapping, Mapping)
+                     else tuple(mapping) if mapping is not None else ())
+        wl = cls.make("ledger_replay", entries=entries,
+                      cycle_time_ns=float(cycle_time_ns),
+                      mapping=mapping_t, **kw)
+        traces.ledger_schedules(  # validate eagerly against this spec
+            spec, entries, cycle_time_ns=float(cycle_time_ns),
+            mapping=mapping_t or None, **kw)
+        return wl
+
+    def schedules(self, spec: NocSpec) -> dict[str, tuple]:
+        """Per-class ``(times, dests, writes[, streams])`` arrays, one
+        entry per declared class; ``writes`` marks the slots that issue
+        AXI write transactions (AW/W/B) instead of reads (AR/R), and
+        the optional ``streams`` element pins per-entry AXI ID streams
+        (see the module docstring's 3-tuple -> 4-tuple rule)."""
         out = PATTERNS[self.pattern](spec, **self.kwargs)
         for name in out:
             spec.class_index(name)      # typed against declared classes
