@@ -1,2 +1,2 @@
 """FlooNoC-derived communication core (see DESIGN.md §2)."""
-from . import channels, flit, ni, routing  # noqa: F401
+from . import channels, collectives, flit, ni  # noqa: F401

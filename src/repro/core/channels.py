@@ -15,16 +15,15 @@ bulk; `benchmarks/channels_ablation.py` reproduces the software analogue.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from . import flit, routing
+from . import collectives, flit
 
 WIDE = "wide"
 NARROW = "narrow"
@@ -257,7 +256,7 @@ def multi_channel_all_reduce(
             reduced = {}
             for k, v in payload.items():
                 vp, n = flit.pad_to(v, total * (2 if bidir else 1))
-                r = routing.dim_ordered_all_reduce(vp, axes, dim=0,
+                r = collectives.dim_ordered_all_reduce(vp, axes, dim=0,
                                                    bidir=bidir)
                 reduced[k] = r[:n]
                 if ledger is not None:

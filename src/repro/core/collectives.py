@@ -16,10 +16,13 @@ This is the FlooNoC router/link layer adapted to a TPU mesh (DESIGN.md §2):
 All functions are static-shape, unrolled (n-1 ppermute steps appear in the
 HLO, which makes the roofline collective-byte accounting exact), and are
 valid inside ``jax.shard_map`` only.
+
+(Formerly ``repro.core.routing`` — renamed so the NoC fabric routing
+subsystem :mod:`repro.noc.routing` owns that name; this module is TPU
+ring *collectives*, not route-table generation.)
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

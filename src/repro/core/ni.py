@@ -15,19 +15,19 @@ flight to hide latency. The SPMD analogue:
 
 The paper's ROB bypass rule (deterministic routing => same-destination
 responses arrive in order) is what makes the static ring schedules of
-``core/routing.py`` legal with *zero* reordering logic: XLA program order is
+``core/collectives.py`` legal with *zero* reordering logic: XLA program order is
 the deterministic route.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from . import routing
+from . import collectives
 
 
 @dataclass(frozen=True)
@@ -131,7 +131,7 @@ def chunked_all_reduce(
     for _, s in axes:
         total *= s
     if total == 1 or chunks <= 1:
-        return routing.dim_ordered_all_reduce(x, axes, dim=0, bidir=bidir)
+        return collectives.dim_ordered_all_reduce(x, axes, dim=0, bidir=bidir)
     n = x.shape[0]
     per = -(-n // chunks)
     per += (-per) % (total * (2 if bidir else 1))   # flit-align each chunk
@@ -139,7 +139,7 @@ def chunked_all_reduce(
     xp = jnp.pad(x, (0, pads)) if pads else x
     parts = [lax.dynamic_slice_in_dim(xp, i * per, per) for i in range(chunks)]
     thunks = [
-        (lambda p=p: routing.dim_ordered_all_reduce(p, axes, dim=0, bidir=bidir))
+        (lambda p=p: collectives.dim_ordered_all_reduce(p, axes, dim=0, bidir=bidir))
         for p in parts
     ]
     outs = windowed_transactions(thunks, window)

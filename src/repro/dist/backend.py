@@ -2,7 +2,7 @@
 
 Every cross-device byte of a train/prefill/decode step goes through one
 of these methods, which (a) dispatches to the FlooNoC software
-collectives (``core/routing.py`` dimension-ordered rings) or the plain
+collectives (``core/collectives.py`` dimension-ordered rings) or the plain
 XLA primitives depending on ``cfg.backend``, and (b) records the
 transfer in the collective :class:`~repro.core.channels.Ledger` with
 its traffic class — the paper's narrow/wide separation applied to a
@@ -28,7 +28,7 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import MeshConfig, RunConfig
-from ..core import channels, flit, routing
+from ..core import channels, collectives, flit
 from ..core.channels import Ledger, NARROW, WIDE
 
 
@@ -49,7 +49,7 @@ def _nbytes(x: jax.Array) -> int:
 # argmax stabilization, so its input gradient is dropped by design —
 # and must be, because jax has no JVP rule for pmax.
 # ---------------------------------------------------------------------------
-from functools import partial as _partial
+from functools import partial as _partial  # noqa: E402
 
 
 @_partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -119,7 +119,7 @@ class Backend:
         self._log("all_gather", ("model",), _nbytes(x) * (n - 1), WIDE,
                   f"seq AG dim={dim}")
         if self.is_floo:
-            return routing.ring_all_gather(x, "model", n, dim=dim,
+            return collectives.ring_all_gather(x, "model", n, dim=dim,
                                            bidir=self.cfg.bidir_rings)
         return lax.all_gather(x, "model", axis=dim, tiled=True)
 
@@ -131,7 +131,7 @@ class Backend:
         self._log("reduce_scatter", ("model",),
                   _nbytes(x) * (n - 1) // n, WIDE, f"seq RS dim={dim}")
         if self.is_floo:
-            return routing.ring_reduce_scatter(x, "model", n, dim=dim,
+            return collectives.ring_reduce_scatter(x, "model", n, dim=dim,
                                                bidir=self.cfg.bidir_rings)
         return lax.psum_scatter(x, "model", scatter_dimension=dim, tiled=True)
 
@@ -156,7 +156,7 @@ class Backend:
             return x
         self._log("all_to_all", ("model",), _nbytes(x) * (n - 1) // n, WIDE,
                   "MoE dispatch")
-        return routing.all_to_all(x, "model", split_dim=split_dim,
+        return collectives.all_to_all(x, "model", split_dim=split_dim,
                                   concat_dim=concat_dim)
 
     # -- DP (data-axis) reductions (split-KV decode combine) ----------------
@@ -191,7 +191,7 @@ class Backend:
         self._log("all_gather", names, _nbytes(x) * (total - 1), WIDE,
                   f"FSDP param AG dim={dim}")
         if self.is_floo:
-            return routing.dim_ordered_all_gather(x, axes, dim=dim,
+            return collectives.dim_ordered_all_gather(x, axes, dim=dim,
                                                   bidir=self.cfg.bidir_rings)
         return lax.all_gather(x, names, axis=dim, tiled=True)
 

@@ -7,12 +7,10 @@ TP-MoE paths. Grid = (E, C-tiles, f-tiles) with (d)-full VMEM tiles; each
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, w_ref, o_ref):

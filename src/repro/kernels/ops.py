@@ -8,7 +8,6 @@ interpret mode on CPU (used by the kernel test suite).
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

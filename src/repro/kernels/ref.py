@@ -6,7 +6,6 @@ TPU kernels without materializing O(S^2) intermediates.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

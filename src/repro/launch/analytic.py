@@ -10,7 +10,6 @@ TPU memory hierarchy.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 from ..configs.base import ModelConfig, RunConfig, ShapeConfig
 

@@ -16,19 +16,17 @@ Usage:
   python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
   python -m repro.launch.dryrun --arch X --shape Y --multipod --backend xla
 """
-import argparse
-import json
-import time
-import traceback
-from pathlib import Path
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
 
-import jax
-import numpy as np
 
-from ..configs import ARCHS, SHAPES, applicable, get_arch, get_shape
-from ..configs.base import MeshConfig, RunConfig
-from . import analytic, roofline
-from .mesh import make_mesh_from_config, production_mesh_config
+from ..configs import ARCHS, SHAPES, applicable, get_arch, get_shape  # noqa: E402
+from ..configs.base import RunConfig  # noqa: E402
+from . import analytic, roofline  # noqa: E402
+from .mesh import make_mesh_from_config, production_mesh_config  # noqa: E402
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 

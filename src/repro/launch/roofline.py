@@ -22,7 +22,6 @@ Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -16,13 +16,11 @@ Traffic classes: seq AG/RS and param AG are wide; all psums here are narrow.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig, RunConfig

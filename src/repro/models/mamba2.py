@@ -11,18 +11,14 @@ State caches for decode: conv state (B, W-1, conv_ch_loc) + SSD state
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig, RunConfig
 from ..dist.backend import Backend
-from ..dist.params import ParamSpec
 from ..kernels import ops
-from .layers import cdtype, pad_mult, wspec
+from .layers import pad_mult, wspec
 
 
 def ssm_dims(cfg: RunConfig, mcfg: ModelConfig):

@@ -17,7 +17,6 @@ residual path still carries them). Aux: load-balance loss + router z-loss.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,6 @@ import numpy as np
 
 from ..configs.base import ModelConfig, RunConfig
 from ..dist.backend import Backend
-from ..dist.params import ParamSpec
 from .layers import cdtype, wspec
 
 

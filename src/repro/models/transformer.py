@@ -21,18 +21,15 @@ replicated over `model` and reduces partial outputs with narrow psums.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ModelConfig, RunConfig, ShapeConfig
 from ..dist.backend import Backend
 from ..dist.params import ParamSpec
-from ..kernels import ops
 from . import layers as L
 from . import mamba2, moe as moe_mod
 from .layers import HeadPlan, cdtype
@@ -443,7 +440,6 @@ class Model:
         dt = jnp.dtype(cfg.compute_dtype)
         if split_kv is None:
             split_kv = self._auto_split_kv(shape)
-        batch_spec = P() if split_kv else P(dpx)
 
         if shape.kind in ("train", "prefill"):
             sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}

@@ -26,6 +26,14 @@ vmap over rates/seeds/latency distributions in one jit
 flow-agnostic backend (``backends.list_backends()``) behind the
 identical surface — every backend is flit-for-flit equivalent,
 including on mixed read/write traffic.
+
+Static verification (``repro.noc.analyze``): ``analyze(spec)`` proves
+or refutes deadlock freedom from the compiled route tables (Dally
+channel-dependency graph over (link, VC) channels), lints the AXI
+flow->channel protocol order and ROB/credit budgets, and reports named
+route-table checks; ``simulate(..., verify="full")`` rejects
+deadlock-prone specs before stepping, and ``python -m
+repro.noc.analyze --all-presets`` is the CI gate.
 """
 from .api import (jitter_table, simulate, simulate_batch,  # noqa: F401
                   simulate_schedules, stack_schedules, sweep)
@@ -42,3 +50,20 @@ from .topology import (Mesh, Topology, Torus, hop_table,  # noqa: F401
 from .traces import (EXPANDERS, expand_collective,  # noqa: F401
                      ledger_schedules, register_expander)
 from .workload import PATTERNS, Workload, register_pattern  # noqa: F401
+
+# repro.noc.analyze exports resolve lazily (PEP 562): the analyzer is
+# only needed when a spec is constructed or verified, and keeping it
+# out of the eager package import lets `python -m repro.noc.analyze`
+# run as __main__ without a runpy double-import warning.  The name
+# ``analyze`` resolves to the submodule (whose main entry point is
+# ``analyze.analyze(spec)``), never a shadowing function.
+_ANALYZE_EXPORTS = ("AnalysisError", "AnalysisReport", "CheckResult",
+                    "analyze_routing", "check_protocol", "verify_spec")
+
+
+def __getattr__(name: str):
+    if name == "analyze" or name in _ANALYZE_EXPORTS:
+        from importlib import import_module
+        mod = import_module(".analyze", __name__)
+        return mod if name == "analyze" else getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,794 @@
+"""Spec-time static verification of NoC configurations.
+
+PR 5 discovered the VC-less torus deadlock only by watching a
+simulation wedge (``max_stall_cycles`` ~ horizon, ``drained=False``);
+PR 6 fixed it dynamically with escape-VC datelines.  This module turns
+that from "simulate and hope it drains" into "reject bad specs at
+construction time": a pure-numpy static-analysis pass over the
+artifacts the simulator already compiles — the
+:class:`~repro.noc.routing.RoutingPolicy`'s VC-expanded
+:class:`~repro.noc.routing.RouteTables`, the topology nbr/opp tables,
+and the :class:`~repro.noc.spec.NocSpec` flow map — with three
+verifier families:
+
+**Routing deadlock** (``family="routing"``).  The channel-dependency
+graph (Dally & Seitz): one node per *(link, VC)* — a virtual-port
+input buffer — and one edge per consecutive channel pair along any
+(src, dest, plane) route walk.  Route tables are *functional* (exactly
+one (port, VC) per (router, virtual destination)), so the dependency
+set is enumerated exactly, not sampled, and Dally's condition is both
+necessary and sufficient: a cycle among used dependencies is a real
+cyclic wait some saturating wormhole workload can close.  The
+escape-VC discipline is visible to this analysis precisely because VC
+selection is baked into the tables — the dateline policy's wrap links
+deliver into the escape VC, which removes the ring cycle from the CDG
+itself (a link-level graph that ignored VCs would wrongly flag
+``xy(n_vcs=2)`` on the torus).  When a cycle IS found, the analyzer
+still checks Duato's escape condition before calling it fatal: a cycle
+is non-fatal only if some flow on it has an alternative next channel
+outside the cycle's strongly-connected component; with functional
+tables there are none, so the check documents *why* the cycle cannot
+be escaped and suggests the policy that removes it (e.g.
+``RoutingPolicy.xy(n_vcs=2)``).
+
+**Protocol / message deadlock** (``family="protocol"``).  AXI imposes
+a message-dependency order (R answers AR, B answers the last W beat);
+a class_map that parks a response flow behind its own request flow on
+a shared channel can deadlock a hardware NI with finite response
+buffering.  This engine's NI sinks deliveries unconditionally and
+round-robins mixed channels, so the analyzer *proves* that structure
+from the compiled :class:`~repro.noc.engine.FlowPlan` (every response
+ring drains via dedicated streaming or a round-robin slot — never
+behind a static request priority) and WARNs where the mapping would
+need VC separation on real hardware (shared request/response channel
+with a single VC — the configuration FlooNoC's decoupled-channel
+design exists to avoid).  The credit lint checks ``resp_q_cap``
+conservation against the declared ``max_outstanding`` budgets: FAIL
+when a single (class, direction) stream can overflow a response ring,
+WARN when one source running every class at full tilt can.
+
+**Route-table lint** (``family="lint"``).  The scattered structural
+asserts of :func:`repro.noc.topology.validate_tables` promoted into
+named, individually-reportable checks (sentinel headroom, local-port
+structure, duplex links, route structure, termination), plus
+reachability of every (src, dest, plane) triple, per-plane minimality
+against BFS distances (detour planes report their stretch instead),
+base-hop-table consistency, and dateline-bit monotonicity along wrap
+rings (the VC of a route never steps back down within one
+dimension ring — the walk-level statement of the escape-VC proof).
+
+Everything lands in a frozen :class:`AnalysisReport` (verdict per
+check, offending coordinates such as the CDG cycle's ``((u, v), vc)``
+links, suggested fix).  Threading through the stack:
+
+* ``NocSpec`` validation runs the cheap protocol checks at
+  construction (FAILs raise :class:`AnalysisError` immediately),
+* ``simulate(..., verify="full"|"fast"|"off")`` gates the expensive
+  CDG pass — lru-cached per (topology, routing), so one rejection or
+  proof serves every spec sharing the fabric,
+* ``SimResult.summary()`` attaches a one-line analyzer verdict to any
+  undrained run (wedges are self-diagnosing),
+* ``python -m repro.noc.analyze`` prints reports for any
+  preset/policy combination, and ``--all-presets`` is the CI gate: it
+  asserts the PR-5 VC-less torus wedge is flagged with a concrete
+  cycle while every committed preset/policy passes.
+
+The analyzer proves *deadlock* freedom, not starvation freedom: the
+drain rule's strict escape-VC priority can delay (never indefinitely
+block) low-VC traffic, and finite schedules always retire.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import sys
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .routing import RoutingPolicy, RouteTables
+from .spec import NocSpec
+from .topology import Mesh, Topology, Torus, hop_table, run_table_checks
+
+__all__ = ["CheckResult", "AnalysisReport", "AnalysisError", "analyze",
+           "analyze_routing", "check_protocol", "verify_spec", "main"]
+
+PASS, WARN, FAIL = "PASS", "WARN", "FAIL"
+_RANK = {PASS: 0, WARN: 1, FAIL: 2}
+
+
+@dataclass(frozen=True)
+class CheckResult:
+    """One named verifier outcome.
+
+    ``coords`` carries the offending coordinates in the check's own
+    vocabulary — for ``cdg_acyclic`` the cycle as ``((u, v), vc)``
+    link/VC pairs, for table lint the first offending (router, port) or
+    (src, dest, plane) triple, for credit lint the (channel, class,
+    flow) feeder.  ``suggestion`` is a concrete fix when one exists
+    (e.g. ``RoutingPolicy.xy(n_vcs=2)``)."""
+    name: str
+    family: str                   # "routing" | "protocol" | "lint"
+    verdict: str                  # PASS | WARN | FAIL
+    detail: str
+    coords: tuple = ()
+    suggestion: str = ""
+
+
+@dataclass(frozen=True)
+class AnalysisReport:
+    """Machine-readable result of one spec analysis."""
+    subject: str
+    checks: tuple[CheckResult, ...]
+    level: str = "full"
+
+    @property
+    def verdict(self) -> str:
+        worst = PASS
+        for c in self.checks:
+            if _RANK[c.verdict] > _RANK[worst]:
+                worst = c.verdict
+        return worst
+
+    @property
+    def ok(self) -> bool:
+        """No FAIL — WARNs are advisory, not rejections."""
+        return self.verdict != FAIL
+
+    @property
+    def failures(self) -> tuple[CheckResult, ...]:
+        return tuple(c for c in self.checks if c.verdict == FAIL)
+
+    def __getitem__(self, name: str) -> CheckResult:
+        for c in self.checks:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def summary_line(self) -> str:
+        """One line: the verdict, and the worst check when not PASS."""
+        if self.verdict == PASS:
+            return f"PASS ({len(self.checks)} checks) — {self.subject}"
+        worst = next(c for c in self.checks if c.verdict == self.verdict)
+        fix = f"; fix: {worst.suggestion}" if worst.suggestion else ""
+        return (f"{self.verdict} {worst.family}/{worst.name} — "
+                f"{worst.detail}{fix}")
+
+    def render(self) -> str:
+        lines = [f"spec: {self.subject}"]
+        for c in self.checks:
+            lines.append(f"  [{c.verdict:<4}] {c.family}/{c.name:<24} "
+                         f"{c.detail}")
+            if c.coords:
+                lines.append(f"          at: {c.coords}")
+            if c.suggestion:
+                lines.append(f"          fix: {c.suggestion}")
+        lines.append(f"verdict: {self.verdict}")
+        return "\n".join(lines)
+
+
+class AnalysisError(ValueError):
+    """A spec failed static verification; ``.report`` has the details."""
+
+    def __init__(self, report: AnalysisReport):
+        self.report = report
+        fails = "; ".join(f"{c.family}/{c.name}: {c.detail}"
+                          + (f" (fix: {c.suggestion})" if c.suggestion
+                             else "")
+                          for c in report.failures)
+        super().__init__(
+            f"static verification rejected {report.subject}: {fails}")
+
+
+# --------------------------------------------------------------------- #
+# family 1: routing deadlock — the channel-dependency graph
+# --------------------------------------------------------------------- #
+def _chan_coords(rt: RouteTables, cid: int) -> tuple[tuple[int, int], int]:
+    """Channel id -> ((src_router, dst_router), vc)."""
+    V = rt.n_vcs
+    n_phys = rt.n_base_ports - 1
+    u, rem = divmod(cid, n_phys * V)
+    p, vc = divmod(rem, V)
+    return (u, int(rt.nbr[u, p * V])), vc
+
+
+def _cdg_edges(rt: RouteTables) -> tuple[np.ndarray, np.ndarray]:
+    """Exact channel-dependency edge set over (link, VC) channels.
+
+    Channel id of virtual port ``q`` at router ``u`` is
+    ``(u * n_phys + q // V) * V + q % V``.  For every (router ``u``,
+    virtual destination ``j``) with ``u != dest(j)`` the functional
+    route table names ONE outgoing channel; if the next router is not
+    the destination either, the pair of consecutive channels is a
+    dependency.  Returns ``(edges (E, 2) channel-id pairs, labels (E,)
+    inducing virtual destination)`` — deduplicated, one representative
+    label per edge.
+    """
+    R, n_vd = rt.route.shape
+    V = rt.n_vcs
+    n_phys = rt.n_base_ports - 1
+    dest = np.arange(n_vd) % R
+    u = np.repeat(np.arange(R), n_vd).reshape(R, n_vd)
+    j = np.tile(np.arange(n_vd), (R, 1))
+    m0 = u != dest[None, :]
+    q1 = rt.route
+    r1 = rt.nbr[u, np.where(m0, q1, 0)]             # next router
+    m1 = m0 & (r1 != dest[None, :])
+    q2 = rt.route[np.where(m1, r1, 0), j]
+    c1 = (u * n_phys + q1 // V) * V + q1 % V
+    c2 = (r1 * n_phys + q2 // V) * V + q2 % V
+    edges = np.stack([c1[m1], c2[m1]], axis=1)
+    labels = j[m1]
+    edges, idx = np.unique(edges, axis=0, return_index=True)
+    return edges, labels[idx]
+
+
+def _sccs(n: int, adj: list[list[int]]) -> list[list[int]]:
+    """Iterative Tarjan strongly-connected components."""
+    index = [-1] * n
+    low = [0] * n
+    onstk = [False] * n
+    stack: list[int] = []
+    sccs: list[list[int]] = []
+    counter = 0
+    for root in range(n):
+        if index[root] >= 0:
+            continue
+        work = [(root, 0)]
+        while work:
+            v, pi = work[-1]
+            if pi == 0:
+                index[v] = low[v] = counter
+                counter += 1
+                stack.append(v)
+                onstk[v] = True
+            descended = False
+            for i in range(pi, len(adj[v])):
+                w = adj[v][i]
+                if index[w] < 0:
+                    work[-1] = (v, i + 1)
+                    work.append((w, 0))
+                    descended = True
+                    break
+                if onstk[w]:
+                    low[v] = min(low[v], index[w])
+            if descended:
+                continue
+            if low[v] == index[v]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    onstk[w] = False
+                    scc.append(w)
+                    if w == v:
+                        break
+                sccs.append(scc)
+            work.pop()
+            if work:
+                low[work[-1][0]] = min(low[work[-1][0]], low[v])
+    return sccs
+
+
+def _extract_cycle(scc: list[int], adj_map: dict[int, list[int]]) -> list[int]:
+    """A concrete cycle inside one nontrivial SCC (node ids, in order)."""
+    inside = set(scc)
+    path, seen = [], {}
+    v = scc[0]
+    while v not in seen:
+        seen[v] = len(path)
+        path.append(v)
+        v = next(w for w in adj_map[v] if w in inside)
+    return path[seen[v]:]
+
+
+def _cdg_check(topology: Topology, routing: RoutingPolicy,
+               rt: RouteTables) -> CheckResult:
+    edges, labels = _cdg_edges(rt)
+    n_chan = rt.nbr.shape[0] * (rt.n_base_ports - 1) * rt.n_vcs
+    adj: list[list[int]] = [[] for _ in range(n_chan)]
+    adj_map: dict[int, list[int]] = {}
+    for (a, b) in edges:
+        adj[a].append(int(b))
+        adj_map.setdefault(int(a), []).append(int(b))
+    bad = [s for s in _sccs(n_chan, adj) if len(s) > 1]
+    bad += [[a] for a, b in edges if a == b]          # self-dependency
+    if not bad:
+        return CheckResult(
+            "cdg_acyclic", "routing", PASS,
+            f"channel-dependency graph acyclic over {len(edges)} "
+            f"dependencies on {n_chan} (link, VC) channels — "
+            "deadlock-free by Dally's condition (routes are "
+            "deterministic, so the condition is exact)")
+    cycle = _extract_cycle(min(bad, key=len), adj_map)
+    coords = tuple(_chan_coords(rt, c) for c in cycle)
+    label_of = {(int(a), int(b)): int(lab)
+                for (a, b), lab in zip(edges, labels)}
+    R = rt.nbr.shape[0]
+    sample = label_of.get((cycle[0], cycle[1 % len(cycle)]), 0)
+    req = routing.required_vcs(topology)
+    if routing.n_vcs < req:
+        args = f"n_vcs={req}"
+        if routing.algorithm == "valiant":
+            args += f", n_valiant={routing.n_valiant}"
+        fix = f"RoutingPolicy.{routing.algorithm}({args})"
+    else:
+        fix = ("restructure the route tables; the declared VC budget "
+               "does not break this cycle")
+    return CheckResult(
+        "cdg_acyclic", "routing", FAIL,
+        f"channel-dependency cycle over {len(cycle)} (link, VC) "
+        f"channels (e.g. induced by routes to router {sample % R}, "
+        f"plane {sample // R}); routes are functional — one (port, VC) "
+        "per (router, dest, plane) — so no escape subnetwork can "
+        "cover it (Duato) and a saturating wormhole workload can "
+        "close the wait cycle",
+        coords=coords, suggestion=fix)
+
+
+# --------------------------------------------------------------------- #
+# family 3: route-table lint (named checks over the compiled tables)
+# --------------------------------------------------------------------- #
+_LINT_OK = {
+    "no_port_sentinel": "port space clear of the NO-ROUTE sentinel",
+    "local_port": "local port is last and carries no link",
+    "duplex_links": "every wired link is duplex",
+    "route_structure": "routes use wired links; local port only at dest",
+    "route_termination": "every route walk terminates",
+}
+
+
+def _bfs_dists(nbr: np.ndarray) -> np.ndarray:
+    """(R, R) shortest-path hop counts over the physical link graph."""
+    R, P = nbr.shape
+    adj = [[int(t) for t in nbr[r, :P - 1] if t >= 0] for r in range(R)]
+    dist = np.full((R, R), -1, np.int64)
+    for s in range(R):
+        dist[s, s] = 0
+        frontier = [s]
+        d = 0
+        while frontier:
+            d += 1
+            nxt = []
+            for v in frontier:
+                for w in adj[v]:
+                    if dist[s, w] < 0:
+                        dist[s, w] = d
+                        nxt.append(w)
+            frontier = nxt
+    return dist
+
+
+def _dateline_check(topology: Topology, rt: RouteTables) -> CheckResult:
+    """VC-of-hop monotonicity within each dimension run of every route:
+    the escape/dateline (or valiant phase) bit may only step up — a
+    downward step would re-enter the cycle-prone low VC after the
+    escape transition, voiding the deadlock-freedom argument."""
+    if rt.n_vcs == 1:
+        return CheckResult(
+            "dateline_monotonicity", "lint", PASS,
+            "n/a (single VC — no escape transition to order)")
+    R = rt.nbr.shape[0]
+    V, K = rt.n_vcs, rt.n_planes
+    for k in range(K):
+        route_k = rt.route[:, k * R:(k + 1) * R]
+        cur = np.tile(np.arange(R)[:, None], (1, R))
+        dd = np.tile(np.arange(R)[None, :], (R, 1))
+        prev_dim = np.full((R, R), -1, np.int64)
+        prev_vc = np.zeros((R, R), np.int64)
+        live = cur != dd
+        for _ in range(4 * R + 4):
+            if not live.any():
+                break
+            q = route_k[cur, dd]
+            phys, vc = q // V, q % V
+            dim = np.where(phys % 4 % 2 == 1, 0, 1)   # E/W: x, N/S: y
+            bad = live & (dim == prev_dim) & (vc < prev_vc)
+            if bad.any():
+                s, d = map(int, np.argwhere(bad)[0])
+                return CheckResult(
+                    "dateline_monotonicity", "lint", FAIL,
+                    f"plane {k}: route {s} -> {d} steps its VC back "
+                    f"down (VC {int(prev_vc[s, d])} -> {int(vc[s, d])} "
+                    f"at router {int(cur[s, d])}) within one dimension "
+                    "ring — the escape transition must be one-way",
+                    coords=(k, s, d, int(cur[s, d])))
+            prev_dim = np.where(live, dim, prev_dim)
+            prev_vc = np.where(live, vc, prev_vc)
+            cur = np.where(live, rt.nbr[cur, q], cur)
+            live = cur != dd
+    return CheckResult(
+        "dateline_monotonicity", "lint", PASS,
+        "VC-of-hop monotone within every dimension run across "
+        f"{K} plane(s) (escape transitions are one-way)")
+
+
+def _lint_checks(topology: Topology, routing: RoutingPolicy,
+                 rt: RouteTables) -> list[CheckResult]:
+    out = []
+    results, hops = run_table_checks(rt.nbr, rt.opp, rt.route)
+    for name, err, coords in results:
+        out.append(CheckResult(
+            name, "lint", FAIL if err else PASS,
+            err or _LINT_OK[name], coords=coords))
+    if hops is None:                  # structural failure: stop linting
+        return out
+    R = rt.nbr.shape[0]
+    K = rt.n_planes
+    out.append(CheckResult(
+        "route_reachability", "lint", PASS,
+        f"all {R}x{R} (src, dest) pairs deliver on every one of "
+        f"{K} plane(s)"))
+
+    dist = _bfs_dists(np.asarray(topology.tables()[0]))
+    off = ~np.eye(R, dtype=bool)
+    minimal_claim = (routing.algorithm in ("xy", "o1turn")
+                     and not getattr(topology, "express", ()))
+    worst = 0.0
+    for k in range(K):
+        hk = hops[:, k * R:(k + 1) * R]
+        if minimal_claim and np.any(hk[off] > dist[off]):
+            s, d = map(int, np.argwhere((hk > dist) & off)[0])
+            out.append(CheckResult(
+                "route_minimality", "lint", FAIL,
+                f"plane {k}: route {s} -> {d} takes {int(hk[s, d])} "
+                f"hops, shortest path is {int(dist[s, d])}",
+                coords=(k, s, d)))
+            break
+        worst = max(worst, float(np.max(hk[off] / dist[off])))
+    else:
+        note = ("minimal (hop counts equal BFS shortest paths)"
+                if minimal_claim else
+                f"non-minimal by design, worst stretch {worst:.2f}x "
+                "over BFS shortest paths")
+        out.append(CheckResult(
+            "route_minimality", "lint", PASS,
+            f"{K} plane(s) {note}"))
+
+    if routing.algorithm in ("xy", "o1turn"):
+        base = hop_table(topology)
+        h0 = hops[:, :R]
+        if np.array_equal(h0, base):
+            out.append(CheckResult(
+                "hop_consistency", "lint", PASS,
+                "plane 0 walk matches the topology's hop table"))
+        else:
+            s, d = map(int, np.argwhere(h0 != base)[0])
+            out.append(CheckResult(
+                "hop_consistency", "lint", FAIL,
+                "plane 0 walk disagrees with hop_table at "
+                f"{s} -> {d}: {int(h0[s, d])} != {int(base[s, d])}",
+                coords=(s, d)))
+    else:
+        out.append(CheckResult(
+            "hop_consistency", "lint", PASS,
+            "n/a (detour planes do not follow the base hop table)"))
+
+    out.append(_dateline_check(topology, rt))
+    return out
+
+
+@functools.lru_cache(maxsize=128)
+def analyze_routing(topology: Topology,
+                    routing: RoutingPolicy) -> tuple[CheckResult, ...]:
+    """Fabric-level verification (CDG + route-table lint) for one
+    (topology, routing) pair — the expensive half, cached so one proof
+    or rejection serves every spec sharing the fabric."""
+    rt = routing.compile(topology)
+    checks = _lint_checks(topology, routing, rt)
+    structural_fail = any(c.verdict == FAIL and c.family == "lint"
+                          and c.name in _LINT_OK for c in checks)
+    if not structural_fail:
+        checks.append(_cdg_check(topology, routing, rt))
+    return tuple(checks)
+
+
+# --------------------------------------------------------------------- #
+# family 2: protocol / message-dependency + credit lint (cheap)
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=256)
+def check_protocol(spec: NocSpec) -> tuple[CheckResult, ...]:
+    """Message-order + ROB/credit checks from the compiled FlowPlan.
+    Cheap (pure-python plan inspection) — NocSpec validation runs this
+    at construction and raises on FAIL."""
+    from .engine import build_flow_plan
+    plan = build_flow_plan(spec)
+    out = []
+
+    # message order: every response ring must drain via dedicated
+    # streaming or a round-robin slot of its channel's injection
+    # policy — never parked behind a static request priority (B waits
+    # on W, R on AR; a starvable response flow would complete the
+    # AR -> R -> ROB-credit -> AR dependency cycle on a hardware NI).
+    starved = []
+    shared = []
+    for q in range(plan.n_rq):
+        c = plan.chan_of_q[q]
+        has_req = bool(plan.singles_on[c] or plan.wqs_on[c])
+        dedicated = not has_req and len(plan.rqs_on[c]) == 1
+        if not (dedicated or q in plan.rqs_on[c]):
+            starved.append((spec.channels[c].name, q))
+        # address flows (AR/AW) on a response channel close the
+        # AR -> R (AW -> B) request/response loop FlooNoC's decoupled
+        # networks break; W data sharing an R channel is the paper's
+        # own wide-channel design (W rings always sink — see the
+        # credit check) and stays PASS
+        if plan.singles_on[c]:
+            shared.append(spec.channels[c].name)
+    if starved:
+        out.append(CheckResult(
+            "message_order", "protocol", FAIL,
+            "response ring(s) not drainable on their channel "
+            f"(starvable behind request flows): {starved}",
+            coords=tuple(starved),
+            suggestion="map the class's R/B flows to a dedicated "
+                       "response channel"))
+    elif shared and spec.routing.n_vcs < 2:
+        cls_notes = []
+        for cls in spec.classes:
+            rsp = {f: spec.flow_map[f"{cls.name}.{f}"] for f in ("r", "b")}
+            req = {f: spec.flow_map[f"{cls.name}.{f}"]
+                   for f in ("ar", "aw")}
+            both = sorted(set(rsp.values()) & set(req.values()))
+            if both:
+                cls_notes.append((cls.name, tuple(both)))
+        out.append(CheckResult(
+            "message_order", "protocol", WARN,
+            "response flows share channel(s) "
+            f"{sorted(set(shared))} with AR/AW request flows at "
+            "n_vcs=1, closing the AR -> R (AW -> B) loop — safe for "
+            "this engine's always-sinking NI (mixed channels "
+            "round-robin), but a hardware NI with finite response "
+            "buffering needs VC separation or FlooNoC's decoupled "
+            "req/rsp channels", coords=tuple(cls_notes),
+            suggestion="give responses their own channel (narrow_wide "
+                       "mapping) or a RoutingPolicy with n_vcs >= 2"))
+    else:
+        out.append(CheckResult(
+            "message_order", "protocol", PASS,
+            "every response ring drains via dedicated streaming or a "
+            "round-robin slot, and no response channel carries AR/AW "
+            "address flows without VC separation — the AXI "
+            "message-dependency order (R after AR, B after W) cannot "
+            "starve (W data sharing an R channel is the paper's wide-"
+            "channel design; W rings always sink)"))
+
+    # credit conservation: resp_q_cap vs the declared ROB budgets.
+    feeders: dict[int, set[tuple[int, str]]] = {}
+    for lane in range(plan.n_cls):
+        ci = plan.cls_of_lane[lane]
+        feeders.setdefault(plan.rq_of_r[lane], set()).add((ci, "r"))
+        feeders.setdefault(plan.rq_of_b[lane], set()).add((ci, "b"))
+    cap = spec.resp_q_cap
+    worst_pair, worst_src = None, None
+    for q, fs in feeders.items():
+        pair = max(spec.classes[ci].max_outstanding for ci, _ in fs)
+        src = sum(spec.classes[ci].max_outstanding for ci, _ in fs)
+        if worst_pair is None or pair > worst_pair[0]:
+            big = max(fs, key=lambda f: spec.classes[f[0]].max_outstanding)
+            worst_pair = (pair, q, big)
+        if worst_src is None or src > worst_src[0]:
+            worst_src = (src, q)
+    n_src = spec.n_routers - 1
+    if worst_pair is not None and cap < worst_pair[0]:
+        pair, q, (ci, fl) = worst_pair
+        ch = spec.channels[plan.chan_of_q[q]].name
+        out.append(CheckResult(
+            "credit_conservation", "protocol", FAIL,
+            f"resp_q_cap={cap} < max_outstanding={pair} of class "
+            f"{spec.classes[ci].name!r} ({fl} flow) — a single "
+            f"source/dest pair can overflow the {ch!r} response ring "
+            "(the engine does not check overflow at runtime)",
+            coords=(ch, spec.classes[ci].name, fl),
+            suggestion=f"resp_q_cap>={pair} (worst-case all-to-one "
+                       f"needs {n_src * worst_src[0]})"))
+    elif worst_src is not None and cap < worst_src[0]:
+        src, q = worst_src
+        ch = spec.channels[plan.chan_of_q[q]].name
+        out.append(CheckResult(
+            "credit_conservation", "protocol", WARN,
+            f"resp_q_cap={cap} < {src} (every class of one source at "
+            f"full max_outstanding into the {ch!r} ring); worst-case "
+            f"all-to-one traffic needs {n_src * src}",
+            coords=(ch,),
+            suggestion=f"resp_q_cap>={src}"))
+    else:
+        bound = 0 if worst_src is None else worst_src[0]
+        out.append(CheckResult(
+            "credit_conservation", "protocol", PASS,
+            f"resp_q_cap={cap} covers any single source's responses "
+            f"(<= {bound}); worst-case all-to-one needs "
+            f"{n_src * bound}; W rings are sized from the declared "
+            "max_outstanding by construction; per-stream lanes split "
+            "their class budget (validated n_streams <= "
+            "max_outstanding)"))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------- #
+# composition + gating
+# --------------------------------------------------------------------- #
+def _subject(spec: NocSpec) -> str:
+    t = spec.topology
+    kind = type(t).__name__
+    ex = f" express={t.express}" if getattr(t, "express", ()) else ""
+    r = spec.routing
+    extra = f", n_valiant={r.n_valiant}" if r.algorithm == "valiant" else ""
+    return (f"{kind} {t.nx}x{t.ny}{ex}, {len(spec.channels)} channel(s), "
+            f"routing={r.algorithm}(n_vcs={r.n_vcs}{extra})")
+
+
+def analyze(spec: NocSpec, level: str = "full") -> AnalysisReport:
+    """Full static-analysis report for one spec.  ``level="fast"``
+    runs only the cheap protocol/credit checks (what NocSpec
+    construction already enforces); ``"full"`` adds the route-table
+    lint and the channel-dependency deadlock proof (lru-cached per
+    (topology, routing))."""
+    if level not in ("fast", "full"):
+        raise ValueError(f"level must be 'fast' or 'full', got {level!r}")
+    checks = list(check_protocol(spec))
+    if level == "full":
+        checks = list(analyze_routing(spec.topology, spec.routing)) + checks
+    return AnalysisReport(subject=_subject(spec), checks=tuple(checks),
+                          level=level)
+
+
+def verify_spec(spec: NocSpec, verify: str = "fast") -> None:
+    """The ``simulate(verify=...)`` gate: raise :class:`AnalysisError`
+    when the requested level finds a FAIL.  ``"off"`` skips, ``"fast"``
+    re-runs the construction-time cheap checks, ``"full"`` adds the
+    CDG deadlock proof and rejects wedge-prone specs before a single
+    cycle is simulated."""
+    if verify == "off":
+        return
+    if verify not in ("fast", "full"):
+        raise ValueError(
+            f"verify must be 'off', 'fast' or 'full', got {verify!r}")
+    report = analyze(spec, level=verify)
+    if not report.ok:
+        raise AnalysisError(report)
+
+
+# --------------------------------------------------------------------- #
+# CLI: python -m repro.noc.analyze
+# --------------------------------------------------------------------- #
+_PRESETS = {"narrow_wide": NocSpec.narrow_wide,
+            "wide_only": NocSpec.wide_only,
+            "multi_stream": NocSpec.multi_stream}
+
+
+def _policy(args) -> RoutingPolicy:
+    if args.routing == "valiant":
+        return RoutingPolicy.valiant(args.n_vcs or 4, args.n_valiant)
+    if args.routing == "o1turn":
+        return RoutingPolicy.o1turn(args.n_vcs or 2)
+    return RoutingPolicy.xy(args.n_vcs or 1)
+
+
+@dataclass(frozen=True)
+class _MatrixRow:
+    name: str
+    spec: NocSpec
+    expect_fail: bool = False
+    must_name: str = ""        # check expected to carry the FAIL
+    note: str = field(default="")
+
+
+def _preset_matrix() -> list[_MatrixRow]:
+    """The committed preset/policy matrix the CI gate asserts: every
+    shipped configuration passes, and the PR-5 VC-less minimal-wrap
+    torus (the config that wedged under saturating bursts) is flagged
+    with a concrete (link, VC) cycle."""
+    mesh, torus = Mesh(4, 4), Torus(4, 4)
+    rows = [
+        _MatrixRow("narrow_wide mesh xy(1)", NocSpec.narrow_wide(4, 4)),
+        _MatrixRow("wide_only mesh xy(1)", NocSpec.wide_only(4, 4)),
+        _MatrixRow("multi_stream mesh xy(1)", NocSpec.multi_stream(4, 4)),
+        _MatrixRow("narrow_wide express(2) xy(1)",
+                   NocSpec.narrow_wide(4, 4,
+                                       topology=Mesh(4, 4, express=(2,)))),
+        _MatrixRow(
+            "wide_only torus xy(1)  [PR-5 wedge]",
+            NocSpec.wide_only(4, 4, topology=torus, burstlen=32,
+                              max_wide_outstanding=16),
+            expect_fail=True, must_name="cdg_acyclic",
+            note="the saturating-burst wedge PR 5 caught in simulation"),
+        _MatrixRow("narrow_wide torus xy(1)",
+                   NocSpec.narrow_wide(4, 4, topology=torus),
+                   expect_fail=True, must_name="cdg_acyclic"),
+        _MatrixRow("narrow_wide torus xy(2)",
+                   NocSpec.narrow_wide(4, 4, topology=torus,
+                                       routing=RoutingPolicy.xy(2))),
+        _MatrixRow("wide_only torus xy(2)",
+                   NocSpec.wide_only(4, 4, topology=torus, burstlen=32,
+                                     max_wide_outstanding=16,
+                                     routing=RoutingPolicy.xy(2))),
+        _MatrixRow("narrow_wide mesh o1turn(2)",
+                   NocSpec.narrow_wide(4, 4,
+                                       routing=RoutingPolicy.o1turn(2))),
+        _MatrixRow("narrow_wide torus o1turn(4)",
+                   NocSpec.narrow_wide(4, 4, topology=torus,
+                                       routing=RoutingPolicy.o1turn(4))),
+        _MatrixRow("narrow_wide mesh valiant(4)",
+                   NocSpec.narrow_wide(4, 4,
+                                       routing=RoutingPolicy.valiant(4))),
+        _MatrixRow("narrow_wide mesh 7x7 xy(1)",
+                   NocSpec.narrow_wide(7, 7)),
+    ]
+    return rows
+
+
+def _run_matrix(verbose: bool) -> int:
+    rows = _preset_matrix()
+    bad = 0
+    for row in rows:
+        rep = analyze(row.spec)
+        flagged = not rep.ok
+        as_expected = flagged == row.expect_fail
+        if row.expect_fail and flagged and row.must_name:
+            as_expected = rep[row.must_name].verdict == FAIL
+            as_expected = as_expected and bool(rep[row.must_name].coords)
+        status = "ok" if as_expected else "UNEXPECTED"
+        want = "FAIL" if row.expect_fail else "PASS/WARN"
+        print(f"{row.name:<40} {rep.verdict:<5} (expected {want:<9}) "
+              f"{status}")
+        if verbose or not as_expected:
+            print(rep.render())
+        if not as_expected:
+            bad += 1
+    if bad:
+        print(f"\n{bad} matrix expectation(s) violated")
+        return 1
+    print(f"\nall {len(rows)} matrix expectations hold "
+          "(wedge flagged with a concrete cycle; every committed "
+          "preset/policy passes)")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.noc.analyze",
+        description="Static NoC spec verifier: channel-dependency "
+                    "deadlock proofs, protocol/credit lint, and "
+                    "route-table lint — no simulation needed.")
+    ap.add_argument("--all-presets", action="store_true",
+                    help="run the committed preset/policy matrix and "
+                         "assert its expectations (the CI gate)")
+    ap.add_argument("--preset", choices=sorted(_PRESETS),
+                    default="narrow_wide")
+    ap.add_argument("--topology", choices=("mesh", "torus"),
+                    default="mesh")
+    ap.add_argument("--express", type=int, nargs="*", default=(),
+                    help="express link strides (mesh only)")
+    ap.add_argument("--nx", type=int, default=4)
+    ap.add_argument("--ny", type=int, default=4)
+    ap.add_argument("--routing", choices=("xy", "o1turn", "valiant"),
+                    default="xy")
+    ap.add_argument("--n-vcs", type=int, default=0,
+                    help="virtual channels (0: the algorithm's default)")
+    ap.add_argument("--n-valiant", type=int, default=2)
+    ap.add_argument("--resp-q-cap", type=int, default=256)
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print full per-check reports in matrix mode")
+    args = ap.parse_args(argv)
+
+    if args.all_presets:
+        return _run_matrix(args.verbose)
+
+    if args.topology == "torus":
+        topo: Topology = Torus(args.nx, args.ny)
+    else:
+        topo = Mesh(args.nx, args.ny, express=tuple(args.express))
+    try:
+        spec = _PRESETS[args.preset](
+            args.nx, args.ny, topology=topo, resp_q_cap=args.resp_q_cap,
+            routing=_policy(args))
+    except ValueError as e:                    # construction-time reject
+        print(f"rejected at construction: {e}")
+        return 1
+    report = analyze(spec)
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,6 +45,13 @@ __all__ = ["simulate", "simulate_batch", "simulate_schedules", "sweep",
            "stack_schedules"]
 
 
+def _verify(spec: NocSpec, verify: str) -> None:
+    """Static-analysis gate (lazy import: repro.noc.analyze depends on
+    this package's spec/engine modules)."""
+    from .analyze import verify_spec
+    verify_spec(spec, verify)
+
+
 def _split_streams(cls_name, t, d, w, s, S):
     """Partition one class's per-NI schedule rows into ``S`` per-stream
     lanes, preserving each NI's entry order within a stream.  Rows are
@@ -184,9 +191,21 @@ def simulate_schedules(spec: NocSpec,
                        max_outstanding: Sequence[int] | None = None,
                        burst_beats: Sequence[int] | None = None,
                        service_jitter=None, jitter_seed: int = 0,
-                       backend: str = "jnp") -> SimResult:
+                       backend: str = "jnp",
+                       verify: str = "fast") -> SimResult:
     """Run one experiment from raw per-class ``(times, dests[, writes])``
-    schedules (the layer custom schedule sources go through)."""
+    schedules (the layer custom schedule sources go through).
+
+    ``verify`` gates the static-analysis pass from
+    :mod:`repro.noc.analyze` before any cycle is simulated: ``"fast"``
+    (default) re-runs the cheap protocol/credit checks NocSpec
+    construction already enforces, ``"full"`` adds the
+    channel-dependency deadlock proof and route-table lint (lru-cached
+    per (topology, routing) — e.g. a VC-less torus spec is rejected
+    with the offending (link, VC) cycle instead of wedging), ``"off"``
+    skips verification (how the wedge regressions simulate the
+    documented-deadlocky configs on purpose)."""
+    _verify(spec, verify)
     times, dests, writes = stack_schedules(spec, schedules)
     sl, mo, bb = _dyn_scalars(spec, service_lat, max_outstanding,
                               burst_beats)
@@ -202,7 +221,7 @@ def simulate(spec: NocSpec, workload: Workload, *,
              max_outstanding: Sequence[int] | None = None,
              burst_beats: Sequence[int] | None = None,
              service_jitter=None, jitter_seed: int = 0,
-             backend: str = "jnp") -> SimResult:
+             backend: str = "jnp", verify: str = "fast") -> SimResult:
     """Run one experiment; scalar keyword overrides shadow the spec's
     declared values without recompiling (they are traced operands).
     ``service_lat``/``service_jitter`` take one int or a per-class
@@ -210,20 +229,24 @@ def simulate(spec: NocSpec, workload: Workload, *,
     picks the router hot-loop implementation ("jnp" reference, the
     "pallas" arbiter kernel, or the fused "pallas_fused" full-cycle
     kernel — see :mod:`repro.noc.backends`); results are
-    backend-invariant."""
+    backend-invariant.  ``verify="full"`` statically rejects
+    deadlock-prone specs before stepping (see
+    :func:`simulate_schedules` / :mod:`repro.noc.analyze`)."""
     return simulate_schedules(spec, workload.schedules(spec),
                               service_lat=service_lat,
                               max_outstanding=max_outstanding,
                               burst_beats=burst_beats,
                               service_jitter=service_jitter,
-                              jitter_seed=jitter_seed, backend=backend)
+                              jitter_seed=jitter_seed, backend=backend,
+                              verify=verify)
 
 
 def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
                    service_lat=None, max_outstanding=None,
                    burst_beats=None, service_jitter=None,
                    jitter_seed: int = 0,
-                   backend: str = "jnp") -> SimResult:
+                   backend: str = "jnp",
+                   verify: str = "fast") -> SimResult:
     """Run N operating points in ONE vmapped jit call.
 
     ``workloads`` supplies per-point schedules (rate/seed/pattern/mix
@@ -240,6 +263,7 @@ def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
     n = len(workloads)
     if n == 0:
         raise ValueError("empty sweep")
+    _verify(spec, verify)
     per_point = [wl.schedules(spec) for wl in workloads]
     T = max(max(np.asarray(t).reshape(spec.n_routers, -1).shape[1]
                 for t, *_ in sched.values()) for sched in per_point)
@@ -339,7 +363,8 @@ def _batch_depth_sweep(specs: Sequence[NocSpec], wls: Sequence[Workload],
 
 
 def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
-          backend: str = "jnp", pad_depths: bool = True) -> list[SimResult]:
+          backend: str = "jnp", pad_depths: bool = True,
+          verify: str = "fast") -> list[SimResult]:
     """Simulate arbitrary (spec, workload) points, vmapping every group
     of points that shares a static spec. Results come back in input
     order, one unbatched SimResult per point.
@@ -348,7 +373,13 @@ def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
     channel FIFO depths also share one group: the group compiles once
     at the max depth with per-point depths a vmapped traced operand —
     a whole depth sweep costs a single ``compiled_sim`` compilation
-    (count it with :func:`repro.noc.sim_cache_stats`)."""
+    (count it with :func:`repro.noc.sim_cache_stats`).
+
+    ``verify`` runs the :mod:`repro.noc.analyze` gate once per distinct
+    spec before any simulation (the deadlock proof is lru-cached per
+    (topology, routing), so a 70-point sweep pays it once)."""
+    for s in {spec for spec, _ in points}:
+        _verify(s, verify)
     groups: dict[NocSpec, list[int]] = {}
     for i, (spec, _) in enumerate(points):
         key = _strip_depths(spec) if pad_depths else spec

@@ -97,8 +97,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flit import flow_kind
-from repro.core.noc_sim.router import (F_BEAT, F_DEST, F_KIND, F_SRC, F_TIME,
-                                       F_TXN, N_FIELDS)
+from repro.core.noc_sim.router import (F_BEAT, F_KIND, F_SRC, F_TIME,
+                                       F_TXN)
 from .backends import get_backend
 from .spec import NocSpec
 

@@ -226,4 +226,20 @@ class SimResult:
         out["total_energy_pj"] = self.total_energy_pj
         out["max_stall_cycles"] = self.max_stall_cycles
         out["drained"] = self.drained
+        if not np.all(self.drained):
+            out["diagnosis"] = self.diagnose()
         return out
+
+    def diagnose(self) -> str:
+        """One-line static-analysis verdict for an undrained run: did
+        the spec deadlock (the analyzer names the cyclic (link, VC)
+        wait) or merely run out of horizon (congestion)?  Lazy import —
+        :mod:`repro.noc.analyze` already depends on this package — and
+        lru-cached per (topology, routing), so repeated summaries of
+        one wedged sweep pay the proof once."""
+        from .analyze import analyze
+        report = analyze(self.spec)
+        if report.ok:
+            return ("analyzer passed — likely congestion, not deadlock "
+                    "(try more cycles or lower load)")
+        return "static analysis: " + report.summary_line()

@@ -219,6 +219,14 @@ class NocSpec:
             cls_name, _, d = flow.partition(".")
             if cls_name not in names or d not in AXI_FLOWS:
                 raise ValueError(f"class_map has unknown flow {flow!r}")
+        # cheap static verification (repro.noc.analyze protocol/credit
+        # checks; lazy import — analyze depends on this module): a FAIL,
+        # e.g. a resp_q_cap that a single class's ROB budget can
+        # overflow, rejects the spec at construction.  WARNs stay
+        # advisory, and the expensive channel-dependency deadlock pass
+        # waits for analyze()/simulate(verify="full").
+        from .analyze import verify_spec
+        verify_spec(self, "fast")
 
     @staticmethod
     def _expand_legacy(items: list[tuple[str, str]]) -> list[tuple[str, str]]:

@@ -205,26 +205,32 @@ def _freeze_tables(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray):
     return nbr, opp, route
 
 
-def validate_tables(nbr: np.ndarray, opp: np.ndarray,
-                    route: np.ndarray) -> np.ndarray:
-    """Structural invariants every fabric table set must satisfy (real
-    raises, not asserts — these guard simulation correctness under
-    ``-O`` too: a port index reaching the arbiter's NO-ROUTE sentinel
-    would make valid heads silently never granted).
+# ordered names of the structural table checks run_table_checks runs;
+# repro.noc.analyze reports each as its own named lint check
+TABLE_CHECKS = ("no_port_sentinel", "local_port", "duplex_links",
+                "route_structure", "route_termination")
+
+
+def run_table_checks(nbr: np.ndarray, opp: np.ndarray,
+                     route: np.ndarray):
+    """Named, individually-reportable structural checks over one fabric
+    table set — the checks :func:`validate_tables` has always enforced,
+    exposed per-name so :mod:`repro.noc.analyze` can report them in an
+    ``AnalysisReport`` instead of a single opaque raise.
 
     Accepts any table set shaped like the fabric's contract — the base
     topologies' ``(R, R)`` route tables and the multi-plane/VC-expanded
     ``(R, n_planes*R)`` sets :mod:`repro.noc.routing` generates, where
-    column ``j`` addresses destination router ``j % R``.  Checks:
+    column ``j`` addresses destination router ``j % R``.
 
-    * port count stays below the arbiter's NO-ROUTE sentinel,
-    * the local port is last and carries no link,
-    * every wired link is duplex (the neighbor's ``opp`` port links
-      straight back),
-    * routes only use wired links and reserve the local port for the
-      destination router,
-    * every route terminates (no livelock) — returned as the
-      ``(R, n_dest)`` hop-count table.
+    Returns ``(results, hops)``: ``results`` is a list of ``(name,
+    error-message-or-None, coords)`` tuples in :data:`TABLE_CHECKS`
+    order, stopping after the first failing check (later checks would
+    index with the very values the failed one proved invalid); ``hops``
+    is the ``(R, n_dest)`` route-walk hop-count table, or ``None`` when
+    any check failed.  A route table whose column count is not a
+    multiple of ``R`` is malformed input, not a lintable property, and
+    raises immediately.
     """
     R, P = nbr.shape
     n_dest = route.shape[1]
@@ -232,26 +238,56 @@ def validate_tables(nbr: np.ndarray, opp: np.ndarray,
         raise ValueError(
             f"route table has {n_dest} destination columns, not a "
             f"multiple of {R} routers")
+    results: list[tuple[str, str | None, tuple]] = []
+
+    def fail(name: str, msg: str, coords: tuple = ()):
+        results.append((name, msg, coords))
+        return results, None
+
     if P >= 99:
-        raise ValueError(
-            f"{P} ports collides with the NO-ROUTE sentinel (99)")
+        return fail("no_port_sentinel",
+                    f"{P} ports collides with the NO-ROUTE sentinel (99)")
+    results.append(("no_port_sentinel", None, ()))
+
     if np.any(nbr[:, P - 1] >= 0):
-        raise ValueError("local port (last index) must not carry a link")
+        r = int(np.argwhere(nbr[:, P - 1] >= 0)[0][0])
+        return fail("local_port",
+                    "local port (last index) must not carry a link",
+                    (r, P - 1))
+    results.append(("local_port", None, ()))
+
     for r in range(R):
         for p in range(P - 1):
             t = nbr[r, p]
             if t >= 0 and nbr[t, opp[r, p]] != r:
-                raise ValueError(f"link {r}:{p} is not duplex")
+                return fail("duplex_links", f"link {r}:{p} is not duplex",
+                            (r, p))
+    results.append(("duplex_links", None, ()))
+
     rr = np.arange(R)[:, None].repeat(n_dest, axis=1)    # (R, n_dest) row idx
     dd = np.arange(n_dest)[None, :].repeat(R, axis=0) % R     # dest router
     off_diag = rr != dd
+    if np.any((route < 0) | (route > P - 1)):
+        r, d = map(int, np.argwhere((route < 0) | (route > P - 1))[0])
+        return fail("route_structure",
+                    f"route entry {r}:{d} is not a port index "
+                    f"(got {int(route[r, d])}, have {P} ports)", (r, d))
     if np.any(route[~off_diag] != P - 1):
-        raise ValueError("route to self must use the local port")
+        bad = (route != P - 1) & ~off_diag
+        r, d = map(int, np.argwhere(bad)[0])
+        return fail("route_structure",
+                    "route to self must use the local port", (r, d))
     if np.any(route[off_diag] == P - 1):
-        raise ValueError("route reaches the local port before the "
-                         "destination router")
-    if not np.all(nbr[rr[off_diag], route[off_diag]] >= 0):
-        raise ValueError("route uses a missing link")
+        bad = (route == P - 1) & off_diag
+        r, d = map(int, np.argwhere(bad)[0])
+        return fail("route_structure",
+                    "route reaches the local port before the "
+                    "destination router", (r, d))
+    missing = off_diag & (nbr[rr, np.where(off_diag, route, 0)] < 0)
+    if np.any(missing):
+        r, d = map(int, np.argwhere(missing)[0])
+        return fail("route_structure", "route uses a missing link", (r, d))
+    results.append(("route_structure", None, ()))
 
     cur = rr.copy()
     hops = np.zeros((R, n_dest), np.int64)
@@ -259,11 +295,30 @@ def validate_tables(nbr: np.ndarray, opp: np.ndarray,
     for _ in range(4 * n_dest + 4):
         live = cur != dd
         if not live.any():
-            return hops
+            results.append(("route_termination", None, ()))
+            return results, hops
         step = nbr[cur, route[cur, vdest]]
         cur = np.where(live, step, cur)
         hops += live
-    raise ValueError("routing does not terminate")
+    r, d = map(int, np.argwhere(cur != dd)[0])
+    return fail("route_termination", "routing does not terminate", (r, d))
+
+
+def validate_tables(nbr: np.ndarray, opp: np.ndarray,
+                    route: np.ndarray) -> np.ndarray:
+    """Structural invariants every fabric table set must satisfy (real
+    raises, not asserts — these guard simulation correctness under
+    ``-O`` too: a port index reaching the arbiter's NO-ROUTE sentinel
+    would make valid heads silently never granted).  The checks
+    themselves live in :func:`run_table_checks`; this wrapper raises
+    ``ValueError`` on the first failure and returns the ``(R, n_dest)``
+    hop-count table on success (which also proves every route
+    terminates — no livelock)."""
+    results, hops = run_table_checks(nbr, opp, route)
+    for _name, err, _coords in results:
+        if err:
+            raise ValueError(err)
+    return hops
 
 
 @functools.lru_cache(maxsize=64)

@@ -7,9 +7,7 @@ lowers (dist/step.py), so served numbers reflect the production sharding.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +60,6 @@ class Engine:
         logits, caches = pre.fn(self.params, batch)
         caches = kv_cache.promote(caches, self.max_len)
 
-        v_loc = logits.shape[-1]
         out_tokens = np.zeros((B, max_new_tokens), np.int32)
         key = jax.random.key(seed)
         done = np.zeros((B,), bool)

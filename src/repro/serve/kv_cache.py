@@ -11,11 +11,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
-from ..configs.base import RunConfig, ShapeConfig
-from ..dist import params as params_lib
+from ..configs.base import ShapeConfig
 
 
 def allocate(model, shape: ShapeConfig, mesh, *, split_kv: bool = False):

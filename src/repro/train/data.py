@@ -8,7 +8,6 @@ import threading
 from pathlib import Path
 from typing import Iterator
 
-import jax
 import numpy as np
 
 

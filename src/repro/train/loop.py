@@ -1,16 +1,14 @@
 """Training loop: microbatching, checkpoints, straggler watchdog, resume."""
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..configs.base import RunConfig, ShapeConfig
+from ..configs.base import RunConfig
 from ..dist import params as params_lib, step as step_lib
 from ..launch.mesh import make_mesh_from_config
 from ..models import build_model

@@ -15,9 +15,8 @@ shard boundaries). This is what lets grok-1-314b's optimizer fit one pod.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ import numpy as np
 from conftest import given, settings, st  # noqa: E402
 
 from repro.core import channels, flit  # noqa: E402
-from repro.core.routing import _merge, _split  # noqa: E402
+from repro.core.collectives import _merge, _split  # noqa: E402
 
 from repro.dist.compression import (dequantize_blockwise,  # noqa: E402
                                     quantize_blockwise)

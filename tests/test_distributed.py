@@ -5,7 +5,6 @@ and the same global gradient norm as the single-device run — this is what
 makes the sharding rules + collective schedules trustworthy at 256/512
 chips where we can only dry-run.
 """
-import pytest
 
 COMMON = """
 import jax, jax.numpy as jnp

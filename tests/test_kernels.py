@@ -1,5 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
-import os
 
 import jax
 import jax.numpy as jnp

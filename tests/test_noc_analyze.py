@@ -1,0 +1,357 @@
+"""Static-analysis verifier tests (repro.noc.analyze).
+
+Ground truth pinned here: the analyzer must flag PR-5's VC-less
+minimal-wrap torus with a concrete (link, VC) channel-dependency
+cycle, must pass xy(n_vcs=2) / o1turn / valiant and every committed
+preset, and its verdict must agree with simulated liveness (the
+hypothesis property test at the bottom: analyzer deadlock-free =>
+the sim drains).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from conftest import given, settings, st  # noqa: E402
+
+from repro.noc import (Mesh, NocSpec, RoutingPolicy, Torus,  # noqa: E402
+                       Workload, simulate, sweep)
+from repro.noc import analyze as anz  # noqa: E402
+from repro.noc.analyze import (AnalysisError, analyze,  # noqa: E402
+                               analyze_routing, check_protocol,
+                               verify_spec)
+from repro.noc.engine import sim_cache_stats  # noqa: E402
+from repro.noc.topology import run_table_checks  # noqa: E402
+
+
+def wedge_spec(cycles=600):
+    """PR-5's saturating-burst torus wedge configuration."""
+    return NocSpec.wide_only(4, 4, topology=Torus(4, 4), burstlen=32,
+                             cycles=cycles, max_wide_outstanding=16)
+
+
+def wedge_workload():
+    return Workload.make("all_to_all", rates={"wide": 1.0},
+                         rounds={"wide": 2}, write_frac=0.5)
+
+
+# --------------------------------------------------------------------- #
+# routing family: the channel-dependency deadlock proof
+# --------------------------------------------------------------------- #
+def test_wedge_flagged_with_concrete_cycle():
+    report = analyze(wedge_spec())
+    assert not report.ok and report.verdict == "FAIL"
+    c = report["cdg_acyclic"]
+    assert c.verdict == "FAIL" and c.family == "routing"
+    # offending coords: a CONNECTED cycle of ((u, v), vc) links
+    assert len(c.coords) >= 2
+    for (link, vc) in c.coords:
+        u, v = link
+        assert 0 <= u < 16 and 0 <= v < 16 and vc == 0
+    for (link, _), (nxt, _) in zip(c.coords,
+                                   c.coords[1:] + c.coords[:1]):
+        assert link[1] == nxt[0], "cycle links must chain head-to-tail"
+    assert "n_vcs=2" in c.suggestion
+
+
+def test_escape_vc_tables_prove_acyclic():
+    # the dateline tables remove the wrap cycle from the CDG itself —
+    # a link-level analysis (ignoring VCs) would wrongly flag this
+    checks = analyze_routing(Torus(4, 4), RoutingPolicy.xy(2))
+    cdg = next(c for c in checks if c.name == "cdg_acyclic")
+    assert cdg.verdict == "PASS"
+
+
+@pytest.mark.parametrize("topo,policy", [
+    (Mesh(4, 4), RoutingPolicy.xy(1)),
+    (Mesh(4, 4), RoutingPolicy.xy(2)),
+    (Mesh(4, 4, express=(2,)), RoutingPolicy.xy(1)),
+    (Torus(4, 4), RoutingPolicy.xy(2)),
+    (Torus(3, 5), RoutingPolicy.xy(2)),
+    (Mesh(4, 4), RoutingPolicy.o1turn(2)),
+    (Torus(4, 4), RoutingPolicy.o1turn(4)),
+    (Mesh(4, 4), RoutingPolicy.valiant(4)),
+    (Mesh(5, 3), RoutingPolicy.valiant(6, 3)),
+], ids=str)
+def test_deadlock_free_matrix(topo, policy):
+    checks = analyze_routing(topo, policy)
+    assert all(c.verdict == "PASS" for c in checks), [
+        (c.name, c.detail) for c in checks if c.verdict != "PASS"]
+
+
+def test_vcless_torus_cycle_is_a_real_ring():
+    # every link in the reported cycle is a unit-stride torus link
+    checks = analyze_routing(Torus(4, 4), RoutingPolicy.xy(1))
+    cdg = next(c for c in checks if c.name == "cdg_acyclic")
+    assert cdg.verdict == "FAIL"
+    nbr = Torus(4, 4).tables()[0]
+    for (u, v), _vc in cdg.coords:
+        assert v in nbr[u], f"{u}->{v} is not a wired link"
+
+
+# --------------------------------------------------------------------- #
+# the verify= gate
+# --------------------------------------------------------------------- #
+def test_verify_full_rejects_wedge_before_stepping():
+    spec = wedge_spec(cycles=613)      # unique horizon -> unique jit key
+    before = sim_cache_stats()["misses"]
+    with pytest.raises(AnalysisError) as ei:
+        simulate(spec, wedge_workload(), verify="full")
+    assert sim_cache_stats()["misses"] == before, \
+        "verify='full' must reject before compiling/stepping"
+    assert "cdg_acyclic" in str(ei.value)
+    assert ei.value.report["cdg_acyclic"].coords
+
+
+def test_verify_default_and_off_still_simulate_the_wedge():
+    # the wedge is a *documented* configuration — default (fast) and
+    # off verification must keep simulating it so the dynamic
+    # regression can observe drained=False
+    r = simulate(wedge_spec(), wedge_workload())
+    assert not np.all(r.drained)
+    r2 = simulate(wedge_spec(), wedge_workload(), verify="off")
+    assert bool(np.all(r.drained == r2.drained))
+
+
+def test_verify_full_passes_fixed_policy_and_sweep_gate():
+    spec = wedge_spec(cycles=3500).with_(routing=RoutingPolicy.xy(2))
+    wl = wedge_workload()
+    r = simulate(spec, wl, verify="full")
+    assert bool(np.all(r.drained))
+    with pytest.raises(AnalysisError):
+        sweep([(wedge_spec(), wl)], verify="full")
+    with pytest.raises(ValueError, match="verify must be"):
+        simulate(spec, wl, verify="paranoid")
+
+
+def test_undrained_summary_carries_diagnosis():
+    r = simulate(wedge_spec(), wedge_workload())
+    s = r.summary()
+    assert not np.all(r.drained)
+    assert "cdg_acyclic" in s["diagnosis"]
+    # congestion (not deadlock): analyzer passed -> says so
+    mesh = NocSpec.narrow_wide(4, 4, cycles=60)
+    rm = simulate(mesh, Workload.make(
+        "all_to_all", rates={"wide": 1.0}, rounds={"wide": 4},
+        write_frac=0.5))
+    assert not np.all(rm.drained)
+    assert "congestion" in rm.summary()["diagnosis"]
+    # drained runs carry no diagnosis key
+    ok = simulate(mesh.with_(cycles=4000), Workload.make(
+        "uniform_random", rates={"narrow": 0.05, "wide": 0.05},
+        counts={"narrow": 5, "wide": 5}))
+    assert bool(np.all(ok.drained))
+    assert "diagnosis" not in ok.summary()
+
+
+# --------------------------------------------------------------------- #
+# protocol family
+# --------------------------------------------------------------------- #
+def test_construction_rejects_overflowable_resp_q_cap():
+    with pytest.raises(AnalysisError) as ei:
+        NocSpec.narrow_wide(4, 4, resp_q_cap=4)   # < max_outstanding=8
+    chk = ei.value.report["credit_conservation"]
+    assert chk.verdict == "FAIL"
+    assert chk.coords and chk.coords[0] in ("req", "rsp", "wide")
+    assert "resp_q_cap>=8" in chk.suggestion
+    # a cap covering the worst single (class, flow) budget constructs,
+    # reporting the single-source aggregate as an advisory WARN
+    spec = NocSpec.narrow_wide(2, 2, resp_q_cap=16)
+    chk = analyze(spec)["credit_conservation"]
+    assert chk.verdict == "WARN"
+
+
+def test_message_order_verdicts():
+    # wide_only: AR/AW share the single channel with R/B at one VC
+    chk = analyze(NocSpec.wide_only(4, 4))["message_order"]
+    assert chk.verdict == "WARN"
+    assert any("narrow" == cls for cls, _ in chk.coords)
+    # narrow_wide: responses own their channels (W sharing R's wide
+    # channel is the paper's design and stays PASS)
+    assert analyze(NocSpec.narrow_wide(4, 4))["message_order"] \
+        .verdict == "PASS"
+    assert analyze(NocSpec.multi_stream(4, 4))["message_order"] \
+        .verdict == "PASS"
+    # VC separation clears the shared-channel WARN
+    chk = analyze(NocSpec.wide_only(
+        4, 4, routing=RoutingPolicy.xy(2)))["message_order"]
+    assert chk.verdict == "PASS"
+
+
+# --------------------------------------------------------------------- #
+# lint family: named checks + offending coordinates
+# --------------------------------------------------------------------- #
+def _tables(topo):
+    nbr, opp, route = (a.copy() for a in topo.tables())
+    return nbr, opp, route
+
+
+def _failing(results):
+    return next((r for r in results if r[1]), None)
+
+
+def test_lint_local_port_coords():
+    nbr, opp, route = _tables(Mesh(3, 3))
+    nbr[2, -1] = 0                        # local port must stay linkless
+    results, hops = run_table_checks(nbr, opp, route)
+    name, err, coords = _failing(results)
+    assert name == "local_port" and hops is None
+    assert "local port" in err and coords == (2, nbr.shape[1] - 1)
+
+
+def test_lint_duplex_coords():
+    nbr, opp, route = _tables(Mesh(3, 3))
+    r, p = 4, int(np.argmax(nbr[4] >= 0))
+    other = int(nbr[r, p])                # 4's old neighbor on that link
+    q = int(np.argmax(nbr[other] == r))   # ...and its port back to 4
+    nbr[r, p] = (nbr[r, p] + 1) % 9       # rewire one link one-way
+    results, _ = run_table_checks(nbr, opp, route)
+    name, err, coords = _failing(results)
+    # either endpoint of the now-asymmetric link is a valid offense
+    assert name == "duplex_links" and coords in ((r, p), (other, q))
+    assert "is not duplex" in err
+
+
+def test_lint_route_structure_coords():
+    nbr, opp, route = _tables(Mesh(3, 3))
+    route[0, 0] = 1                       # self-route must use local port
+    results, _ = run_table_checks(nbr, opp, route)
+    name, err, coords = _failing(results)
+    assert name == "route_structure" and coords == (0, 0)
+    assert "local port" in err
+
+    nbr, opp, route = _tables(Mesh(3, 3))
+    route[0, 8] = nbr.shape[1] - 1        # local port before destination
+    results, _ = run_table_checks(nbr, opp, route)
+    name, err, coords = _failing(results)
+    assert name == "route_structure" and coords == (0, 8)
+
+    nbr, opp, route = _tables(Mesh(3, 3))
+    route[0, 8] = 0                       # N port of router 0 is unwired
+    results, _ = run_table_checks(nbr, opp, route)
+    name, err, coords = _failing(results)
+    assert name == "route_structure" and coords == (0, 8)
+    assert "missing link" in err
+
+
+def test_lint_termination_coords():
+    nbr, opp, route = _tables(Mesh(2, 2))
+    route[0, 3], route[1, 3] = 1, 3       # 0 <-> 1 ping-pong toward 3
+    results, hops = run_table_checks(nbr, opp, route)
+    name, err, coords = _failing(results)
+    assert name == "route_termination" and hops is None
+    assert err == "routing does not terminate" and coords[1] == 3
+
+
+def test_lint_all_pass_on_compiled_tables():
+    rt = RoutingPolicy.o1turn(4).compile(Torus(4, 4))
+    results, hops = run_table_checks(rt.nbr, rt.opp, rt.route)
+    assert [r[0] for r in results] == [
+        "no_port_sentinel", "local_port", "duplex_links",
+        "route_structure", "route_termination"]
+    assert all(err is None for _, err, _ in results)
+    assert hops is not None and hops.shape == (16, 32)
+
+
+def test_dateline_monotonicity_coords():
+    # break the one-way escape transition by hand: router 0's E hop
+    # toward dest 1 drops back to VC0 after the wrap delivered into VC1
+    rt = RoutingPolicy.xy(2).compile(Torus(4, 4))
+    V = rt.n_vcs
+    route = rt.route.copy()
+    q = route[0, 1]
+    assert q % V == 1                     # post-wrap hop rides escape VC
+    route[0, 1] = (q // V) * V            # force it back to VC0
+    bad = rt._replace(route=route)
+    chk = anz._dateline_check(Torus(4, 4), bad)
+    assert chk.verdict == "FAIL"
+    plane, src, dest, router = chk.coords
+    assert (plane, dest, router) == (0, 1, 0) and src != 0
+    # and the untouched tables are monotone
+    assert anz._dateline_check(Torus(4, 4), rt).verdict == "PASS"
+
+
+def test_minimality_reports_stretch_for_detour_planes():
+    checks = analyze_routing(Mesh(4, 4), RoutingPolicy.valiant(4))
+    m = next(c for c in checks if c.name == "route_minimality")
+    assert m.verdict == "PASS" and "stretch" in m.detail
+
+
+# --------------------------------------------------------------------- #
+# report plumbing + CLI
+# --------------------------------------------------------------------- #
+def test_report_is_machine_readable():
+    report = analyze(wedge_spec())
+    assert report.failures and report.failures[0].name == "cdg_acyclic"
+    assert report.level == "full"
+    line = report.summary_line()
+    assert "FAIL" in line and "fix:" in line
+    txt = report.render()
+    assert "verdict: FAIL" in txt and "cdg_acyclic" in txt
+    with pytest.raises(KeyError):
+        report["no_such_check"]
+    fast = analyze(wedge_spec(), level="fast")
+    assert fast.ok and {c.family for c in fast.checks} == {"protocol"}
+    with pytest.raises(ValueError, match="level"):
+        analyze(wedge_spec(), level="everything")
+
+
+def test_cli_matrix_and_single_spec(capsys):
+    assert anz.main(["--all-presets"]) == 0
+    out = capsys.readouterr().out
+    assert "wedge" in out and "all 12 matrix expectations hold" in out
+    assert anz.main(["--preset", "wide_only", "--topology", "torus"]) == 1
+    assert "cdg_acyclic" in capsys.readouterr().out
+    assert anz.main(["--preset", "narrow_wide", "--topology", "torus",
+                     "--routing", "xy", "--n-vcs", "2"]) == 0
+    assert "verdict: PASS" in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------- #
+# property: analyzer verdict agrees with simulated liveness
+# --------------------------------------------------------------------- #
+_POLICIES = [RoutingPolicy.xy(1), RoutingPolicy.xy(2),
+             RoutingPolicy.o1turn(2), RoutingPolicy.o1turn(4),
+             RoutingPolicy.valiant(4)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(nx=st.integers(2, 4), ny=st.integers(2, 4),
+       torus=st.booleans(), policy=st.sampled_from(_POLICIES),
+       rounds=st.integers(1, 2), seed=st.integers(0, 3))
+def test_analyzer_deadlock_free_implies_sim_drains(nx, ny, torus, policy,
+                                                   rounds, seed):
+    """One-sided agreement: whenever the analyzer proves a (topology,
+    policy) deadlock-free, a saturating wormhole workload on the
+    shared-channel ablation must drain.  (The converse is not a
+    theorem: a cyclic CDG needs enough load to close the wait loop.)"""
+    topo = Torus(nx, ny) if torus else Mesh(nx, ny)
+    try:
+        spec = NocSpec.wide_only(nx, ny, topology=topo, burstlen=8,
+                                 cycles=3000, routing=policy)
+    except ValueError:
+        return                           # invalid (policy, topology) pair
+    report = analyze(spec)
+    if not report.ok:
+        return                           # analyzer says deadlock-possible
+    wl = Workload.make("all_to_all", rates={"wide": 1.0},
+                       rounds={"wide": rounds}, write_frac=0.5, seed=seed)
+    r = simulate(spec, wl, verify="full")
+    assert bool(np.all(r.drained)), (
+        f"analyzer PASSed {report.subject} but the sim wedged "
+        f"(stall={int(np.max(r.max_stall_cycles))})")
+
+
+def test_wedge_liveness_agrees_both_ways():
+    """The documented wedge: analyzer FAIL <-> sim wedges; the escape-VC
+    fix: analyzer PASS <-> sim drains (same spec, same load)."""
+    wl = wedge_workload()
+    bad = wedge_spec(cycles=3500)
+    assert not analyze(bad).ok
+    r = simulate(bad, wl)
+    assert not np.all(r.drained)
+    good = bad.with_(routing=RoutingPolicy.xy(2))
+    assert analyze(good).ok
+    assert bool(np.all(simulate(good, wl, verify="full").drained))

@@ -1,7 +1,6 @@
 """Roofline HLO parser: trip-count scaling and collective byte accounting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (analyze_hlo_text, _group_size, _link_bytes,

@@ -1,7 +1,5 @@
 """Training substrate: optimizer math, checkpoints (atomic/async/elastic),
 data determinism, straggler policies, end-to-end loss decrease + resume."""
-import json
-import time
 from pathlib import Path
 
 import jax
@@ -41,7 +39,6 @@ def test_adamw_matches_reference():
     s = {"w": {"m": jnp.zeros((4, 4)), "v": jnp.zeros((4, 4))}}
     pspecs = {"w": P()}
 
-    import jax as _jax
     def step(p, g, s):
         from repro.dist.backend import Backend
         bk = Backend(cfg)
