@@ -160,7 +160,7 @@ def feeder_tables(nbr: np.ndarray,
 
 
 def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
-                     arbiter=None, n_vcs: int = 1):
+                     arbiter=None, n_vcs: int = 1, masked: bool = False):
     """Build the one-cycle update for a fabric described by static
     tables (see ``repro.noc.topology``): ``nbr[r, p]`` neighbor router
     per output port (-1 none, local port last), ``opp[r, p]`` the input
@@ -184,6 +184,14 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
     link_moves scalar)``.  ``depth`` is the *dynamic* FIFO depth (traced
     int32, ``1 <= depth <= state.fifo.shape[2]``); the state arrays are
     sized by the static max so depth sweeps share one compilation.
+
+    ``masked=True`` (fault injection, ``repro.noc.faults``) appends one
+    traced operand: ``step(state, iv, iflit, depth, link_mask)`` with
+    ``link_mask (R, P) bool`` marking output ports whose link is
+    currently dead.  A masked link simply never drains — flits wait in
+    the output register under ordinary backpressure (no loss), and heal
+    transparently when the mask clears.  The default build does not
+    trace the mask at all, keeping the healthy path bit-identical.
     """
     R, P = nbr.shape
     PORT_L = P - 1
@@ -213,7 +221,7 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
             [win.reshape(R, P - 1), ready[:, P - 1:]], axis=1)
 
     def step(state: NetState, inject_valid: jax.Array,
-             inject_flit: jax.Array, depth: jax.Array):
+             inject_flit: jax.Array, depth: jax.Array, *fault_args):
         heads = state.fifo[:, :, 0, :]                    # (R, P, F)
         head_valid = state.count > 0                      # (R, P)
 
@@ -223,6 +231,9 @@ def make_fabric_step(nbr: np.ndarray, opp: np.ndarray, route: np.ndarray,
         can_drain = jnp.where(jnp.arange(P)[None, :] == PORT_L,
                               True,                     # Local: NI always sinks
                               (nbr_j >= 0) & (ds_count < depth))
+        if masked:
+            (link_mask,) = fault_args                   # (R, P) bool, traced
+            can_drain &= ~link_mask
         drain = serialize_drain(state.oreg_v & can_drain)
 
         deliver_valid = drain[:, PORT_L]

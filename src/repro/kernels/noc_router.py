@@ -147,12 +147,21 @@ def router_arbiter_pallas(out_port, beat, rr_ptr, oreg_free, lock_in,
 # fused full-cycle fabric kernel (backend="pallas_fused")
 # --------------------------------------------------------------------- #
 def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
-                  lock_ref, iv_ref, iflit_ref, depth_ref,
-                  nbr_ref, opp_ref, route_ref, src_ref,
-                  nfifo_ref, ncount_ref, nptr_ref, noreg_ref, noregv_ref,
-                  nlock_ref, injok_ref, dv_ref, dflit_ref, lm_ref,
-                  *, n_rows: int, n_ports: int, d_max: int, n_fields: int,
-                  f_dest: int, f_beat: int, n_vcs: int):
+                  lock_ref, iv_ref, iflit_ref, depth_ref, *rest,
+                  n_rows: int, n_ports: int, d_max: int, n_fields: int,
+                  f_dest: int, f_beat: int, n_vcs: int, masked: bool):
+    # fault injection (masked=True) inserts one extra (N, P) link-mask
+    # operand after depth; the healthy build keeps the original operand
+    # list so the zero-fault program is untouched
+    if masked:
+        (mask_ref, nbr_ref, opp_ref, route_ref, src_ref,
+         nfifo_ref, ncount_ref, nptr_ref, noreg_ref, noregv_ref,
+         nlock_ref, injok_ref, dv_ref, dflit_ref, lm_ref) = rest
+    else:
+        mask_ref = None
+        (nbr_ref, opp_ref, route_ref, src_ref,
+         nfifo_ref, ncount_ref, nptr_ref, noreg_ref, noregv_ref,
+         nlock_ref, injok_ref, dv_ref, dflit_ref, lm_ref) = rest
     N, P, D, F = n_rows, n_ports, d_max, n_fields
     fifo = fifo_ref[...].reshape(N, P, D, F)
     count = count_ref[...]                                 # (N, P)
@@ -171,6 +180,8 @@ def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
     ds_idx = jnp.clip(nbr, 0, N - 1) * P + opp             # (N, P)
     ds_count = count.reshape(-1)[ds_idx]
     can_drain = jnp.where(is_local, True, (nbr >= 0) & (ds_count < depth))
+    if masked:
+        can_drain &= mask_ref[...] == 0        # dead link: grants suppressed
     drain = oreg_v & can_drain
     if n_vcs > 1:
         # VC-expanded tables: one physical link moves one flit/cycle, so
@@ -240,7 +251,7 @@ def _fused_kernel(fifo_ref, count_ref, ptr_ref, oreg_ref, oregv_ref,
 def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
                              inject_valid, inject_flit, depth_rows,
                              nbr_rows, opp_rows, route_rows, src_rows,
-                             *, n_vcs: int = 1,
+                             *, n_vcs: int = 1, link_mask_rows=None,
                              interpret: bool | None = None):
     """One full fabric cycle for ``N`` stacked router rows (channels
     folded into rows by the caller; see ``repro.noc.backends``).
@@ -254,6 +265,10 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
     traced per-row FIFO depth.  Static ``n_vcs > 1`` declares the port
     axis VC-expanded and enables the per-physical-link drain
     serialization (escape VC first), matching the jnp engine.
+    ``link_mask_rows (N, P)`` (fault injection) marks output ports whose
+    link is currently dead — they never drain; ``None`` (the default)
+    builds the original mask-free kernel, keeping the healthy program
+    untouched.
 
     Returns ``(fifo, count, rr_ptr, oreg, oreg_v (int32), lock_in,
     inj_ok (N,) bool, deliver_valid (N,) bool, deliver_flit (N, F),
@@ -265,9 +280,10 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    masked = link_mask_rows is not None
     kernel = functools.partial(
         _fused_kernel, n_rows=N, n_ports=P, d_max=D, n_fields=F,
-        f_dest=F_DEST, f_beat=F_BEAT, n_vcs=n_vcs)
+        f_dest=F_DEST, f_beat=F_BEAT, n_vcs=n_vcs, masked=masked)
     out_shapes = [
         jax.ShapeDtypeStruct((N, P * D * F), jnp.int32),   # fifo
         jax.ShapeDtypeStruct((N, P), jnp.int32),           # count
@@ -280,9 +296,7 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
         jax.ShapeDtypeStruct((N, F), jnp.int32),           # deliver_flit
         jax.ShapeDtypeStruct((N, 1), jnp.int32),           # link_moves
     ]
-    (nfifo, ncount, nptr, noreg, noregv, nlock, injok, dv, dflit,
-     lm) = pl.pallas_call(kernel, out_shape=out_shapes,
-                          interpret=interpret)(
+    operands = [
         fifo.reshape(N, P * D * F).astype(jnp.int32),
         count.astype(jnp.int32), rr_ptr.astype(jnp.int32),
         oreg.reshape(N, P * F).astype(jnp.int32),
@@ -290,8 +304,15 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
         inject_valid.astype(jnp.int32)[:, None],
         inject_flit.astype(jnp.int32),
         depth_rows.astype(jnp.int32)[:, None],
+    ]
+    if masked:
+        operands.append(link_mask_rows.astype(jnp.int32))
+    operands += [
         nbr_rows.astype(jnp.int32), opp_rows.astype(jnp.int32),
-        route_rows.astype(jnp.int32), src_rows.astype(jnp.int32))
+        route_rows.astype(jnp.int32), src_rows.astype(jnp.int32)]
+    (nfifo, ncount, nptr, noreg, noregv, nlock, injok, dv, dflit,
+     lm) = pl.pallas_call(kernel, out_shape=out_shapes,
+                          interpret=interpret)(*operands)
     return (nfifo.reshape(N, P, D, F), ncount, nptr,
             noreg.reshape(N, P, F), noregv, nlock,
             injok[:, 0].astype(jnp.bool_), dv[:, 0].astype(jnp.bool_),

@@ -42,7 +42,10 @@ from .backends import (get_backend, list_backends,  # noqa: F401
 from .engine import (FlowPlan, build_channel_plan,  # noqa: F401
                      build_flow_plan, compiled_sim, sim_cache_clear,
                      sim_cache_stats)
-from .result import ChannelStats, ClassStats, SimResult  # noqa: F401
+from .faults import (FaultModel, UnroutableCutError,  # noqa: F401
+                     cut_tables, dynamic_events)
+from .result import (ChannelStats, ClassStats,  # noqa: F401
+                     FaultStats, SimResult)
 from .routing import RouteTables, RoutingPolicy  # noqa: F401
 from .spec import NocSpec, PhysicalChannel, TrafficClass  # noqa: F401
 from .topology import (Mesh, Topology, Torus, hop_table,  # noqa: F401

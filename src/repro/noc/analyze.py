@@ -86,6 +86,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .faults import FaultModel
 from .routing import RoutingPolicy, RouteTables
 from .spec import NocSpec
 from .topology import Mesh, Topology, Torus, hop_table, run_table_checks
@@ -217,10 +218,13 @@ def _cdg_edges(rt: RouteTables) -> tuple[np.ndarray, np.ndarray]:
     q2 = rt.route[np.where(m1, r1, 0), j]
     c1 = (u * n_phys + q1 // V) * V + q1 % V
     c2 = (r1 * n_phys + q2 // V) * V + q2 % V
-    edges = np.stack([c1[m1], c2[m1]], axis=1)
-    labels = j[m1]
-    edges, idx = np.unique(edges, axis=0, return_index=True)
-    return edges, labels[idx]
+    n_chan = R * n_phys * V
+    # dedup on the scalar-encoded pair (a 1D int64 sort beats
+    # np.unique(axis=0)'s structured row sort several-fold)
+    enc = c1[m1].astype(np.int64) * n_chan + c2[m1]
+    enc, idx = np.unique(enc, return_index=True)
+    edges = np.stack([enc // n_chan, enc % n_chan], axis=1)
+    return edges, j[m1][idx]
 
 
 def _sccs(n: int, adj: list[list[int]]) -> list[list[int]]:
@@ -338,72 +342,97 @@ _LINT_OK = {
 
 
 def _bfs_dists(nbr: np.ndarray) -> np.ndarray:
-    """(R, R) shortest-path hop counts over the physical link graph."""
+    """(R, R) shortest-path hop counts over the physical link graph.
+
+    All-sources frontier BFS: one (R, R) boolean frontier matrix is
+    expanded one level per pass via a padded-gather over the (R, P-1)
+    neighbor table — O(diameter) numpy passes, no per-source python
+    walk.  Links are duplex (validated upstream), so gathering each
+    node's out-neighbors reaches exactly its in-frontier."""
     R, P = nbr.shape
-    adj = [[int(t) for t in nbr[r, :P - 1] if t >= 0] for r in range(R)]
+    t = nbr[:, :P - 1]
+    # missing ports self-loop: a self-gather lands inside ``seen`` and
+    # is masked right back out, so no padding column is needed
+    adj = np.where(t >= 0, t, np.arange(R)[:, None])
+    # source axis packed 8 sources/byte: each level is a few hundred
+    # kB of gathers + bitwise-ORs instead of multi-MB bool temps
+    frontier = np.packbits(np.eye(R, dtype=bool), axis=0)
+    seen = frontier.copy()
     dist = np.full((R, R), -1, np.int64)
-    for s in range(R):
-        dist[s, s] = 0
-        frontier = [s]
-        d = 0
-        while frontier:
-            d += 1
-            nxt = []
-            for v in frontier:
-                for w in adj[v]:
-                    if dist[s, w] < 0:
-                        dist[s, w] = d
-                        nxt.append(w)
-            frontier = nxt
+    np.fill_diagonal(dist, 0)
+    d = 0
+    while frontier.any():
+        d += 1
+        nxt = np.bitwise_or.reduce(frontier[:, adj], axis=2) & ~seen
+        seen |= nxt
+        dist[np.unpackbits(nxt, axis=0, count=R).astype(bool)] = d
+        frontier = nxt
     return dist
 
 
-def _dateline_check(topology: Topology, rt: RouteTables) -> CheckResult:
+def _dateline_check(topology: Topology, rt: RouteTables,
+                    detour_vc: int | None = None) -> CheckResult:
     """VC-of-hop monotonicity within each dimension run of every route:
     the escape/dateline (or valiant phase) bit may only step up — a
     downward step would re-enter the cycle-prone low VC after the
-    escape transition, voiding the deadlock-freedom argument."""
+    escape transition, voiding the deadlock-freedom argument.
+
+    The condition is local: route tables are functional in (router,
+    virtual destination), so the hop pair around any router on any walk
+    is fully determined by (that router, dest) — checking every
+    consecutive (hop at ``s``, hop at ``nbr(s)``) pair for every
+    (s, dest) covers every suffix of every walk in one vectorized pass
+    (the old per-hop walk re-derived exactly these pairs).
+
+    ``detour_vc`` (fault cut-outs) exempts hops on the dedicated detour
+    VC: the detour tree is outside the dateline discipline, and its own
+    acyclicity is covered by the CDG proof over the patched tables.
+    """
     if rt.n_vcs == 1:
         return CheckResult(
             "dateline_monotonicity", "lint", PASS,
             "n/a (single VC — no escape transition to order)")
     R = rt.nbr.shape[0]
     V, K = rt.n_vcs, rt.n_planes
+    rr = np.arange(R)[:, None]
+    dd = np.arange(R)[None, :]
+    off = rr != dd
     for k in range(K):
         route_k = rt.route[:, k * R:(k + 1) * R]
-        cur = np.tile(np.arange(R)[:, None], (1, R))
-        dd = np.tile(np.arange(R)[None, :], (R, 1))
-        prev_dim = np.full((R, R), -1, np.int64)
-        prev_vc = np.zeros((R, R), np.int64)
-        live = cur != dd
-        for _ in range(4 * R + 4):
-            if not live.any():
-                break
-            q = route_k[cur, dd]
-            phys, vc = q // V, q % V
-            dim = np.where(phys % 4 % 2 == 1, 0, 1)   # E/W: x, N/S: y
-            bad = live & (dim == prev_dim) & (vc < prev_vc)
-            if bad.any():
-                s, d = map(int, np.argwhere(bad)[0])
-                return CheckResult(
-                    "dateline_monotonicity", "lint", FAIL,
-                    f"plane {k}: route {s} -> {d} steps its VC back "
-                    f"down (VC {int(prev_vc[s, d])} -> {int(vc[s, d])} "
-                    f"at router {int(cur[s, d])}) within one dimension "
-                    "ring — the escape transition must be one-way",
-                    coords=(k, s, d, int(cur[s, d])))
-            prev_dim = np.where(live, dim, prev_dim)
-            prev_vc = np.where(live, vc, prev_vc)
-            cur = np.where(live, rt.nbr[cur, q], cur)
-            live = cur != dd
+        q1 = route_k                                  # hop taken at s
+        r2 = rt.nbr[rr, np.where(off, q1, 0)]         # next router
+        live = off & (r2 != dd)
+        q2 = route_k[np.where(live, r2, 0), dd]       # hop taken there
+        vc1, vc2 = q1 % V, q2 % V
+        dim1 = (q1 // V) % 4 % 2 == 1                 # E/W: x, N/S: y
+        dim2 = (q2 // V) % 4 % 2 == 1
+        bad = live & (dim1 == dim2) & (vc2 < vc1)
+        if detour_vc is not None:
+            bad &= (vc1 != detour_vc) & (vc2 != detour_vc)
+        if bad.any():
+            s, d = map(int, np.argwhere(bad)[0])
+            return CheckResult(
+                "dateline_monotonicity", "lint", FAIL,
+                f"plane {k}: route {s} -> {d} steps its VC back "
+                f"down (VC {int(vc1[s, d])} -> {int(vc2[s, d])} "
+                f"at router {int(r2[s, d])}) within one dimension "
+                "ring — the escape transition must be one-way",
+                coords=(k, s, d, int(r2[s, d])))
+    note = (" (fault-detour VC %d exempt — proved by the CDG pass)"
+            % detour_vc if detour_vc is not None else "")
     return CheckResult(
         "dateline_monotonicity", "lint", PASS,
         "VC-of-hop monotone within every dimension run across "
-        f"{K} plane(s) (escape transitions are one-way)")
+        f"{K} plane(s) (escape transitions are one-way){note}")
 
 
 def _lint_checks(topology: Topology, routing: RoutingPolicy,
-                 rt: RouteTables) -> list[CheckResult]:
+                 rt: RouteTables, faults=None) -> list[CheckResult]:
+    """``faults`` (a FaultModel with static cuts, or None) marks ``rt``
+    as fault-regenerated cut-out tables: minimality is no longer
+    claimed (detours stretch), the base-hop-table comparison is
+    meaningless, and the dedicated detour VC is exempt from the
+    dateline discipline (covered by the CDG pass instead)."""
     out = []
     results, hops = run_table_checks(rt.nbr, rt.opp, rt.route)
     for name, err, coords in results:
@@ -422,7 +451,8 @@ def _lint_checks(topology: Topology, routing: RoutingPolicy,
     dist = _bfs_dists(np.asarray(topology.tables()[0]))
     off = ~np.eye(R, dtype=bool)
     minimal_claim = (routing.algorithm in ("xy", "o1turn")
-                     and not getattr(topology, "express", ()))
+                     and not getattr(topology, "express", ())
+                     and faults is None)
     worst = 0.0
     for k in range(K):
         hk = hops[:, k * R:(k + 1) * R]
@@ -436,15 +466,21 @@ def _lint_checks(topology: Topology, routing: RoutingPolicy,
             break
         worst = max(worst, float(np.max(hk[off] / dist[off])))
     else:
+        why = ("non-minimal around the cut" if faults is not None
+               else "non-minimal by design")
         note = ("minimal (hop counts equal BFS shortest paths)"
                 if minimal_claim else
-                f"non-minimal by design, worst stretch {worst:.2f}x "
+                f"{why}, worst stretch {worst:.2f}x "
                 "over BFS shortest paths")
         out.append(CheckResult(
             "route_minimality", "lint", PASS,
             f"{K} plane(s) {note}"))
 
-    if routing.algorithm in ("xy", "o1turn"):
+    if faults is not None:
+        out.append(CheckResult(
+            "hop_consistency", "lint", PASS,
+            "n/a (fault detours diverge from the base hop table)"))
+    elif routing.algorithm in ("xy", "o1turn"):
         base = hop_table(topology)
         h0 = hops[:, :R]
         if np.array_equal(h0, base):
@@ -463,18 +499,49 @@ def _lint_checks(topology: Topology, routing: RoutingPolicy,
             "hop_consistency", "lint", PASS,
             "n/a (detour planes do not follow the base hop table)"))
 
-    out.append(_dateline_check(topology, rt))
+    detour_vc = rt.n_vcs - 1 if faults is not None else None
+    out.append(_dateline_check(topology, rt, detour_vc=detour_vc))
     return out
 
 
 @functools.lru_cache(maxsize=128)
-def analyze_routing(topology: Topology,
-                    routing: RoutingPolicy) -> tuple[CheckResult, ...]:
+def analyze_routing(topology: Topology, routing: RoutingPolicy,
+                    faults=None) -> tuple[CheckResult, ...]:
     """Fabric-level verification (CDG + route-table lint) for one
     (topology, routing) pair — the expensive half, cached so one proof
-    or rejection serves every spec sharing the fabric."""
-    rt = routing.compile(topology)
-    checks = _lint_checks(topology, routing, rt)
+    or rejection serves every spec sharing the fabric.
+
+    ``faults`` (a :class:`~repro.noc.faults.FaultModel`) verifies the
+    fabric *as cut*: static dead links/nodes (with ``reroute=True``)
+    swap in the regenerated cut-out tables, a ``fault_reroute`` check
+    reports the regeneration (FAIL with the disconnecting coordinates
+    when the cut is unroutable — no other check can run without
+    tables), and the full lint + CDG proof runs over the patched
+    tables, so every fault detour is *proved* deadlock-free, never
+    assumed.  Dynamic-only fault models verify identically to the
+    healthy fabric (masked links stall flits, they never re-route)."""
+    from .faults import UnroutableCutError, cut_tables
+    cut = (faults is not None and faults.has_static and faults.reroute)
+    if cut:
+        try:
+            rt = cut_tables(topology, routing, faults)
+        except UnroutableCutError as e:
+            return (CheckResult(
+                "fault_reroute", "lint", FAIL, str(e), coords=e.coords,
+                suggestion="drop the isolating dead links/nodes from "
+                           "the FaultModel, or set reroute=False and "
+                           "accept the wedge"),)
+        checks = _lint_checks(topology, routing, rt, faults=faults)
+        nl = len(set(map(tuple, map(sorted, faults.dead_links))))
+        checks.insert(0, CheckResult(
+            "fault_reroute", "lint", PASS,
+            f"cut-out tables regenerated around {nl} dead link(s) and "
+            f"{len(faults.dead_nodes)} dead node(s); detours ride "
+            f"dedicated VC {rt.n_vcs - 1} along a spanning tree of "
+            "the surviving fabric"))
+    else:
+        rt = routing.compile(topology)
+        checks = _lint_checks(topology, routing, rt)
     structural_fail = any(c.verdict == FAIL and c.family == "lint"
                           and c.name in _LINT_OK for c in checks)
     if not structural_fail:
@@ -613,8 +680,20 @@ def _subject(spec: NocSpec) -> str:
     ex = f" express={t.express}" if getattr(t, "express", ()) else ""
     r = spec.routing
     extra = f", n_valiant={r.n_valiant}" if r.algorithm == "valiant" else ""
+    fx = ""
+    if spec.faults is not None:
+        f = spec.faults
+        bits = []
+        if f.dead_links:
+            bits.append(f"{len(f.dead_links)} dead link(s)")
+        if f.dead_nodes:
+            bits.append(f"{len(f.dead_nodes)} dead node(s)")
+        if f.link_events or f.n_events:
+            bits.append("dynamic events")
+        if bits:
+            fx = f", faults[{', '.join(bits)}]"
     return (f"{kind} {t.nx}x{t.ny}{ex}, {len(spec.channels)} channel(s), "
-            f"routing={r.algorithm}(n_vcs={r.n_vcs}{extra})")
+            f"routing={r.algorithm}(n_vcs={r.n_vcs}{extra}){fx}")
 
 
 def analyze(spec: NocSpec, level: str = "full") -> AnalysisReport:
@@ -627,7 +706,8 @@ def analyze(spec: NocSpec, level: str = "full") -> AnalysisReport:
         raise ValueError(f"level must be 'fast' or 'full', got {level!r}")
     checks = list(check_protocol(spec))
     if level == "full":
-        checks = list(analyze_routing(spec.topology, spec.routing)) + checks
+        checks = list(analyze_routing(spec.topology, spec.routing,
+                                      spec.faults)) + checks
     return AnalysisReport(subject=_subject(spec), checks=tuple(checks),
                           level=level)
 
@@ -713,6 +793,25 @@ def _preset_matrix() -> list[_MatrixRow]:
                                        routing=RoutingPolicy.valiant(4))),
         _MatrixRow("narrow_wide mesh 7x7 xy(1)",
                    NocSpec.narrow_wide(7, 7)),
+        # fault rows: every cut-out table set must re-pass the full
+        # lint + CDG proof; an unroutable cut must FAIL with the
+        # disconnecting coordinates
+        _MatrixRow("narrow_wide mesh xy(2) dead-link (5,6)",
+                   NocSpec.narrow_wide(
+                       4, 4, routing=RoutingPolicy.xy(2),
+                       faults=FaultModel(dead_links=((5, 6),))),
+                   note="cut-out reroute re-proved deadlock-free"),
+        _MatrixRow("narrow_wide torus xy(3) dead-node 5",
+                   NocSpec.narrow_wide(
+                       4, 4, topology=torus, routing=RoutingPolicy.xy(3),
+                       faults=FaultModel(dead_nodes=(5,))),
+                   note="node cut-out reroute re-proved deadlock-free"),
+        _MatrixRow("narrow_wide mesh xy(2) corner cut  [unroutable]",
+                   NocSpec.narrow_wide(
+                       4, 4, routing=RoutingPolicy.xy(2),
+                       faults=FaultModel(dead_links=((0, 1), (0, 4)))),
+                   expect_fail=True, must_name="fault_reroute",
+                   note="cut isolates router 0 — flagged with coords"),
     ]
     return rows
 
@@ -767,6 +866,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="virtual channels (0: the algorithm's default)")
     ap.add_argument("--n-valiant", type=int, default=2)
     ap.add_argument("--resp-q-cap", type=int, default=256)
+    ap.add_argument("--dead-link", type=int, nargs=2, action="append",
+                    metavar=("A", "B"), default=[],
+                    help="kill the duplex link between routers A and B "
+                         "(repeatable); routes are regenerated around "
+                         "the cut and re-proved deadlock-free")
+    ap.add_argument("--dead-node", type=int, action="append",
+                    metavar="N", default=[],
+                    help="kill router N and all its links (repeatable)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="print full per-check reports in matrix mode")
     args = ap.parse_args(argv)
@@ -778,10 +885,21 @@ def main(argv: list[str] | None = None) -> int:
         topo: Topology = Torus(args.nx, args.ny)
     else:
         topo = Mesh(args.nx, args.ny, express=tuple(args.express))
+    faults = None
+    if args.dead_link or args.dead_node:
+        faults = FaultModel(
+            dead_links=tuple((a, b) for a, b in args.dead_link),
+            dead_nodes=tuple(args.dead_node))
+    policy = _policy(args)
+    if (faults is not None and not args.n_vcs
+            and policy.algorithm == "xy"):
+        # cut-out reroute needs the spare detour VC; default to the
+        # smallest budget that admits it rather than rejecting
+        policy = RoutingPolicy.xy(policy.required_vcs(topo) + 1)
     try:
         spec = _PRESETS[args.preset](
             args.nx, args.ny, topology=topo, resp_q_cap=args.resp_q_cap,
-            routing=_policy(args))
+            routing=policy, faults=faults)
     except ValueError as e:                    # construction-time reject
         print(f"rejected at construction: {e}")
         return 1

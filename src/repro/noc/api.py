@@ -185,12 +185,63 @@ def _depths(spec: NocSpec) -> np.ndarray:
     return np.asarray([ch.depth for ch in spec.channels], np.int32)
 
 
+def _fault_ops(spec: NocSpec, timeout_cycles=None, max_retries=None,
+               backoff_base=None) -> tuple:
+    """The five extra traced operands of a faulted simulator (empty
+    tuple when ``spec.faults is None`` — the healthy signature).  The
+    keyword overrides shadow the FaultModel's declared robustness knobs
+    without recompiling, exactly like ``service_lat`` etc."""
+    if spec.faults is None:
+        for name, v in (("timeout_cycles", timeout_cycles),
+                        ("max_retries", max_retries),
+                        ("backoff_base", backoff_base)):
+            if v is not None:
+                raise ValueError(
+                    f"{name} override requires spec.faults (a FaultModel)")
+        return ()
+    from .faults import dynamic_events
+    fm = spec.faults
+    ev_fail, ev_heal, _ = dynamic_events(spec.topology, spec.routing, fm,
+                                         spec.cycles)
+    tmo = _per_class_vec(spec, timeout_cycles, fm.timeout_cycles,
+                         "timeout_cycles")
+    mr = np.int32(fm.max_retries if max_retries is None else max_retries)
+    bo = np.int32(fm.backoff_base if backoff_base is None
+                  else backoff_base)
+    if bo < 1:
+        raise ValueError(f"backoff_base must be >= 1, got {int(bo)}")
+    return (ev_fail, ev_heal, tmo, mr, bo)
+
+
+def _check_dead_traffic(spec: NocSpec, times: np.ndarray,
+                        dests: np.ndarray) -> None:
+    """Traffic sourced at or destined to a statically dead node is a
+    workload/fault contradiction — reject it up front instead of
+    reporting an undrained run."""
+    fm = spec.faults
+    if fm is None or not fm.dead_nodes:
+        return
+    dead = np.asarray(sorted(set(fm.dead_nodes)), np.int32)
+    valid = times < BIG
+    if valid[:, dead, :].any():
+        bad = dead[valid[:, dead, :].any(axis=(0, 2))]
+        raise ValueError(
+            f"schedule sources traffic at dead node(s) {bad.tolist()}")
+    to_dead = valid & np.isin(dests, dead)
+    if to_dead.any():
+        bad = sorted(set(dests[to_dead].tolist()))
+        raise ValueError(
+            f"schedule targets dead node(s) {bad}")
+
+
 def simulate_schedules(spec: NocSpec,
                        schedules: Mapping[str, tuple],
                        *, service_lat=None,
                        max_outstanding: Sequence[int] | None = None,
                        burst_beats: Sequence[int] | None = None,
                        service_jitter=None, jitter_seed: int = 0,
+                       timeout_cycles=None, max_retries=None,
+                       backoff_base=None,
                        backend: str = "jnp",
                        verify: str = "fast") -> SimResult:
     """Run one experiment from raw per-class ``(times, dests[, writes])``
@@ -204,15 +255,22 @@ def simulate_schedules(spec: NocSpec,
     per (topology, routing) — e.g. a VC-less torus spec is rejected
     with the offending (link, VC) cycle instead of wedging), ``"off"``
     skips verification (how the wedge regressions simulate the
-    documented-deadlocky configs on purpose)."""
+    documented-deadlocky configs on purpose).
+
+    On a spec with a :class:`~repro.noc.faults.FaultModel`,
+    ``timeout_cycles``/``max_retries``/``backoff_base`` shadow the
+    model's declared NI robustness knobs (traced — no recompile) and
+    the result carries :class:`~repro.noc.result.FaultStats`."""
     _verify(spec, verify)
     times, dests, writes = stack_schedules(spec, schedules)
+    _check_dead_traffic(spec, times, dests)
     sl, mo, bb = _dyn_scalars(spec, service_lat, max_outstanding,
                               burst_beats)
     jt = jitter_table(spec, service_jitter, seed=jitter_seed,
                       service_lat=service_lat)
+    fops = _fault_ops(spec, timeout_cycles, max_retries, backoff_base)
     raw = compiled_sim(spec, times.shape[-1], backend)(
-        times, dests, writes, sl, mo, bb, jt, _depths(spec))
+        times, dests, writes, sl, mo, bb, jt, _depths(spec), *fops)
     return SimResult.from_raw(spec, raw)
 
 
@@ -221,6 +279,7 @@ def simulate(spec: NocSpec, workload: Workload, *,
              max_outstanding: Sequence[int] | None = None,
              burst_beats: Sequence[int] | None = None,
              service_jitter=None, jitter_seed: int = 0,
+             timeout_cycles=None, max_retries=None, backoff_base=None,
              backend: str = "jnp", verify: str = "fast") -> SimResult:
     """Run one experiment; scalar keyword overrides shadow the spec's
     declared values without recompiling (they are traced operands).
@@ -231,13 +290,18 @@ def simulate(spec: NocSpec, workload: Workload, *,
     kernel — see :mod:`repro.noc.backends`); results are
     backend-invariant.  ``verify="full"`` statically rejects
     deadlock-prone specs before stepping (see
-    :func:`simulate_schedules` / :mod:`repro.noc.analyze`)."""
+    :func:`simulate_schedules` / :mod:`repro.noc.analyze`).  The NI
+    robustness knobs (``timeout_cycles``/``max_retries``/
+    ``backoff_base``) require a spec with a FaultModel."""
     return simulate_schedules(spec, workload.schedules(spec),
                               service_lat=service_lat,
                               max_outstanding=max_outstanding,
                               burst_beats=burst_beats,
                               service_jitter=service_jitter,
-                              jitter_seed=jitter_seed, backend=backend,
+                              jitter_seed=jitter_seed,
+                              timeout_cycles=timeout_cycles,
+                              max_retries=max_retries,
+                              backoff_base=backoff_base, backend=backend,
                               verify=verify)
 
 
@@ -264,6 +328,7 @@ def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
     if n == 0:
         raise ValueError("empty sweep")
     _verify(spec, verify)
+    fops = _fault_ops(spec)    # fault knobs stay spec-declared per batch
     per_point = [wl.schedules(spec) for wl in workloads]
     T = max(max(np.asarray(t).reshape(spec.n_routers, -1).shape[1]
                 for t, *_ in sched.values()) for sched in per_point)
@@ -321,12 +386,15 @@ def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
             service_lat=sl[i] if sl_ax == 0 else sl) for i in range(n)])
         jt_ax = 0
 
+    for t, d in ((times[i], dests[i]) for i in range(n)):
+        _check_dead_traffic(spec, t, d)
     fn = compiled_sim(spec, T, backend)
     raw = jax.vmap(fn, in_axes=(0, 0, 0, sl_ax, mo_ax, bb_ax, jt_ax,
-                                None))(
+                                None, *((None,) * len(fops))))(
         jnp.asarray(times), jnp.asarray(dests), jnp.asarray(writes),
         jnp.asarray(sl), jnp.asarray(mo), jnp.asarray(bb),
-        jnp.asarray(jt), jnp.asarray(_depths(spec)))
+        jnp.asarray(jt), jnp.asarray(_depths(spec)),
+        *(jnp.asarray(x) for x in fops))
     return SimResult.from_raw(spec, raw)
 
 
@@ -352,13 +420,18 @@ def _batch_depth_sweep(specs: Sequence[NocSpec], wls: Sequence[Workload],
     writes = np.stack([w for _, _, w in stacked])
     sl, mo, bb = _dyn_scalars(base, None, None, None)
     jt = jitter_table(base)
+    fops = _fault_ops(base)
+    for t, d in ((times[i], dests[i]) for i in range(len(specs))):
+        _check_dead_traffic(base, t, d)
     depths = np.stack([_depths(s) for s in specs])         # (n, n_ch)
     fn = compiled_sim(base, T, backend,
                       max_depth=int(depths.max()))
-    raw = jax.vmap(fn, in_axes=(0, 0, 0, None, None, None, None, 0))(
+    raw = jax.vmap(fn, in_axes=(0, 0, 0, None, None, None, None, 0,
+                                *((None,) * len(fops))))(
         jnp.asarray(times), jnp.asarray(dests), jnp.asarray(writes),
         jnp.asarray(sl), jnp.asarray(mo), jnp.asarray(bb),
-        jnp.asarray(jt), jnp.asarray(depths))
+        jnp.asarray(jt), jnp.asarray(depths),
+        *(jnp.asarray(x) for x in fops))
     return SimResult.from_raw(base, raw)
 
 

@@ -31,7 +31,17 @@ The protocol:
   Returns ``(state, inj_ok (C, R), deliver_valid (C, R),
   deliver_flit (C, R, F), link_moves (C,))``.
 
-A backend factory takes ``(topology, routing=None)``: with a
+With a :class:`~repro.noc.faults.FaultModel` (``faults=``) the step
+takes one extra traced operand — ``link_mask (R, P') bool`` marking
+virtual output ports whose physical link is currently dead (shared by
+every channel: the fault is physical).  Masked links drop their grants;
+flits wait under backpressure, nothing is lost.  ``faults=None`` (the
+default) builds the original mask-free step, so healthy specs stay
+bit-identical.  Static dead links/nodes additionally swap the route
+table for the fault-aware cut-out tables
+(:func:`repro.noc.faults.cut_tables`).
+
+A backend factory takes ``(topology, routing=None, faults=None)``: with a
 :class:`~repro.noc.routing.RoutingPolicy` the fabric runs on that
 policy's compiled VC/plane-expanded tables (each non-local physical
 port unrolled into ``n_vcs`` virtual ports, route tables widened to
@@ -78,8 +88,8 @@ BACKENDS: dict[str, Callable[..., Network]] = {}
 
 
 def register_backend(name: str):
-    """Register ``fn(topology, routing=None) -> Network`` under
-    ``name``."""
+    """Register ``fn(topology, routing=None, faults=None) -> Network``
+    under ``name``."""
     def deco(fn):
         BACKENDS[name] = fn
         return fn
@@ -90,9 +100,16 @@ def list_backends() -> list[str]:
     return sorted(BACKENDS)
 
 
-def _resolve_tables(topo: Topology, routing):
+def _resolve_tables(topo: Topology, routing, faults=None):
     """``(nbr, opp, route, n_vcs)`` — the policy's compiled expanded
-    tables, or the topology's base tables when ``routing`` is None."""
+    tables, or the topology's base tables when ``routing`` is None.
+    A ``FaultModel`` with static dead links/nodes (and ``reroute=True``)
+    swaps in the fault-aware cut-out route table instead."""
+    if faults is not None and faults.has_static and faults.reroute:
+        from .faults import cut_tables
+        from .routing import RoutingPolicy
+        rt = cut_tables(topo, routing or RoutingPolicy(), faults)
+        return rt.nbr, rt.opp, rt.route, rt.n_vcs
     if routing is None:
         nbr, opp, route = topo.tables()
         return nbr, opp, route, 1
@@ -121,21 +138,26 @@ def _stacked_init(R: int, P: int) -> Callable[[int, int], NetState]:
     return init
 
 
-def _vmapped_network(topo: Topology, routing=None, arbiter=None) -> Network:
-    nbr, opp, route, n_vcs = _resolve_tables(topo, routing)
+def _vmapped_network(topo: Topology, routing=None, arbiter=None,
+                     faults=None) -> Network:
+    nbr, opp, route, n_vcs = _resolve_tables(topo, routing, faults)
     R, P = nbr.shape
-    one = make_fabric_step(nbr, opp, route, arbiter=arbiter, n_vcs=n_vcs)
+    masked = faults is not None
+    one = make_fabric_step(nbr, opp, route, arbiter=arbiter, n_vcs=n_vcs,
+                           masked=masked)
+    # the link mask is shared across channels (the fault is physical)
+    axes = (0, 0, 0, 0, None) if masked else (0, 0, 0, 0)
     return Network(init=_stacked_init(R, P),
-                   step=jax.vmap(one, in_axes=(0, 0, 0, 0)))
+                   step=jax.vmap(one, in_axes=axes))
 
 
 @register_backend("jnp")
-def _jnp_backend(topo: Topology, routing=None) -> Network:
-    return _vmapped_network(topo, routing)
+def _jnp_backend(topo: Topology, routing=None, faults=None) -> Network:
+    return _vmapped_network(topo, routing, faults=faults)
 
 
 @register_backend("pallas")
-def _pallas_backend(topo: Topology, routing=None) -> Network:
+def _pallas_backend(topo: Topology, routing=None, faults=None) -> Network:
     from repro.kernels.noc_router import router_arbiter_pallas
 
     def arbiter(out_port, beat, rr_ptr, oreg_free, lock_in):
@@ -143,11 +165,11 @@ def _pallas_backend(topo: Topology, routing=None) -> Network:
             out_port, beat, rr_ptr, oreg_free, lock_in)
         return winner, pop.astype(jnp.bool_), new_ptr, new_lock
 
-    return _vmapped_network(topo, routing, arbiter=arbiter)
+    return _vmapped_network(topo, routing, arbiter=arbiter, faults=faults)
 
 
 @functools.lru_cache(maxsize=64)
-def _fused_tables(topo: Topology, routing, n_ch: int):
+def _fused_tables(topo: Topology, routing, n_ch: int, faults=None):
     """Row-folded static tables for the fused kernel: channel ``c``'s
     router ``r`` becomes row ``c*R + r``; neighbor/feeder indices are
     offset into the row space so one kernel advances every channel.
@@ -156,7 +178,7 @@ def _fused_tables(topo: Topology, routing, n_ch: int):
     Returned as *numpy* — this cache is often first populated inside a
     jit trace, and caching jnp constants would leak tracers into later
     traces."""
-    nbr, opp, route, _ = _resolve_tables(topo, routing)
+    nbr, opp, route, _ = _resolve_tables(topo, routing, faults)
     src_r, src_o = feeder_tables(nbr, opp)
     R, P = nbr.shape
     offs = (np.arange(n_ch) * R)[:, None, None]             # (C, 1, 1)
@@ -172,18 +194,25 @@ def _fused_tables(topo: Topology, routing, n_ch: int):
 
 
 @register_backend("pallas_fused")
-def _pallas_fused_backend(topo: Topology, routing=None) -> Network:
+def _pallas_fused_backend(topo: Topology, routing=None,
+                          faults=None) -> Network:
     from repro.kernels.noc_router import fused_fabric_step_pallas
 
-    nbr, _, _, n_vcs = _resolve_tables(topo, routing)
+    nbr, _, _, n_vcs = _resolve_tables(topo, routing, faults)
     R, P = nbr.shape
+    masked = faults is not None
 
-    def step(state: NetState, inject_valid, inject_flit, depths):
+    def step(state: NetState, inject_valid, inject_flit, depths,
+             *fault_args):
         C = state.count.shape[0]
         D, F = state.fifo.shape[3], state.fifo.shape[4]
         N = C * R
-        tables = _fused_tables(topo, routing, C)
+        tables = _fused_tables(topo, routing, C, faults)
         depth_rows = jnp.repeat(depths.astype(jnp.int32), R)
+        mask_rows = None
+        if masked:
+            (link_mask,) = fault_args                # (R, P), channel-shared
+            mask_rows = jnp.tile(link_mask, (C, 1))  # (N, P)
         (fifo, count, rr_ptr, oreg, oreg_v, lock_in, inj_ok, dv, dflit,
          lm_rows) = fused_fabric_step_pallas(
             state.fifo.reshape(N, P, D, F),
@@ -193,7 +222,7 @@ def _pallas_fused_backend(topo: Topology, routing=None) -> Network:
             state.oreg_v.reshape(N, P),
             state.lock_in.reshape(N, P),
             inject_valid.reshape(N), inject_flit.reshape(N, F),
-            depth_rows, *tables, n_vcs=n_vcs)
+            depth_rows, *tables, n_vcs=n_vcs, link_mask_rows=mask_rows)
         new_state = NetState(
             fifo=fifo.reshape(C, R, P, D, F),
             count=count.reshape(C, R, P),

@@ -344,6 +344,57 @@ class NIState(NamedTuple):
     w_last_t: jax.Array
 
 
+class FaultState(NamedTuple):
+    """NI robustness state, live only when the spec carries a
+    :class:`~repro.noc.faults.FaultModel` (``spec.faults is None``
+    compiles all of this out — the healthy program is untouched).
+
+    The pending table tracks every in-flight transaction per (NI, lane):
+    ``p_cap`` slots hold (txn id, dest, original issue time, current
+    attempt start / retry due time, retries left, direction).  A slot is
+    free when ``pend_txn < 0``; inserts take the first free slot and
+    completions match by txn id, so late or duplicate responses (a
+    retried transaction whose original eventually arrives) are
+    recognized and dropped instead of double-freeing ROB credits.
+    ``p_cap = 2 * w_cap`` covers the read + write ROB budgets; raising
+    ``max_outstanding`` past the declared value via the traced override
+    can overflow it — the same unchecked-overflow contract as
+    ``resp_q_cap`` and the W rings."""
+    pend_txn: jax.Array     # (R, n_cls, p_cap) int32, -1 = free slot
+    pend_dest: jax.Array    # (R, n_cls, p_cap)
+    pend_t0: jax.Array      # (R, n_cls, p_cap) original issue cycle
+    pend_at: jax.Array      # (R, n_cls, p_cap) attempt start / retry due
+    pend_left: jax.Array    # (R, n_cls, p_cap) retries left
+    pend_wait: jax.Array    # (R, n_cls, p_cap) bool: attempt in flight
+    pend_wr: jax.Array      # (R, n_cls, p_cap) bool: write transaction
+    # degradation counters
+    retries: jax.Array      # (R, n_cls) retry re-injections
+    timeouts: jax.Array     # (R, n_cls) watchdog firings
+    slverr: jax.Array       # (R, n_cls) SLVERR error responses
+    dlv_fault: jax.Array    # (R, n_cls) completions while a fault active
+    beats_fault: jax.Array  # (R, n_cls) data beats rx while fault active
+    flc: jax.Array          # scalar: sum over cycles of #dead links
+    fcyc: jax.Array         # scalar: cycles with any fault active
+
+
+def fault_p_cap(plan: "FlowPlan") -> int:
+    """Pending-table capacity per lane: reads + writes each hold up to
+    ``w_cap`` (= max declared ``max_outstanding``) credits."""
+    return 2 * plan.w_cap
+
+
+def init_faults(R: int, n_cls: int, p_cap: int) -> FaultState:
+    z3 = jnp.zeros((R, n_cls, p_cap), jnp.int32)
+    b3 = jnp.zeros((R, n_cls, p_cap), jnp.bool_)
+    z2 = jnp.zeros((R, n_cls), jnp.int32)
+    return FaultState(
+        pend_txn=jnp.full((R, n_cls, p_cap), -1, jnp.int32),
+        pend_dest=z3, pend_t0=z3, pend_at=z3, pend_left=z3,
+        pend_wait=b3, pend_wr=b3,
+        retries=z2, timeouts=z2, slverr=z2, dlv_fault=z2, beats_fault=z2,
+        flc=jnp.int32(0), fcyc=jnp.int32(0))
+
+
 class SimState(NamedTuple):
     net: NamedTuple         # stacked NetState, (n_ch, R, ...) leaves
     ni: NIState
@@ -353,6 +404,7 @@ class SimState(NamedTuple):
     max_stall: jax.Array    # scalar: longest such streak
     vc_occ_sum: jax.Array   # (n_ch, n_vcs) summed per-VC FIFO occupancy
     vc_occ_max: jax.Array   # (n_ch, n_vcs) peak per-VC FIFO occupancy
+    fs: NamedTuple | tuple = ()   # FaultState, or () when faults=None
 
 
 def init_ni(R: int, plan: FlowPlan, cap: int) -> NIState:
@@ -387,6 +439,18 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
     wq_ids = jnp.arange(plan.n_cls)
     n_cls = plan.n_cls
 
+    # fault machinery is built ONLY when the spec declares a FaultModel:
+    # the healthy program below is literally the pre-fault code path
+    faulted = spec.faults is not None
+    if faulted:
+        from .faults import dynamic_events
+        _, _, _masks = dynamic_events(spec.topology, spec.routing,
+                                      spec.faults, spec.cycles)
+        M_np = np.asarray(_masks)            # (E, R, P') static per-event
+        p_cap = fault_p_cap(plan)
+        lane_ids = jnp.arange(n_cls)
+        p_ids = jnp.arange(p_cap)
+
     def step(dyn, state: SimState, _):
         times, dests = dyn["times"], dyn["dests"]     # (R, n_cls, T)
         writes = dyn["writes"]                        # (R, n_cls, T)
@@ -396,6 +460,61 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         ni = state.ni
         now = state.cycle
 
+        if faulted:
+            # ---- link mask from the event schedule ----------------------
+            ev_fail, ev_heal = dyn["ev_fail"], dyn["ev_heal"]   # (E,)
+            timeout = dyn["timeout"]                   # (n_cls,) lanes
+            max_retries = dyn["max_retries"]           # scalar
+            backoff = dyn["backoff"]                   # scalar
+            fs = state.fs
+            dead_e = (ev_fail <= now) & (now < ev_heal)          # (E,)
+            link_mask = jnp.any(
+                dead_e[:, None, None] & jnp.asarray(M_np), axis=0)
+
+            # ---- watchdog scan: timeout -> retry or SLVERR --------------
+            act = fs.pend_txn >= 0
+            tmo = timeout[None, :, None]
+            to = act & fs.pend_wait & (tmo > 0) & (now - fs.pend_at >= tmo)
+            exh = to & (fs.pend_left <= 0)             # retries exhausted
+            rearm = to & (fs.pend_left > 0)
+            # exponential backoff with seeded jitter (reuses the service-
+            # jitter table, keyed off (txn, attempt, NI) so concurrent
+            # retries desynchronize instead of thundering back together)
+            used = jnp.clip(max_retries - fs.pend_left, 0, 16)
+            jidx = (fs.pend_txn * 7 + used * 13
+                    + rows[:, None, None] * 131) % JITTER_TABLE_LEN
+            jt_l = jnp.asarray(dyn["jitter"], jnp.int32)
+            joff = jnp.abs(jt_l[lane_ids[None, :, None], jidx])
+            due_at = now + (backoff << used) + joff
+            # SLVERR: drop the transaction, free its ROB credit — the
+            # requester observes an error response instead of data
+            ni = ni._replace(
+                out_r=ni.out_r - jnp.sum(
+                    exh & ~fs.pend_wr, axis=2).astype(jnp.int32),
+                out_w=ni.out_w - jnp.sum(
+                    exh & fs.pend_wr, axis=2).astype(jnp.int32))
+            fs = fs._replace(
+                pend_txn=jnp.where(exh, -1, fs.pend_txn),
+                pend_wait=fs.pend_wait & ~to,
+                pend_left=fs.pend_left - rearm.astype(jnp.int32),
+                pend_at=jnp.where(rearm, due_at, fs.pend_at),
+                timeouts=fs.timeouts
+                + jnp.sum(to, axis=2).astype(jnp.int32),
+                slverr=fs.slverr + jnp.sum(exh, axis=2).astype(jnp.int32))
+
+            # ---- retry candidate per lane: first backoff-expired slot ---
+            rdy = (fs.pend_txn >= 0) & ~fs.pend_wait & (fs.pend_at <= now)
+            has_rt = jnp.any(rdy, axis=2)              # (R, n_cls)
+            rslot = jnp.argmax(rdy, axis=2)
+
+            def _take_slot(a, s):
+                return jnp.take_along_axis(a, s[:, :, None],
+                                           axis=2)[:, :, 0]
+
+            r_txn = _take_slot(fs.pend_txn, rslot)
+            r_dest = _take_slot(fs.pend_dest, rslot)
+            r_wr = _take_slot(fs.pend_wr, rslot)
+
         # ---- source side: per-class AR/AW candidates (ROB gated) --------
         p = jnp.clip(ni.ptr, 0, T - 1)[:, :, None]
         t_sel = jnp.take_along_axis(times, p, axis=2)[:, :, 0]
@@ -404,6 +523,15 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         want_ar = due & ~is_wr & (ni.out_r < max_out[None, :])
         want_aw = due & is_wr & (ni.out_w < max_out[None, :])
         req_d = jnp.take_along_axis(dests, p, axis=2)[:, :, 0]
+        txn_src = ni.ptr
+        if faulted:
+            # a pending retry preempts the lane's fresh candidate: same
+            # injection machinery, but dest/txn come from the pending
+            # table and no new schedule entry is consumed
+            want_ar = jnp.where(has_rt, ~r_wr, want_ar)
+            want_aw = jnp.where(has_rt, r_wr, want_aw)
+            req_d = jnp.where(has_rt, r_dest, req_d)
+            txn_src = jnp.where(has_rt, r_txn, ni.ptr)
 
         # ---- ring heads (response rings + W rings), all at once ---------
         slot_hr = ni.rq_head[:, :plan.n_rq] % cap      # (R, n_rq)
@@ -445,7 +573,7 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
                 kind_v = int(pa.aw_kinds[i])
             return (jnp.where(s, req_d[:, i], dest),
                     jnp.where(s, kind_v, kind),
-                    jnp.where(s, ni.ptr[:, i], txn),
+                    jnp.where(s, txn_src[:, i], txn),
                     jnp.where(s, 1, beat))
 
         for c in range(plan.n_ch):
@@ -576,8 +704,12 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         # ---- ONE stacked fabric step for every channel ------------------
         iv = jnp.stack(iv_cols)                        # (n_ch, R)
         iflit = jnp.stack(flit_cols)                   # (n_ch, R, F)
-        net, ok_ch, dv_ch, df_ch, lm = net_step(
-            state.net, iv, iflit, dyn["depths"])
+        if faulted:
+            net, ok_ch, dv_ch, df_ch, lm = net_step(
+                state.net, iv, iflit, dyn["depths"], link_mask)
+        else:
+            net, ok_ch, dv_ch, df_ch, lm = net_step(
+                state.net, iv, iflit, dyn["depths"])
 
         # per-VC input-FIFO occupancy (non-local ports; virtual port
         # q = link * n_vcs + vc under the routing policy's table fold)
@@ -600,8 +732,21 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         for c, hold in hold_of_ch.items():
             inj_rr = inj_rr.at[:, c].add((ok_ch[c] & ~hold).astype(jnp.int32))
 
-        ptr0 = ni.ptr                                  # pre-advance ptr
-        inj = (inj_ar | inj_aw).astype(jnp.int32)
+        txn0 = txn_src        # injected txn per lane (== pre-advance ptr
+        #                       for fresh issues; pending txn on a retry)
+        if faulted:
+            # retries advance no pointer and consume no fresh credit —
+            # the transaction still owns its original ROB slot
+            inj_any = inj_ar | inj_aw
+            fresh = inj_any & ~has_rt
+            retry_inj = inj_any & has_rt
+            inj = fresh.astype(jnp.int32)
+            cr_ar = (inj_ar & ~has_rt).astype(jnp.int32)
+            cr_aw = (inj_aw & ~has_rt).astype(jnp.int32)
+        else:
+            inj = (inj_ar | inj_aw).astype(jnp.int32)
+            cr_ar = inj_ar.astype(jnp.int32)
+            cr_aw = inj_aw.astype(jnp.int32)
         left = h_beats - sent.astype(jnp.int32)
         beats_upd = jnp.where(sent, left, h_beats)     # (R, n_q)
         rq = ni.rq.at[rows[:, None], rq_ids[None, :], slot_hr,
@@ -609,11 +754,34 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         wq = ni.wq.at[rows[:, None], wq_ids[None, :], slot_hw,
                       Q_BEATS].set(beats_upd[:, plan.n_rq:])
         ni = ni._replace(
-            ptr=ni.ptr + inj, out_r=ni.out_r + inj_ar.astype(jnp.int32),
-            out_w=ni.out_w + inj_aw.astype(jnp.int32), inj_rr=inj_rr,
+            ptr=ni.ptr + inj, out_r=ni.out_r + cr_ar,
+            out_w=ni.out_w + cr_aw, inj_rr=inj_rr,
             rq=rq, wq=wq,
             rq_head=ni.rq_head + (sent & (left <= 0)).astype(jnp.int32),
             w_started=jnp.where(sent, left > 0, ni.w_started))
+
+        if faulted:
+            # pending-table bookkeeping: fresh issues insert at the first
+            # free slot; a granted retry re-arms its slot's watchdog
+            oh_r = (p_ids[None, None, :] == rslot[:, :, None]) \
+                & retry_inj[:, :, None]
+            slot_f = jnp.argmax(fs.pend_txn < 0, axis=2)
+            oh_f = (p_ids[None, None, :] == slot_f[:, :, None]) \
+                & fresh[:, :, None]
+            now3 = jnp.broadcast_to(now, oh_f.shape).astype(jnp.int32)
+            fs = fs._replace(
+                pend_txn=jnp.where(oh_f, txn0[:, :, None], fs.pend_txn),
+                pend_dest=jnp.where(oh_f, req_d[:, :, None],
+                                    fs.pend_dest),
+                pend_t0=jnp.where(oh_f, now3, fs.pend_t0),
+                pend_at=jnp.where(oh_f | oh_r, now3, fs.pend_at),
+                pend_wait=fs.pend_wait | oh_f | oh_r,
+                pend_wr=jnp.where(oh_f, is_wr[:, :, None], fs.pend_wr),
+                pend_left=jnp.where(
+                    oh_f, jnp.broadcast_to(max_retries, oh_f.shape
+                                           ).astype(jnp.int32),
+                    fs.pend_left),
+                retries=fs.retries + retry_inj.astype(jnp.int32))
 
         # ---- deliveries: gather each flow through its static channel ----
         def flow_dv(ch_arr, kind_arr):
@@ -663,7 +831,7 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         ], axis=-1)
         push_w = jnp.stack([
             jnp.broadcast_to(now + 1, (R, n_cls)), req_d, bb,
-            jnp.broadcast_to(now, (R, n_cls)), ptr0,
+            jnp.broadcast_to(now, (R, n_cls)), txn0,
             jnp.broadcast_to(pa.w_kinds[None, :], (R, n_cls)),
         ], axis=-1)
         active = jnp.concatenate([is_ar, is_w_last], axis=1)
@@ -687,10 +855,36 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
 
         # ---- per-class per-direction metrics, vectorized ----------------
         last_r = is_r & (df_r[..., F_BEAT] <= 1)
-        lat_r = jnp.where(last_r, now - df_r[..., F_TIME], 0)
-        li_r = last_r.astype(jnp.int32)
-        lat_b = jnp.where(is_b, now - df_b[..., F_TIME], 0)
-        li_b = is_b.astype(jnp.int32)
+        if faulted:
+            # completion gating through the pending table: only a
+            # response matching a live pending txn completes (a stale
+            # duplicate after a retry, or after SLVERR, is dropped);
+            # latency is measured from the ORIGINAL issue time, so a
+            # retried transaction pays its full end-to-end delay
+            eq_r = (fs.pend_txn == df_r[..., F_TXN][:, :, None]) \
+                & ~fs.pend_wr & (fs.pend_txn >= 0)
+            hit_r = last_r & jnp.any(eq_r, axis=2)
+            t0_r = jnp.take_along_axis(
+                fs.pend_t0, jnp.argmax(eq_r, axis=2)[:, :, None],
+                axis=2)[:, :, 0]
+            lat_r = jnp.where(hit_r, now - t0_r, 0)
+            li_r = hit_r.astype(jnp.int32)
+            eq_b = (fs.pend_txn == df_b[..., F_TXN][:, :, None]) \
+                & fs.pend_wr & (fs.pend_txn >= 0)
+            hit_b = is_b & jnp.any(eq_b, axis=2)
+            t0_b = jnp.take_along_axis(
+                fs.pend_t0, jnp.argmax(eq_b, axis=2)[:, :, None],
+                axis=2)[:, :, 0]
+            lat_b = jnp.where(hit_b, now - t0_b, 0)
+            li_b = hit_b.astype(jnp.int32)
+            clear = (eq_r & last_r[:, :, None]) | (eq_b & is_b[:, :, None])
+            fs = fs._replace(
+                pend_txn=jnp.where(clear, -1, fs.pend_txn))
+        else:
+            lat_r = jnp.where(last_r, now - df_r[..., F_TIME], 0)
+            li_r = last_r.astype(jnp.int32)
+            lat_b = jnp.where(is_b, now - df_b[..., F_TIME], 0)
+            li_b = is_b.astype(jnp.int32)
         ni = ni._replace(
             beats_rx=ni.beats_rx + is_r.astype(jnp.int32),
             first_t=jnp.where(is_r, jnp.minimum(ni.first_t, now),
@@ -718,9 +912,21 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         pending = jnp.any((ni.out_r + ni.out_w) > 0)
         cur = jnp.where(pending & ~activity, state.cur_stall + 1, 0)
         new_moves = state.moves + lm.astype(jnp.int32)
+        if faulted:
+            # degradation counters: what kept flowing while links were down
+            fault_on = jnp.any(link_mask)
+            fs = fs._replace(
+                flc=fs.flc + jnp.sum(dead_e.astype(jnp.int32)),
+                fcyc=fs.fcyc + fault_on.astype(jnp.int32),
+                dlv_fault=fs.dlv_fault + jnp.where(fault_on,
+                                                   li_r + li_b, 0),
+                beats_fault=fs.beats_fault + jnp.where(
+                    fault_on,
+                    is_r.astype(jnp.int32) + is_w.astype(jnp.int32), 0))
         return SimState(net, ni, now + 1, new_moves, cur,
                         jnp.maximum(state.max_stall, cur),
-                        vc_occ_sum, vc_occ_max), None
+                        vc_occ_sum, vc_occ_max,
+                        fs if faulted else state.fs), None
 
     return step
 
@@ -774,7 +980,12 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
     backend) triple, from a stats-instrumented per-backend cache.
 
     Returns ``fn(times, dests, writes, service_lat, max_out,
-    burst_beats, jitter, depths)`` where ``times``/``dests``/``writes``
+    burst_beats, jitter, depths)`` — plus, when the spec carries a
+    :class:`~repro.noc.faults.FaultModel`, five extra traced operands
+    ``(ev_fail, ev_heal, timeout_cycles, max_retries, backoff_base)``
+    (the first two from :func:`repro.noc.faults.dynamic_events`, the
+    rest per-class/scalar robustness knobs) and eight extra raw outputs
+    (the degradation counters).  ``times``/``dests``/``writes``
     are (n_lanes, R, T) int32 schedules — one row per (class, AXI ID
     stream) lane, class-major, so with every class at ``n_streams=1``
     that is exactly the per-class (n_cls, R, T) layout
@@ -823,7 +1034,12 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
 
 def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
     plan = build_flow_plan(spec)
-    network = get_backend(backend)(spec.topology, spec.routing)
+    bk = get_backend(backend)
+    faulted = spec.faults is not None
+    # only pass faults= when present: custom two-arg backend factories
+    # (and the healthy jaxpr) stay exactly as before
+    network = bk(spec.topology, spec.routing, faults=spec.faults) \
+        if faulted else bk(spec.topology, spec.routing)
     step = make_step(spec, plan, T, network.step)
     n_ch, R = plan.n_ch, spec.n_routers
     n_vcs = spec.routing.n_vcs
@@ -851,15 +1067,16 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
     # scan carry's workspace; CPU can't donate (it would only warn)
     donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
 
-    @functools.partial(jax.jit, donate_argnums=donate)
-    def run(times, dests, writes, service_lat, max_out, burst_beats,
-            jitter, depths):
+    def _run(times, dests, writes, service_lat, max_out, burst_beats,
+             jitter, depths, fault_ops):
         state = SimState(network.init(n_ch, d_max),
                          init_ni(R, plan, spec.resp_q_cap), jnp.int32(0),
                          jnp.zeros((n_ch,), jnp.int32), jnp.int32(0),
                          jnp.int32(0),
                          jnp.zeros((n_ch, n_vcs), jnp.int32),
-                         jnp.zeros((n_ch, n_vcs), jnp.int32))
+                         jnp.zeros((n_ch, n_vcs), jnp.int32),
+                         init_faults(R, plan.n_cls, fault_p_cap(plan))
+                         if faulted else ())
         service_lat, max_out, burst_beats, jitter = to_lanes(
             service_lat, max_out, burst_beats, jitter)
         times = jnp.moveaxis(times, 0, 1)              # (R, n_lanes, T)
@@ -869,13 +1086,23 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
                "service_lat": service_lat, "max_out": max_out,
                "burst_beats": burst_beats, "jitter": jitter,
                "depths": jnp.asarray(depths, jnp.int32)}
+        if faulted:
+            ev_fail, ev_heal, tout, max_retries, backoff = fault_ops
+            tout = jnp.asarray(tout, jnp.int32)        # (n_classes,)
+            if multi_stream:
+                tout = tout[cls_of]                    # expand to lanes
+            dyn.update(ev_fail=jnp.asarray(ev_fail, jnp.int32),
+                       ev_heal=jnp.asarray(ev_heal, jnp.int32),
+                       timeout=tout,
+                       max_retries=jnp.asarray(max_retries, jnp.int32),
+                       backoff=jnp.asarray(backoff, jnp.int32))
         final, _ = jax.lax.scan(functools.partial(step, dyn), state, None,
                                 length=spec.cycles)
         ni = final.ni
         n_sched = jnp.sum(times < BIG, axis=2)         # (R, n_cls)
         drained = (jnp.all(ni.ptr >= n_sched) & jnp.all(ni.out_r == 0)
                    & jnp.all(ni.out_w == 0))
-        return {
+        raw = {
             "done": ni.done, "lat_sum": ni.lat_sum, "lat_max": ni.lat_max,
             "beats_rx": ni.beats_rx, "first_t": ni.first_t,
             "last_t": ni.last_t,
@@ -887,5 +1114,34 @@ def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):
             "vc_occ_sum": final.vc_occ_sum,
             "vc_occ_max": final.vc_occ_max,
         }
+        if faulted:
+            fst = final.fs
+            raw.update({
+                "retries": fst.retries, "timeouts": fst.timeouts,
+                "slverr": fst.slverr,
+                "delivered_despite_fault": fst.dlv_fault,
+                "beats_under_fault": fst.beats_fault,
+                "faulted_link_cycles": fst.flc,
+                "fault_cycles": fst.fcyc,
+                "undone": (jnp.maximum(n_sched - ni.ptr, 0)
+                           + ni.out_r + ni.out_w),
+            })
+        return raw
+
+    if faulted:
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def run(times, dests, writes, service_lat, max_out, burst_beats,
+                jitter, depths, ev_fail, ev_heal, timeout_cycles,
+                max_retries, backoff_base):
+            return _run(times, dests, writes, service_lat, max_out,
+                        burst_beats, jitter, depths,
+                        (ev_fail, ev_heal, timeout_cycles, max_retries,
+                         backoff_base))
+    else:
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def run(times, dests, writes, service_lat, max_out, burst_beats,
+                jitter, depths):
+            return _run(times, dests, writes, service_lat, max_out,
+                        burst_beats, jitter, depths, None)
 
     return run

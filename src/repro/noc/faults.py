@@ -1,0 +1,400 @@
+"""Fault injection & graceful degradation for the NoC fabric.
+
+A frozen :class:`FaultModel` lives on a :class:`~repro.noc.spec.NocSpec`
+and declares two kinds of faults plus the NI's end-to-end robustness
+knobs:
+
+**Static faults** (``dead_links`` / ``dead_nodes``) are compiled into
+*cut-out route tables*: :func:`cut_tables` regenerates the spec's route
+table so no walk traverses a dead link or dead router, and proves the
+result safe with the same machinery every healthy table goes through —
+:func:`repro.noc.topology.run_table_checks` structural validation plus
+the analyzer's exact channel-dependency-graph (CDG) deadlock proof.
+The reroute scheme is Duato-style: the base escape-VC routes stay
+untouched for every (source, dest) pair whose walk misses the cut,
+while affected pairs detour along a BFS spanning tree of the surviving
+graph riding a *dedicated top VC* (``n_vcs - 1``, which the base
+compile provably never uses when ``n_vcs >= required_vcs + 1``).  Tree
+hops within the detour VC are acyclic (up-edges strictly decrease BFS
+level, down-edges strictly increase depth, and a walk never turns back
+up), and the only cross-VC dependencies go detour -> base (a walk that
+re-enters the clean region switches to the base table and, because the
+clean region is suffix-closed, never switches back) — so the combined
+CDG stays acyclic, which :func:`repro.noc.analyze.analyze_routing`
+re-checks exactly rather than taking this argument on faith.
+
+**Dynamic faults** (``link_events`` / :meth:`FaultModel.bernoulli`) are
+``fail_at``/``heal_at`` cycle windows per physical link, carried as
+traced operands through the engine and all three backends: a masked
+link simply *drops its grants* — flits wait under backpressure, nothing
+is lost — so a fabric without reroute wedges on a permanent cut (the
+honest outcome) while a healed link lets traffic resume flit-for-flit
+identically across backends.
+
+**NI robustness**: ``timeout_cycles`` (per class, traced) arms a
+per-transaction watchdog; a timed-out transaction is retried up to
+``max_retries`` times with exponential backoff (``backoff_base << k``)
+plus deterministic jitter drawn from the spec's PR-5 ``jitter_table``;
+exhausted retries produce an AXI SLVERR-style error response that frees
+the ROB credit so the simulation degrades gracefully instead of
+wedging.  ``SimResult.faults`` reports the degradation stats.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .routing import RoutingPolicy, RouteTables
+from .topology import Topology, validate_tables
+
+__all__ = ["FaultModel", "UnroutableCutError", "cut_tables",
+           "dynamic_events", "HEAL_NEVER"]
+
+# sentinel for "never heals" — matches the engine's BIG time sentinel
+HEAL_NEVER = 1 << 30
+
+
+class UnroutableCutError(ValueError):
+    """The static cut disconnects the fabric: some live router cannot
+    reach the rest of the surviving graph.  ``coords`` names the first
+    unreachable router (and the BFS root it cannot reach)."""
+
+    def __init__(self, msg: str, coords: tuple = ()):
+        super().__init__(msg)
+        self.coords = coords
+
+
+def _norm_link(a, b) -> tuple[int, int]:
+    return (int(a), int(b)) if a <= b else (int(b), int(a))
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Frozen fault + robustness configuration of a NocSpec.
+
+    ``dead_links``    — undirected ``(a, b)`` router pairs that are
+                        permanently dead; with ``reroute=True`` (the
+                        default) the route table is regenerated to
+                        detour around them (see :func:`cut_tables`).
+    ``dead_nodes``    — routers that are entirely dead: every attached
+                        link dies, and traffic may not originate at or
+                        target them (validated at simulate time).
+    ``link_events``   — deterministic dynamic schedule: ``(a, b,
+                        fail_at, heal_at)`` windows during which the
+                        physical link drops all grants (blocking — no
+                        flit loss). ``heal_at >= HEAL_NEVER`` never
+                        heals.
+    ``n_events`` /    — seeded Bernoulli mode: draw ``n_events`` random
+    ``seed`` /          fail windows over the simulation horizon with
+    ``mean_downtime``   geometric downtimes (see :meth:`bernoulli`).
+    ``timeout_cycles``— per-transaction watchdog, scalar or per-class
+                        tuple; 0 disables. Traced (overridable per
+                        ``simulate`` call without recompiling).
+    ``max_retries``   — retry budget per transaction before SLVERR.
+    ``backoff_base``  — retry k waits ``backoff_base << k`` cycles plus
+                        deterministic jitter from the spec's
+                        ``jitter_table``.
+    ``reroute``       — compile cut-out tables for the static faults;
+                        ``False`` keeps the base tables (the cut is
+                        only masked dynamically — the wedge baseline).
+    """
+    dead_links: tuple[tuple[int, int], ...] = ()
+    dead_nodes: tuple[int, ...] = ()
+    link_events: tuple[tuple[int, int, int, int], ...] = ()
+    n_events: int = 0
+    seed: int = 0
+    mean_downtime: int = 64
+    timeout_cycles: int | tuple[int, ...] = 0
+    max_retries: int = 3
+    backoff_base: int = 8
+    reroute: bool = True
+
+    def __post_init__(self):
+        links = tuple(sorted({_norm_link(a, b)
+                              for a, b in self.dead_links}))
+        for a, b in links:
+            if a == b or a < 0:
+                raise ValueError(f"dead link ({a}, {b}) is not a link")
+        object.__setattr__(self, "dead_links", links)
+        nodes = tuple(sorted({int(n) for n in self.dead_nodes}))
+        if any(n < 0 for n in nodes):
+            raise ValueError(f"dead node ids must be >= 0, got {nodes}")
+        object.__setattr__(self, "dead_nodes", nodes)
+        evs = tuple((int(a), int(b), int(f), int(h))
+                    for a, b, f, h in self.link_events)
+        for a, b, f, h in evs:
+            if a == b or a < 0 or b < 0:
+                raise ValueError(f"link event ({a}, {b}) is not a link")
+            if f < 0 or h <= f:
+                raise ValueError(
+                    f"link event needs 0 <= fail_at < heal_at, "
+                    f"got fail_at={f} heal_at={h}")
+        object.__setattr__(self, "link_events", evs)
+        if self.n_events < 0:
+            raise ValueError(f"n_events must be >= 0, got {self.n_events}")
+        if self.n_events and self.mean_downtime < 1:
+            raise ValueError(
+                f"mean_downtime must be >= 1, got {self.mean_downtime}")
+        tc = self.timeout_cycles
+        tcs = (tc,) if isinstance(tc, int) else tuple(int(t) for t in tc)
+        if any(t < 0 for t in tcs):
+            raise ValueError(f"timeout_cycles must be >= 0, got {tc!r}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base < 1:
+            raise ValueError(
+                f"backoff_base must be >= 1, got {self.backoff_base}")
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def bernoulli(cls, n_events: int, seed: int = 0,
+                  mean_downtime: int = 64, **kw) -> "FaultModel":
+        """Seeded random dynamic faults: ``n_events`` fail windows drawn
+        uniformly over the simulation horizon, on uniformly random wired
+        links, with geometric downtimes of the given mean.  Fully
+        deterministic given ``seed`` (drawn in numpy at build time, so
+        the traced simulator sees them as ordinary operands)."""
+        return cls(n_events=n_events, seed=seed,
+                   mean_downtime=mean_downtime, **kw)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def has_static(self) -> bool:
+        return bool(self.dead_links or self.dead_nodes)
+
+    @property
+    def has_dynamic(self) -> bool:
+        return bool(self.link_events or self.n_events)
+
+    def persistent_faults(self, horizon: int) -> tuple[tuple, ...]:
+        """``(a, b, since)`` for every link still dead at ``horizon`` —
+        what ``diagnose()`` names when an undrained sim has a fault."""
+        out = [(a, b, 0) for a, b in self.dead_links]
+        for n in self.dead_nodes:
+            out.append((n, n, 0))
+        for a, b, f, h in self.link_events:
+            if f < horizon <= h:
+                out.append((_norm_link(a, b) + (f,)))
+        return tuple(out)
+
+
+# --------------------------------------------------------------------- #
+# static cut-out route regeneration
+# --------------------------------------------------------------------- #
+def _dead_link_set(topo: Topology, fm: FaultModel) -> set[tuple[int, int]]:
+    """Normalized dead undirected links (incl. every link of a dead
+    node), each validated to exist in the wired fabric."""
+    nbr, _, _ = topo.tables()
+    R, P = nbr.shape
+    wired = {_norm_link(r, int(nbr[r, p]))
+             for r in range(R) for p in range(P - 1) if nbr[r, p] >= 0}
+    dead = set()
+    for a, b in fm.dead_links:
+        if b >= R:
+            raise ValueError(
+                f"dead link ({a}, {b}) out of range for {R} routers")
+        if (a, b) not in wired:
+            raise ValueError(
+                f"dead link ({a}, {b}) is not a wired link of {topo!r}")
+        dead.add((a, b))
+    for n in fm.dead_nodes:
+        if n >= R:
+            raise ValueError(
+                f"dead node {n} out of range for {R} routers")
+        for p in range(P - 1):
+            if nbr[n, p] >= 0:
+                dead.add(_norm_link(n, int(nbr[n, p])))
+    return dead
+
+
+def _link_dead_mask(nbr: np.ndarray,
+                    dead: set[tuple[int, int]]) -> np.ndarray:
+    """(R, P) bool: output port (r, p) drives a dead link."""
+    R, P = nbr.shape
+    mask = np.zeros((R, P), bool)
+    for r in range(R):
+        for p in range(P - 1):
+            t = int(nbr[r, p])
+            if t >= 0 and _norm_link(r, t) in dead:
+                mask[r, p] = True
+    return mask
+
+
+def cut_tables(topology: Topology, routing: RoutingPolicy,
+               faults: FaultModel) -> RouteTables:
+    """Compiled tables with the static cut routed around (cached).
+
+    Unaffected (source, dest) pairs keep the base escape-VC route;
+    affected pairs detour along a BFS spanning tree of the surviving
+    graph on the dedicated top VC (see the module docstring for the
+    deadlock argument).  Raises :class:`UnroutableCutError` when the cut
+    disconnects the surviving fabric, and ``ValueError`` when the policy
+    lacks the spare detour VC (static cuts need
+    ``n_vcs >= required_vcs(topology) + 1``) or is not ``"xy"``.
+    """
+    if not (faults.has_static and faults.reroute):
+        return routing.compile(topology)
+    return _cut_tables(routing, topology, faults.dead_links,
+                       faults.dead_nodes)
+
+
+@functools.lru_cache(maxsize=64)
+def _cut_tables(policy: RoutingPolicy, topo: Topology,
+                dead_links: tuple, dead_nodes: tuple) -> RouteTables:
+    if policy.algorithm != "xy":
+        raise ValueError(
+            f"static fault reroute supports algorithm='xy' only (the "
+            f"detour rides a dedicated escape VC on the single XY "
+            f"plane), got {policy.algorithm!r}")
+    need = policy.required_vcs(topo) + 1
+    if policy.n_vcs < need:
+        raise ValueError(
+            f"static fault reroute on {topo!r} needs n_vcs >= {need} "
+            f"(base discipline + one dedicated detour VC), got "
+            f"{policy.n_vcs}")
+    fm = FaultModel(dead_links=dead_links, dead_nodes=dead_nodes)
+    nbr, _, phys_route = topo.tables()
+    R, P = nbr.shape
+    V = policy.n_vcs
+    dead = _dead_link_set(topo, fm)
+    link_dead = _link_dead_mask(nbr, dead)
+    alive = np.ones(R, bool)
+    alive[list(fm.dead_nodes)] = False
+    if alive.sum() < 2:
+        raise UnroutableCutError(
+            f"cut kills {len(fm.dead_nodes)} of {R} routers; fewer than "
+            f"2 survive", coords=(int(fm.dead_nodes[0]),))
+
+    # which (src, dest) base walks traverse the cut (pointer doubling;
+    # suffix-closed: a clean walk's every suffix is clean, so a flit
+    # that re-enters the clean region follows base routes to delivery)
+    rr = np.arange(R)[:, None].repeat(R, axis=1)
+    dd = rr.T
+    off_diag = rr != dd
+    sd = link_dead[rr, phys_route]                       # diag: local, False
+    nxt = np.where(off_diag, nbr[rr, phys_route], rr)    # absorbing at dest
+    bad = sd.copy()
+    hop = nxt.copy()
+    for _ in range(max(1, int(np.ceil(np.log2(max(2, R)))) + 1)):
+        bad |= np.take_along_axis(bad, hop, axis=0)
+        hop = np.take_along_axis(hop, hop, axis=0)
+
+    # BFS spanning tree of the surviving graph (port-order, so the
+    # tree — and therefore the regenerated table — is deterministic)
+    root = int(np.flatnonzero(alive)[0])
+    parent = np.full(R, -1, np.int64)
+    level = np.full(R, -1, np.int64)
+    level[root] = 0
+    queue = [root]
+    while queue:
+        v = queue.pop(0)
+        for p in range(P - 1):
+            t = int(nbr[v, p])
+            if t >= 0 and alive[t] and not link_dead[v, p] \
+                    and level[t] < 0:
+                parent[t] = v
+                level[t] = level[v] + 1
+                queue.append(t)
+    unreached = alive & (level < 0)
+    if unreached.any():
+        u = int(np.flatnonzero(unreached)[0])
+        raise UnroutableCutError(
+            f"cut disconnects the fabric: router {u} cannot reach "
+            f"router {root} with dead links {sorted(dead)} and dead "
+            f"nodes {list(fm.dead_nodes)}", coords=(u, root))
+
+    # tree next-hop toward each dest: parent(v) unless v is a proper
+    # ancestor of d, then the child of v on d's root path
+    tnext = np.repeat(parent[:, None], R, axis=1)
+    for d in np.flatnonzero(alive):
+        c, a = int(d), int(parent[d])
+        while a >= 0:
+            tnext[a, d] = c
+            c, a = a, int(parent[a])
+        tnext[d, d] = d
+
+    # neighbor -> port map over live links (unique per pair: distinct
+    # strides reach distinct routers)
+    pmat = np.full((R, R), -1, np.int64)
+    for p in range(P - 1):
+        w = nbr[:, p]
+        m = (w >= 0) & ~link_dead[:, p]
+        pmat[np.flatnonzero(m), w[m]] = p
+
+    base = policy.compile(topo)
+    route_v = np.array(base.route)                       # writable copy
+    affected = bad & off_diag & alive[:, None] & alive[None, :]
+    srcs, dsts = np.nonzero(affected)
+    if srcs.size:
+        w = tnext[srcs, dsts]
+        p = pmat[srcs, w]
+        if (p < 0).any():
+            i = int(np.flatnonzero(p < 0)[0])            # pragma: no cover
+            raise AssertionError(
+                f"tree hop {srcs[i]}->{w[i]} lost its live link")
+        route_v[srcs, dsts] = p * V + (V - 1)            # detour top VC
+    validate_tables(base.nbr, base.opp, route_v)
+    route_v.setflags(write=False)
+    return RouteTables(nbr=base.nbr, opp=base.opp, route=route_v,
+                       vc_of_hop=base.vc_of_hop, n_vcs=base.n_vcs,
+                       n_planes=base.n_planes,
+                       n_base_ports=base.n_base_ports)
+
+
+# --------------------------------------------------------------------- #
+# dynamic fault events -> traced operands + static per-event masks
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=64)
+def dynamic_events(topo: Topology, routing: RoutingPolicy,
+                   faults: FaultModel, horizon: int):
+    """``(ev_fail, ev_heal, masks)`` for one spec: ``ev_fail``/
+    ``ev_heal`` are ``(E,) int32`` cycle bounds (traced operands);
+    ``masks`` is the static ``(E, R, Pv) bool`` table of virtual output
+    ports each event kills (both link directions, every VC — the fault
+    is physical, so all planes/VCs share it).  Static dead links/nodes
+    fold in as ``fail_at=0, heal_at=HEAL_NEVER`` events so masked-link
+    accounting (``faulted_link_cycles``) covers them too; when there are
+    no events at all, one never-active dummy keeps shapes static."""
+    nbr, opp, _ = topo.tables()
+    R, P = nbr.shape
+    V = routing.n_vcs
+    Pv = (P - 1) * V + 1
+    events: list[tuple[tuple[int, int], int, int]] = []
+    for a, b in _dead_link_set(topo, faults):
+        events.append(((a, b), 0, HEAL_NEVER))
+    for a, b, f, h in faults.link_events:
+        lk = _norm_link(a, b)
+        _dead_link_set(topo, FaultModel(dead_links=(lk,),
+                                        reroute=False))  # existence check
+        events.append((lk, f, h))
+    if faults.n_events:
+        rng = np.random.default_rng(
+            np.uint32(0xFA17) + np.uint32(faults.seed))
+        wired = sorted({_norm_link(r, int(nbr[r, p]))
+                        for r in range(R) for p in range(P - 1)
+                        if nbr[r, p] >= 0})
+        for _ in range(faults.n_events):
+            lk = wired[int(rng.integers(len(wired)))]
+            f = int(rng.integers(max(1, horizon)))
+            down = int(rng.geometric(1.0 / faults.mean_downtime))
+            events.append((lk, f, f + max(1, down)))
+    if not events:
+        events.append(((0, 0), HEAL_NEVER, HEAL_NEVER + 1))
+
+    E = len(events)
+    ev_fail = np.array([f for _, f, _ in events], np.int32)
+    ev_heal = np.array([h for _, _, h in events], np.int32)
+    masks = np.zeros((E, R, Pv), bool)
+    for e, ((a, b), _, _) in enumerate(events):
+        if a == b:                                       # dummy event
+            continue
+        for r, t in ((a, b), (b, a)):
+            for p in range(P - 1):
+                if nbr[r, p] == t:
+                    masks[e, r, p * V:(p + 1) * V] = True
+    for arr in (ev_fail, ev_heal, masks):
+        arr.setflags(write=False)
+    return ev_fail, ev_heal, masks

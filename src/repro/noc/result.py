@@ -76,6 +76,27 @@ class ChannelStats:
 
 
 @dataclass(frozen=True)
+class FaultStats:
+    """Degradation metrics, present only when the spec carries a
+    :class:`~repro.noc.faults.FaultModel`.  Per-class mappings aggregate
+    over NIs and AXI ID streams; scalar-like arrays are (*batch,).
+
+    ``goodput_under_fault`` is data beats delivered per cycle *while at
+    least one link was down* — the graceful-degradation headline: a
+    rerouted fabric keeps it well above zero, a non-rerouted cut drives
+    it to zero as the wedge forms."""
+    faulted_link_cycles: np.ndarray   # sum over cycles of #dead links
+    fault_cycles: np.ndarray          # cycles with >= 1 link down
+    retries: Mapping[str, np.ndarray]
+    timeouts: Mapping[str, np.ndarray]
+    slverr: Mapping[str, np.ndarray]          # retry budgets exhausted
+    delivered_despite_fault: Mapping[str, np.ndarray]
+    beats_under_fault: Mapping[str, np.ndarray]
+    goodput_under_fault: Mapping[str, np.ndarray]   # beats / fault cycle
+    undone: Mapping[str, np.ndarray]  # not-completed txns at horizon
+
+
+@dataclass(frozen=True)
 class SimResult:
     spec: NocSpec
     cycles: int
@@ -90,6 +111,7 @@ class SimResult:
     # policy (``RoutingPolicy.xy(n_vcs=2)``) keeps it draining.
     max_stall_cycles: np.ndarray = np.int32(0)   # (*batch,)
     drained: np.ndarray = np.bool_(True)         # (*batch,)
+    faults: FaultStats | None = None             # spec.faults runs only
 
     @classmethod
     def from_raw(cls, spec: NocSpec, raw: Mapping[str, Any]) -> "SimResult":
@@ -160,10 +182,35 @@ class SimResult:
                 vc_occupancy=occ_sum[..., c, :] / float(spec.cycles),
                 vc_peak_occupancy=occ_max[..., c, :],
             )
+        faults = None
+        if "retries" in raw:
+            fc = np.asarray(raw["fault_cycles"])
+
+            def per_cls(key):
+                # lane-resolved (*batch, R, n_lanes) -> per-class totals
+                a, out, off = np.asarray(raw[key]), {}, 0
+                for tc in spec.classes:
+                    out[tc.name] = a[..., off:off + tc.n_streams].sum(
+                        axis=(-2, -1))
+                    off += tc.n_streams
+                return out
+
+            beats = per_cls("beats_under_fault")
+            faults = FaultStats(
+                faulted_link_cycles=np.asarray(raw["faulted_link_cycles"]),
+                fault_cycles=fc,
+                retries=per_cls("retries"),
+                timeouts=per_cls("timeouts"),
+                slverr=per_cls("slverr"),
+                delivered_despite_fault=per_cls("delivered_despite_fault"),
+                beats_under_fault=beats,
+                goodput_under_fault={
+                    k: v / np.maximum(fc, 1) for k, v in beats.items()},
+                undone=per_cls("undone"))
         return cls(spec=spec, cycles=spec.cycles, classes=classes,
                    channels=channels,
                    max_stall_cycles=np.asarray(raw["max_stall_cycles"]),
-                   drained=np.asarray(raw["drained"]))
+                   drained=np.asarray(raw["drained"]), faults=faults)
 
     # ------------------------------------------------------------------ #
     @property
@@ -182,10 +229,19 @@ class SimResult:
             **{f: getattr(v, f)[i]
                for f in ChannelStats.__dataclass_fields__})
                     for k, v in self.channels.items()}
+        faults = None
+        if self.faults is not None:
+            def fslice(v):
+                return ({k: np.asarray(a)[i] for k, a in v.items()}
+                        if isinstance(v, Mapping) else np.asarray(v)[i])
+            faults = FaultStats(
+                **{f: fslice(getattr(self.faults, f))
+                   for f in FaultStats.__dataclass_fields__})
         return SimResult(self.spec, self.cycles, classes, channels,
                          max_stall_cycles=np.asarray(
                              self.max_stall_cycles)[i],
-                         drained=np.asarray(self.drained)[i])
+                         drained=np.asarray(self.drained)[i],
+                         faults=faults)
 
     @property
     def total_link_moves(self) -> np.ndarray:
@@ -226,17 +282,50 @@ class SimResult:
         out["total_energy_pj"] = self.total_energy_pj
         out["max_stall_cycles"] = self.max_stall_cycles
         out["drained"] = self.drained
+        if self.faults is not None:
+            out["fault_cycles"] = self.faults.fault_cycles
+            out["faulted_link_cycles"] = self.faults.faulted_link_cycles
+            for name in self.classes:
+                out[f"{name}_retries"] = self.faults.retries[name]
+                out[f"{name}_timeouts"] = self.faults.timeouts[name]
+                out[f"{name}_slverr"] = self.faults.slverr[name]
+                out[f"{name}_goodput_under_fault"] = \
+                    self.faults.goodput_under_fault[name]
         if not np.all(self.drained):
             out["diagnosis"] = self.diagnose()
         return out
 
     def diagnose(self) -> str:
-        """One-line static-analysis verdict for an undrained run: did
-        the spec deadlock (the analyzer names the cyclic (link, VC)
-        wait) or merely run out of horizon (congestion)?  Lazy import —
-        :mod:`repro.noc.analyze` already depends on this package — and
-        lru-cached per (topology, routing), so repeated summaries of
-        one wedged sweep pay the proof once."""
+        """One-line verdict for an undrained run, distinguishing three
+        causes:
+
+        * **fault stall** — the spec's FaultModel leaves a link/router
+          dead at the horizon: names the component, when it died, and
+          the first starved class (the fabric isn't deadlocked; the
+          cut simply severed routes or reroute was disabled);
+        * **true deadlock** — the analyzer's channel-dependency proof
+          fails: names the cyclic (link, VC) wait;
+        * **congestion** — analyzer passes, no persistent fault: the
+          run likely just ran out of horizon.
+
+        Lazy import — :mod:`repro.noc.analyze` already depends on this
+        package — and lru-cached per (topology, routing), so repeated
+        summaries of one wedged sweep pay the proof once."""
+        fm = self.spec.faults
+        if fm is not None:
+            dead = fm.persistent_faults(self.cycles)
+            if dead:
+                a, b, since = dead[0]
+                what = (f"router {a}" if a == b else f"link ({a}, {b})")
+                msg = f"fault stall: {what} dead since cycle {since}"
+                if self.faults is not None:
+                    starved = [n for n, u in self.faults.undone.items()
+                               if np.any(np.asarray(u) > 0)]
+                    if starved:
+                        msg += f"; first starved class: {starved[0]!r}"
+                if not fm.reroute:
+                    msg += " (reroute disabled)"
+                return msg
         from .analyze import analyze
         report = analyze(self.spec)
         if report.ok:

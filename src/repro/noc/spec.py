@@ -38,6 +38,7 @@ from dataclasses import dataclass, replace
 from typing import Mapping, Sequence
 
 from repro.core.flit import AXI_FLOWS
+from .faults import FaultModel
 from .routing import RoutingPolicy
 from .topology import Mesh, Topology, Torus  # noqa: F401  (re-exported)
 
@@ -147,9 +148,15 @@ class NocSpec:
     # runtime).  The per-class W rings are sized separately from the
     # classes' declared max_outstanding.
     resp_q_cap: int = 256
-    # routing algorithm x VC count (last field: keeps older positional
-    # constructions valid).  Validated against the topology below.
+    # routing algorithm x VC count (kept after the scalar knobs so
+    # older positional constructions stay valid).  Validated against
+    # the topology below.
     routing: RoutingPolicy = RoutingPolicy()
+    # fault-injection + NI robustness model (new last field, same
+    # positional-compatibility rule).  None = the healthy fabric with
+    # the fault machinery entirely compiled out (bit-identical to the
+    # pre-fault engine); see repro.noc.faults.FaultModel.
+    faults: FaultModel | None = None
 
     def __post_init__(self):
         if not isinstance(self.resp_q_cap, int) or isinstance(
@@ -165,6 +172,38 @@ class NocSpec:
             raise TypeError(
                 f"routing must be a RoutingPolicy, got {self.routing!r}")
         self.routing.validate_for(self.topology)
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultModel):
+                raise TypeError(
+                    f"faults must be a FaultModel or None, got "
+                    f"{self.faults!r}")
+            R = self.topology.n_routers
+            ids = ({n for n in self.faults.dead_nodes}
+                   | {i for lk in self.faults.dead_links for i in lk}
+                   | {i for ev in self.faults.link_events for i in ev[:2]})
+            if ids and max(ids) >= R:
+                raise ValueError(
+                    f"fault references router {max(ids)}, but "
+                    f"{self.topology!r} has only {R} routers")
+            if self.faults.has_static and self.faults.reroute:
+                # cheap static preconditions of the cut-out reroute;
+                # the unroutable-cut case needs tables and is raised
+                # (or reported by analyze) at compile time instead
+                if self.routing.algorithm != "xy":
+                    raise ValueError(
+                        f"static fault reroute supports algorithm='xy' "
+                        f"only, got {self.routing.algorithm!r}")
+                need = self.routing.required_vcs(self.topology) + 1
+                if self.routing.n_vcs < need:
+                    raise ValueError(
+                        f"static fault reroute on {self.topology!r} "
+                        f"needs n_vcs >= {need} (base discipline + one "
+                        f"dedicated detour VC), got {self.routing.n_vcs}")
+            tc = self.faults.timeout_cycles
+            if not isinstance(tc, int) and len(tc) != len(self.classes):
+                raise ValueError(
+                    f"per-class timeout_cycles has {len(tc)} entries for "
+                    f"{len(self.classes)} classes")
         if isinstance(self.classes, Sequence) and not isinstance(
                 self.classes, tuple):
             object.__setattr__(self, "classes", tuple(self.classes))
@@ -320,7 +359,8 @@ class NocSpec:
                     cycles: int = 4000, max_narrow_outstanding: int = 8,
                     max_wide_outstanding: int = 8,
                     resp_q_cap: int = 256,
-                    routing: RoutingPolicy | None = None) -> "NocSpec":
+                    routing: RoutingPolicy | None = None,
+                    faults: FaultModel | None = None) -> "NocSpec":
         """Paper §III-B: three independent physical networks, with the
         AXI flows mapped per the paper — single-flit address/ack flows
         (AR, AW, B) plus the narrow class's data on the narrow req/rsp
@@ -349,7 +389,8 @@ class NocSpec:
                 ("wide.b", "rsp"),
                 ("wide.w", "wide"), ("wide.r", "wide")),
             service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap,
-            routing=RoutingPolicy() if routing is None else routing)
+            routing=RoutingPolicy() if routing is None else routing,
+            faults=faults)
 
     @classmethod
     def wide_only(cls, nx: int = 4, ny: int = 4, *,
@@ -358,7 +399,8 @@ class NocSpec:
                   cycles: int = 4000, max_narrow_outstanding: int = 8,
                   max_wide_outstanding: int = 8,
                   resp_q_cap: int = 256,
-                  routing: RoutingPolicy | None = None) -> "NocSpec":
+                  routing: RoutingPolicy | None = None,
+                  faults: FaultModel | None = None) -> "NocSpec":
         """Fig. 5 ablation: ONE network carries all five flows of every
         class; narrow flits burn full wide-link cycles and bursts hold
         links end-to-end."""
@@ -373,7 +415,8 @@ class NocSpec:
                             for c in ("narrow", "wide")
                             for f in AXI_FLOWS),
             service_lat=service_lat, cycles=cycles, resp_q_cap=resp_q_cap,
-            routing=RoutingPolicy() if routing is None else routing)
+            routing=RoutingPolicy() if routing is None else routing,
+            faults=faults)
 
     @classmethod
     def multi_stream(cls, nx: int = 4, ny: int = 4, *, n_wide: int = 2,
@@ -381,7 +424,8 @@ class NocSpec:
                      depth: int = 2, burstlen: int = 16,
                      service_lat: int = 10, cycles: int = 4000,
                      resp_q_cap: int = 256,
-                     routing: RoutingPolicy | None = None) -> "NocSpec":
+                     routing: RoutingPolicy | None = None,
+                     faults: FaultModel | None = None) -> "NocSpec":
         """Journal-version style: ``n_wide`` parallel wide stream channels
         (wide class i's W/R data bursts ride their own physical network)
         next to the shared narrow req/rsp pair carrying every class's
@@ -403,4 +447,5 @@ class NocSpec:
                    class_map=tuple(sorted(cmap)),
                    service_lat=service_lat, cycles=cycles,
                    resp_q_cap=resp_q_cap,
-                   routing=RoutingPolicy() if routing is None else routing)
+                   routing=RoutingPolicy() if routing is None else routing,
+                   faults=faults)

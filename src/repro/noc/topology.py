@@ -118,81 +118,65 @@ def _port(stride_idx: int, d: int) -> int:
     return 4 * stride_idx + d
 
 
-def _mesh_step(dx_target: int, strides: tuple[int, ...]) -> tuple[int, int]:
-    """(port direction index, stride index) for one dimension-ordered hop
-    toward ``dx_target`` (signed remaining distance), largest non-
-    overshooting stride first — which also can never leave the mesh."""
-    mag = abs(dx_target)
-    for si in range(len(strides) - 1, -1, -1):
-        if strides[si] <= mag:
-            return (1 if dx_target > 0 else 3), si   # E else W
-    raise AssertionError("stride 1 always fits")     # pragma: no cover
-
-
 @functools.lru_cache(maxsize=64)
 def _mesh_tables(topo: Mesh):
     nx, ny, strides = topo.nx, topo.ny, topo.strides
     R, P = topo.n_routers, topo.n_ports
+    x = np.arange(R) % nx
+    y = np.arange(R) // nx
     nbr = np.full((R, P), -1, np.int64)
     opp = np.full((R, P), P - 1, np.int64)
-    for r in range(R):
-        x, y = r % nx, r // nx
-        for si, s in enumerate(strides):
-            for d, (dx, dy) in enumerate(_DIRS):
-                tx, ty = x + dx * s, y + dy * s
-                if 0 <= tx < nx and 0 <= ty < ny:
-                    p = _port(si, d)
-                    nbr[r, p] = ty * nx + tx
-                    opp[r, p] = _port(si, _OPP_DIR[d])
+    for si, s in enumerate(strides):
+        for d, (dx, dy) in enumerate(_DIRS):
+            tx, ty = x + dx * s, y + dy * s
+            ok = (0 <= tx) & (tx < nx) & (0 <= ty) & (ty < ny)
+            p = _port(si, d)
+            nbr[ok, p] = (ty * nx + tx)[ok]
+            opp[ok, p] = _port(si, _OPP_DIR[d])
 
-    route = np.full((R, R), P - 1, np.int64)         # default: local port
-    for r in range(R):
-        x, y = r % nx, r // nx
-        for dest in range(R):
-            dx, dy = dest % nx - x, dest // nx - y
-            if dx != 0:
-                d, si = _mesh_step(dx, strides)
-            elif dy != 0:
-                d, si = _mesh_step(dy, strides)
-                d = {1: 2, 3: 0}[d]                  # E->S, W->N
-            else:
-                continue
-            route[r, dest] = _port(si, d)
+    # dimension-ordered: largest stride <= remaining distance first
+    # (never overshoots, so it also never leaves the mesh); strides is
+    # sorted ascending, so searchsorted finds that stride per pair
+    sarr = np.asarray(strides)
+    dxm = x[None, :] - x[:, None]                    # (src, dest)
+    dym = y[None, :] - y[:, None]
+    si_x = np.maximum(np.searchsorted(sarr, np.abs(dxm), "right") - 1, 0)
+    si_y = np.maximum(np.searchsorted(sarr, np.abs(dym), "right") - 1, 0)
+    px = 4 * si_x + np.where(dxm > 0, 1, 3)          # E / W
+    py = 4 * si_y + np.where(dym > 0, 2, 0)          # S / N (E->S, W->N)
+    route = np.where(dxm != 0, px,
+                     np.where(dym != 0, py, P - 1))  # default: local port
     return _freeze_tables(nbr, opp, route)
 
 
-def _wrap_delta(a: int, b: int, size: int) -> int:
+def _wrap_delta(a: np.ndarray, b: np.ndarray, size: int) -> np.ndarray:
     """Signed minimal wrap distance a -> b on a ring (ties positive)."""
     d = (b - a) % size
-    return d if d <= size - d else d - size
+    return np.where(d <= size - d, d, d - size)
 
 
 @functools.lru_cache(maxsize=64)
 def _torus_tables(topo: Torus):
     nx, ny = topo.nx, topo.ny
     R, P = topo.n_routers, topo.n_ports
+    x = np.arange(R) % nx
+    y = np.arange(R) // nx
     nbr = np.full((R, P), -1, np.int64)
     opp = np.full((R, P), P - 1, np.int64)
-    for r in range(R):
-        x, y = r % nx, r // nx
-        for d, (dx, dy) in enumerate(_DIRS):
-            # dims of size 1 have no ring; leave those ports unwired
-            if (dx and nx == 1) or (dy and ny == 1):
-                continue
-            tx, ty = (x + dx) % nx, (y + dy) % ny
-            nbr[r, d] = ty * nx + tx
-            opp[r, d] = _OPP_DIR[d]
+    for d, (dx, dy) in enumerate(_DIRS):
+        # dims of size 1 have no ring; leave those ports unwired
+        if (dx and nx == 1) or (dy and ny == 1):
+            continue
+        tx, ty = (x + dx) % nx, (y + dy) % ny
+        nbr[:, d] = ty * nx + tx
+        opp[:, d] = _OPP_DIR[d]
 
-    route = np.full((R, R), P - 1, np.int64)
-    for r in range(R):
-        x, y = r % nx, r // nx
-        for dest in range(R):
-            dx = _wrap_delta(x, dest % nx, nx)
-            dy = _wrap_delta(y, dest // nx, ny)
-            if dx != 0:
-                route[r, dest] = 1 if dx > 0 else 3          # E / W
-            elif dy != 0:
-                route[r, dest] = 2 if dy > 0 else 0          # S / N
+    dxm = _wrap_delta(x[:, None], x[None, :], nx)    # (src, dest)
+    dym = _wrap_delta(y[:, None], y[None, :], ny)
+    px = np.where(dxm > 0, 1, 3)                     # E / W
+    py = np.where(dym > 0, 2, 0)                     # S / N
+    route = np.where(dxm != 0, px,
+                     np.where(dym != 0, py, P - 1))
     return _freeze_tables(nbr, opp, route)
 
 
@@ -256,12 +240,13 @@ def run_table_checks(nbr: np.ndarray, opp: np.ndarray,
                     (r, P - 1))
     results.append(("local_port", None, ()))
 
-    for r in range(R):
-        for p in range(P - 1):
-            t = nbr[r, p]
-            if t >= 0 and nbr[t, opp[r, p]] != r:
-                return fail("duplex_links", f"link {r}:{p} is not duplex",
-                            (r, p))
+    t = nbr[:, :P - 1]
+    wired = t >= 0
+    back = nbr[np.where(wired, t, 0), opp[:, :P - 1]]
+    nondup = wired & (back != np.arange(R)[:, None])
+    if np.any(nondup):
+        r, p = map(int, np.argwhere(nondup)[0])
+        return fail("duplex_links", f"link {r}:{p} is not duplex", (r, p))
     results.append(("duplex_links", None, ()))
 
     rr = np.arange(R)[:, None].repeat(n_dest, axis=1)    # (R, n_dest) row idx
@@ -289,19 +274,27 @@ def run_table_checks(nbr: np.ndarray, opp: np.ndarray,
         return fail("route_structure", "route uses a missing link", (r, d))
     results.append(("route_structure", None, ()))
 
-    cur = rr.copy()
-    hops = np.zeros((R, n_dest), np.int64)
-    vdest = np.arange(n_dest)[None, :].repeat(R, axis=0)
-    for _ in range(4 * n_dest + 4):
-        live = cur != dd
-        if not live.any():
-            results.append(("route_termination", None, ()))
-            return results, hops
-        step = nbr[cur, route[cur, vdest]]
-        cur = np.where(live, step, cur)
-        hops += live
-    r, d = map(int, np.argwhere(cur != dd)[0])
-    return fail("route_termination", "routing does not terminate", (r, d))
+    # pointer doubling over the one-hop successor map (absorbing at the
+    # destination): after k squarings ``cur`` has advanced 2^k hops, so
+    # ceil(log2(R)) rounds cover every terminating walk (a terminating
+    # walk never revisits a router, hence takes < R hops) in O(log R)
+    # passes instead of one pass per hop.  ``hops`` accumulates exact
+    # walk lengths because the absorbed destination contributes zero.
+    cur = np.where(off_diag, nbr[rr, np.where(off_diag, route, 0)],
+                   rr).astype(np.int32)
+    hops = off_diag.astype(np.int32)
+    for _ in range(int(np.ceil(np.log2(max(2, R)))) + 1):
+        if np.array_equal(cur, dd):
+            break
+        hops = hops + np.take_along_axis(hops, cur, axis=0)
+        cur = np.take_along_axis(cur, cur, axis=0)
+    hops = hops.astype(np.int64)
+    if np.any(cur != dd):
+        r, d = map(int, np.argwhere(cur != dd)[0])
+        return fail("route_termination", "routing does not terminate",
+                    (r, d))
+    results.append(("route_termination", None, ()))
+    return results, hops
 
 
 def validate_tables(nbr: np.ndarray, opp: np.ndarray,

@@ -301,7 +301,9 @@ def test_report_is_machine_readable():
 def test_cli_matrix_and_single_spec(capsys):
     assert anz.main(["--all-presets"]) == 0
     out = capsys.readouterr().out
-    assert "wedge" in out and "all 12 matrix expectations hold" in out
+    n_rows = len(anz._preset_matrix())
+    assert "wedge" in out
+    assert f"all {n_rows} matrix expectations hold" in out
     assert anz.main(["--preset", "wide_only", "--topology", "torus"]) == 1
     assert "cdg_acyclic" in capsys.readouterr().out
     assert anz.main(["--preset", "narrow_wide", "--topology", "torus",

@@ -1,0 +1,388 @@
+"""Fault-injection & graceful-degradation tests.
+
+Covers the full robustness surface: zero-fault bit-identity (a spec
+with an empty/dynamic-only FaultModel must not perturb healthy
+behavior), static dead-link/node cut-out reroute (drains with bounded
+latency inflation where the unrerouted cut wedges), NI
+timeout/retry/backoff and AXI SLVERR semantics, backend equivalence
+under flapping links, the three-way ``diagnose()`` triage, and the
+property that every fault-regenerated route table re-passes the
+structural lint and the CDG deadlock proof.
+"""
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro.noc import (FaultModel, Mesh, NocSpec, Torus,
+                       UnroutableCutError, Workload, cut_tables,
+                       simulate, simulate_batch)
+from repro.noc.routing import RoutingPolicy
+from repro.noc.topology import validate_tables
+
+
+def _wl(seed=7, n_narrow=12, n_wide=5):
+    return Workload.make("uniform_random",
+                         rates={"narrow": 0.3, "wide": 0.8},
+                         counts={"narrow": n_narrow, "wide": n_wide},
+                         seed=seed)
+
+
+def _stats_tuple(r):
+    out = []
+    for name, st_ in sorted(r.classes.items()):
+        out.append((name, int(st_.done.sum()),
+                    float(st_.avg_lat.sum()), int(st_.max_lat.max()),
+                    int(st_.beats_rx.sum()), int(st_.w_done.sum()),
+                    int(st_.w_beats_rx.sum())))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------- #
+# zero-fault bit-identity
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
+def test_empty_fault_model_is_bit_identical(backend):
+    """FaultModel() with no faults at all: same flits, same stats as
+    the faults=None spec on every backend — the fault machinery must
+    be invisible when inactive."""
+    wl = _wl()
+    base = simulate(NocSpec.narrow_wide(4, 4, cycles=4000), wl,
+                    backend=backend)
+    faulted = simulate(
+        NocSpec.narrow_wide(4, 4, cycles=4000, faults=FaultModel()), wl,
+        backend=backend)
+    assert _stats_tuple(base) == _stats_tuple(faulted)
+    assert bool(base.drained) and bool(faulted.drained)
+    assert base.faults is None and faulted.faults is not None
+    fs = faulted.faults
+    assert int(fs.fault_cycles) == 0 and int(fs.faulted_link_cycles) == 0
+    for m in (fs.retries, fs.timeouts, fs.slverr):
+        assert all(int(np.sum(v)) == 0 for v in m.values())
+
+
+def test_dynamic_only_fault_model_keeps_route_tables():
+    """Dynamic events never re-route: the compiled tables are the base
+    policy's (masked links stall in place instead)."""
+    topo, pol = Torus(4, 4), RoutingPolicy.xy(2)
+    fm = FaultModel(link_events=((1, 2, 100, 200),))
+    rt = cut_tables(topo, pol, fm)
+    base = pol.compile(topo)
+    assert np.array_equal(rt.route, base.route)
+
+
+# --------------------------------------------------------------------- #
+# the acceptance story: kill a torus X-link mid-burst
+# --------------------------------------------------------------------- #
+def _torus_spec(faults=None, cycles=8000):
+    return NocSpec.narrow_wide(4, 4, topology=Torus(4, 4), cycles=cycles,
+                               routing=RoutingPolicy.xy(3), faults=faults)
+
+
+def test_dead_link_reroutes_drains_with_bounded_inflation():
+    wl = _wl()
+    healthy = simulate(_torus_spec(), wl)
+    cut = simulate(_torus_spec(FaultModel(dead_links=((1, 2),))), wl)
+    assert bool(healthy.drained) and bool(cut.drained)
+    # graceful: worst-case latency stays under 2x the healthy fabric
+    h = max(int(s.max_lat.max()) for s in healthy.classes.values())
+    c = max(int(s.max_lat.max()) for s in cut.classes.values())
+    assert c < 2 * h, (c, h)
+    fs = cut.faults
+    assert int(fs.fault_cycles) > 0
+    assert sum(int(v) for v in fs.delivered_despite_fault.values()) > 0
+    assert sum(float(v) for v in fs.goodput_under_fault.values()) > 0
+    # nothing left behind, no errors surfaced
+    assert all(int(v) == 0 for v in fs.undone.values())
+    assert all(int(v) == 0 for v in fs.slverr.values())
+
+
+def test_same_cut_without_reroute_wedges_and_diagnose_names_link():
+    wl = _wl()
+    r = simulate(_torus_spec(
+        FaultModel(dead_links=((1, 2),), reroute=False)), wl)
+    assert not bool(r.drained)
+    msg = r.diagnose()
+    assert "fault stall: link (1, 2) dead since cycle 0" in msg
+    assert "(reroute disabled)" in msg
+    assert any(int(v) > 0 for v in r.faults.undone.values())
+    # goodput collapses relative to the rerouted fabric
+    rr = simulate(_torus_spec(FaultModel(dead_links=((1, 2),))), wl)
+    assert (sum(float(v) for v in rr.faults.goodput_under_fault.values())
+            > sum(float(v) for v in r.faults.goodput_under_fault.values()))
+
+
+def _avoid_dead_node(spec, wl, dead):
+    """Per-class schedules with the dead node silenced as a source and
+    removed as a destination (dests also steered off self-traffic)."""
+    R = spec.n_routers
+    src = np.arange(R)[:, None]
+    out = {}
+    for name, entry in wl.schedules(spec).items():
+        t = np.array(entry[0], np.int32).reshape(R, -1)
+        d = np.array(entry[1], np.int32).reshape(R, -1)
+        w = (np.array(entry[2], np.int32).reshape(R, -1)
+             if len(entry) > 2 else np.zeros_like(t))
+        while ((d == dead) | (d == src)).any():
+            d = np.where((d == dead) | (d == src), (d + 1) % R, d)
+        t[dead, :] = 1 << 30
+        out[name] = (t, d, w)
+    return out
+
+
+def test_dead_node_reroute_drains_around_router():
+    """Kill a whole router: surviving pairs still drain (traffic may
+    not source at or target the dead node)."""
+    from repro.noc import simulate_schedules
+    spec = _torus_spec(FaultModel(dead_nodes=(5,)))
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.3, "wide": 0.6},
+                       counts={"narrow": 8, "wide": 4}, seed=3)
+    r = simulate_schedules(spec, _avoid_dead_node(spec, wl, 5))
+    assert bool(r.drained)
+    assert all(int(v) == 0 for v in r.faults.undone.values())
+
+
+def test_traffic_at_dead_node_is_rejected():
+    spec = _torus_spec(FaultModel(dead_nodes=(5,)))
+    wl = _wl()
+    with pytest.raises(ValueError, match="dead node"):
+        simulate(spec, wl)
+
+
+# --------------------------------------------------------------------- #
+# NI timeout / retry / backoff / SLVERR
+# --------------------------------------------------------------------- #
+def test_transient_outage_retries_then_drains():
+    """A link that dies and heals: watchdogs fire, retries reinject,
+    everything completes with zero SLVERR."""
+    fm = FaultModel(link_events=((0, 1, 50, 800),), timeout_cycles=150,
+                    max_retries=6, backoff_base=8)
+    wl = _wl(seed=11)
+    r = simulate(NocSpec.narrow_wide(
+        4, 4, cycles=12000, routing=RoutingPolicy.xy(2), faults=fm), wl)
+    assert bool(r.drained)
+    fs = r.faults
+    assert sum(int(v) for v in fs.timeouts.values()) > 0
+    assert sum(int(v) for v in fs.retries.values()) > 0
+    assert all(int(v) == 0 for v in fs.slverr.values())
+    assert all(int(v) == 0 for v in fs.undone.values())
+
+
+def test_exhausted_retries_raise_slverr_and_free_credits():
+    """Outage longer than the whole retry budget: transactions complete
+    with SLVERR (AXI error response), credits are freed, and the run
+    still drains once the link heals."""
+    fm = FaultModel(link_events=((0, 1, 50, 3000),), timeout_cycles=100,
+                    max_retries=1, backoff_base=4)
+    wl = _wl(seed=5)
+    r = simulate(NocSpec.narrow_wide(
+        4, 4, cycles=9000, routing=RoutingPolicy.xy(2), faults=fm), wl)
+    assert bool(r.drained)
+    fs = r.faults
+    assert sum(int(v) for v in fs.slverr.values()) > 0
+    assert all(int(v) == 0 for v in fs.undone.values())
+
+
+def test_runtime_overrides_require_fault_model():
+    spec = NocSpec.narrow_wide(4, 4)
+    with pytest.raises(ValueError, match="FaultModel"):
+        simulate(spec, _wl(), timeout_cycles=100)
+
+
+def test_per_class_timeout_length_validated():
+    with pytest.raises(ValueError, match="timeout_cycles"):
+        NocSpec.narrow_wide(4, 4, faults=FaultModel(
+            timeout_cycles=(100, 200, 300)))
+
+
+# --------------------------------------------------------------------- #
+# backend equivalence under dynamic faults
+# --------------------------------------------------------------------- #
+def test_flapping_link_backends_flit_for_flit():
+    fm = FaultModel(link_events=((1, 2, 100, 260), (5, 6, 300, 420),
+                                 (1, 2, 700, 840)),
+                    timeout_cycles=2000, max_retries=2)
+    spec = NocSpec.narrow_wide(4, 4, cycles=6000,
+                               routing=RoutingPolicy.xy(2), faults=fm)
+    wl = _wl(seed=13)
+    runs = {b: simulate(spec, wl, backend=b)
+            for b in ("jnp", "pallas", "pallas_fused")}
+    ref = runs["jnp"]
+    for b, r in runs.items():
+        assert _stats_tuple(r) == _stats_tuple(ref), b
+        assert bool(r.drained) == bool(ref.drained), b
+        assert int(r.faults.fault_cycles) == int(ref.faults.fault_cycles)
+        assert (int(r.faults.faulted_link_cycles)
+                == int(ref.faults.faulted_link_cycles))
+        for name in ref.classes:
+            assert (int(np.sum(r.faults.retries[name]))
+                    == int(np.sum(ref.faults.retries[name]))), (b, name)
+    assert int(ref.faults.fault_cycles) > 0
+
+
+def test_bernoulli_fault_model_is_deterministic_per_seed():
+    fm1 = FaultModel.bernoulli(n_events=3, seed=42, mean_downtime=80.0)
+    fm2 = FaultModel.bernoulli(n_events=3, seed=42, mean_downtime=80.0)
+    spec = NocSpec.narrow_wide(4, 4, cycles=6000,
+                               routing=RoutingPolicy.xy(2), faults=fm1)
+    spec2 = NocSpec.narrow_wide(4, 4, cycles=6000,
+                                routing=RoutingPolicy.xy(2), faults=fm2)
+    wl = _wl(seed=2)
+    a, b = simulate(spec, wl), simulate(spec2, wl)
+    assert _stats_tuple(a) == _stats_tuple(b)
+
+
+def test_batch_faulted_matches_single_point():
+    fm = FaultModel(link_events=((1, 2, 100, 300),), timeout_cycles=500)
+    spec = NocSpec.narrow_wide(4, 4, cycles=6000,
+                               routing=RoutingPolicy.xy(2), faults=fm)
+    wl = _wl(seed=9)
+    single = simulate(spec, wl)
+    batch = simulate_batch(spec, [wl, wl])
+    p0 = batch.point(0)
+    assert _stats_tuple(p0) == _stats_tuple(single)
+    assert (int(np.sum(p0.faults.retries["narrow"]))
+            == int(np.sum(single.faults.retries["narrow"])))
+
+
+# --------------------------------------------------------------------- #
+# diagnose(): fault stall vs true deadlock vs congestion
+# --------------------------------------------------------------------- #
+def test_diagnose_distinguishes_three_causes():
+    wl = _wl()
+    # 1) persistent fault, reroute off -> names the dead link
+    stall = simulate(_torus_spec(
+        FaultModel(dead_links=((1, 2),), reroute=False)), wl)
+    assert stall.diagnose().startswith("fault stall: link (1, 2)")
+
+    # 2) analyzer-refutable config -> static analysis verdict
+    wedge = NocSpec.wide_only(4, 4, topology=Torus(4, 4), burstlen=32,
+                              max_wide_outstanding=16, cycles=400)
+    wedge_wl = Workload.make("fig5", rates={"narrow": 0.2, "wide": 1.0},
+                             counts={"narrow": 4, "wide": 64},
+                             src=0, dst=15, bidir=True)
+    r = simulate(wedge, wedge_wl)
+    assert r.diagnose().startswith("static analysis:")
+    assert "cdg_acyclic" in r.diagnose()
+
+    # 3) healthy spec, short horizon -> congestion, not deadlock
+    short = simulate(NocSpec.narrow_wide(4, 4, cycles=80), wl)
+    assert not bool(short.drained)
+    assert short.diagnose().startswith("analyzer passed")
+    assert "congestion" in short.diagnose()
+
+
+def test_diagnose_names_dead_router():
+    from repro.noc import simulate_schedules
+    spec = _torus_spec(FaultModel(dead_nodes=(5,), reroute=False),
+                       cycles=2000)
+    r = simulate_schedules(spec, _avoid_dead_node(spec, _wl(seed=3), 5))
+    if not bool(r.drained):
+        assert r.diagnose().startswith("fault stall: router 5")
+
+
+# --------------------------------------------------------------------- #
+# regenerated tables re-pass the proofs (incl. property test)
+# --------------------------------------------------------------------- #
+def test_unroutable_cut_raises_with_coords():
+    with pytest.raises(UnroutableCutError) as ei:
+        cut_tables(Mesh(2, 2), RoutingPolicy.xy(2),
+                   FaultModel(dead_links=((0, 1), (0, 2))))
+    assert ei.value.coords == (1, 0)
+
+
+def test_analyze_reports_unroutable_cut():
+    from repro.noc.analyze import analyze_routing
+    checks = analyze_routing(
+        Mesh(2, 2), RoutingPolicy.xy(2),
+        FaultModel(dead_links=((0, 1), (0, 2))))
+    assert len(checks) == 1
+    c = checks[0]
+    assert c.name == "fault_reroute" and c.verdict == "FAIL"
+    assert c.coords == (1, 0) and "disconnects" in c.detail
+
+
+def test_cut_tables_pass_full_lint_and_cdg():
+    from repro.noc.analyze import analyze_routing
+    for topo, pol in ((Mesh(4, 4), RoutingPolicy.xy(2)),
+                      (Torus(4, 4), RoutingPolicy.xy(3))):
+        checks = analyze_routing(topo, pol,
+                                 FaultModel(dead_links=((1, 2),),
+                                            dead_nodes=(9,)))
+        bad = [c for c in checks if c.verdict == "FAIL"]
+        assert not bad, bad
+        assert any(c.name == "fault_reroute" for c in checks)
+        assert any(c.name == "cdg_acyclic" for c in checks)
+
+
+def test_reroute_needs_spare_vc():
+    with pytest.raises(ValueError, match="n_vcs >= 2"):
+        NocSpec.narrow_wide(4, 4, faults=FaultModel(dead_links=((5, 6),)))
+
+
+@pytest.mark.parametrize("torus", [False, True])
+def test_every_single_link_cut_reproves_on_3x3(torus):
+    """Exhaustive (no hypothesis needed): every possible single-link
+    cut of a 3x3 mesh/torus regenerates tables that pass the full
+    structural lint and the CDG deadlock proof."""
+    from repro.noc.analyze import analyze_routing
+    topo = Torus(3, 3) if torus else Mesh(3, 3)
+    pol = RoutingPolicy.xy(3 if torus else 2)
+    nbr, _, _ = topo.tables()
+    R, P = nbr.shape
+    links = sorted({(min(r, int(nbr[r, p])), max(r, int(nbr[r, p])))
+                    for r in range(R) for p in range(P - 1)
+                    if nbr[r, p] >= 0})
+    for lk in links:
+        checks = analyze_routing(topo, pol,
+                                 FaultModel(dead_links=(lk,)))
+        bad = [c for c in checks if c.verdict == "FAIL"]
+        assert not bad, (lk, bad)
+
+
+@settings(max_examples=12, deadline=None)
+@given(nx=st.integers(2, 4), ny=st.integers(2, 4), torus=st.booleans(),
+       kill_node=st.booleans(), pick=st.integers(0, 10 ** 6))
+def test_random_single_cut_tables_reprove_deadlock_free(
+        nx, ny, torus, kill_node, pick):
+    """Any single dead link or dead router on any small mesh/torus:
+    either the cut disconnects the fabric (UnroutableCutError with
+    coordinates) or the regenerated tables pass every structural check
+    AND the CDG deadlock proof, and a short simulation drains."""
+    from repro.noc.analyze import analyze_routing
+    topo = Torus(nx, ny) if torus else Mesh(nx, ny)
+    pol = RoutingPolicy.xy(3 if torus else 2)
+    nbr, _, _ = topo.tables()
+    R, P = nbr.shape
+    if kill_node:
+        fm = FaultModel(dead_nodes=(pick % R,))
+    else:
+        links = sorted({(min(r, int(nbr[r, p])), max(r, int(nbr[r, p])))
+                        for r in range(R) for p in range(P - 1)
+                        if nbr[r, p] >= 0})
+        fm = FaultModel(dead_links=(links[pick % len(links)],))
+    try:
+        rt = cut_tables(topo, pol, fm)
+    except UnroutableCutError as e:
+        assert e.coords
+        checks = analyze_routing(topo, pol, fm)
+        assert checks[0].name == "fault_reroute"
+        assert checks[0].verdict == "FAIL"
+        return
+    validate_tables(rt.nbr, rt.opp, rt.route)       # raises on failure
+    checks = analyze_routing(topo, pol, fm)
+    assert not [c for c in checks if c.verdict == "FAIL"]
+
+    from repro.noc import simulate_schedules
+    spec = NocSpec.narrow_wide(nx, ny, topology=topo, routing=pol,
+                               cycles=6000, faults=fm)
+    wl = Workload.make("uniform_random",
+                       rates={"narrow": 0.2, "wide": 0.5},
+                       counts={"narrow": 4, "wide": 2}, seed=1)
+    if fm.dead_nodes:
+        sched = _avoid_dead_node(spec, wl, fm.dead_nodes[0])
+    else:
+        sched = wl.schedules(spec)
+    r = simulate_schedules(spec, sched)
+    assert bool(r.drained), r.diagnose()
