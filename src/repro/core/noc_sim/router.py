@@ -142,18 +142,25 @@ def feeder_tables(nbr: np.ndarray,
     gather-form used by the hot loop exactly equivalent.
     """
     R, P = nbr.shape
+    # np.nonzero walks C order, so (t_idx, o_idx) lists the wired links
+    # exactly as the old  for t: for o:  double loop visited them
+    t_idx, o_idx = np.nonzero(nbr[:, :P - 1] >= 0)
+    r, p = nbr[t_idx, o_idx], opp[t_idx, o_idx]
+    flat = r * P + p
+    order = np.argsort(flat, kind="stable")     # ties keep t-major order
+    sf = flat[order]
+    dup = sf[1:] == sf[:-1]
+    if dup.any():
+        i_new = order[1:][dup].min()            # first offending link
+        i_old = order[np.searchsorted(sf, flat[i_new])]
+        raise ValueError(
+            f"input port {int(r[i_new])}:{int(p[i_new])} is fed by two "
+            f"links ({int(t_idx[i_old])}:{int(o_idx[i_old])} and "
+            f"{int(t_idx[i_new])}:{int(o_idx[i_new])})")
     src_r = np.full((R, P), -1, np.int64)
     src_o = np.full((R, P), -1, np.int64)
-    for t in range(R):
-        for o in range(P - 1):
-            if nbr[t, o] < 0:
-                continue
-            r, p = int(nbr[t, o]), int(opp[t, o])
-            if src_r[r, p] >= 0:
-                raise ValueError(
-                    f"input port {r}:{p} is fed by two links "
-                    f"({src_r[r, p]}:{src_o[r, p]} and {t}:{o})")
-            src_r[r, p], src_o[r, p] = t, o
+    src_r[r, p] = t_idx
+    src_o[r, p] = o_idx
     for a in (src_r, src_o):
         a.setflags(write=False)
     return src_r, src_o

@@ -72,6 +72,30 @@ def _pmax_ng(x, axes):
     return lax.pmax(lax.stop_gradient(x), axes)
 
 
+def halo_permute(x: jax.Array, axis: str, n: int, *, shift: int = 1,
+                 wrap: bool = False) -> jax.Array:
+    """Neighbor exchange along one mesh axis: shard ``s`` receives the
+    ``x`` held by shard ``s - shift`` (data moves ``+shift`` along the
+    axis).  ``wrap`` closes the ring (torus halo); without it the edge
+    shards receive zeros — ``lax.ppermute`` fills missing sources, so a
+    mesh boundary needs no special-casing.  ``n == 1`` degenerates to
+    the identity (wrap: the shard is its own neighbor) or zeros
+    (no-wrap: there is no neighbor), with no collective issued.
+
+    This is the halo step of the row-sharded NoC fabric
+    (:mod:`repro.noc.farm`): per simulated cycle, each shard ships its
+    boundary routers' occupancy and output registers to the adjacent
+    shard instead of materializing the whole fabric anywhere.
+    """
+    if n == 1:
+        return x if wrap else jnp.zeros_like(x)
+    if wrap:
+        perm = [(s, (s + shift) % n) for s in range(n)]
+    else:
+        perm = [(s, s + shift) for s in range(n) if 0 <= s + shift < n]
+    return lax.ppermute(x, axis, perm)
+
+
 class Backend:
     """Collective backend bound to one RunConfig (trace-time object).
 

@@ -43,12 +43,20 @@ outputs:
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NO = 99
+
+# conservative per-core VMEM budget for the no-grid fused kernel: every
+# operand and output lives in VMEM at once, so a real Mosaic lowering of
+# an oversized fabric dies with an opaque allocator error deep inside
+# the compiler.  16 MiB matches the usable fraction of a v4/v5 core's
+# VMEM after double-buffering headroom.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
 
 
 def _arbitrate(out_port, beat, ptr, free, lock, *, n_rows: int, n_ports: int):
@@ -252,7 +260,9 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
                              inject_valid, inject_flit, depth_rows,
                              nbr_rows, opp_rows, route_rows, src_rows,
                              *, n_vcs: int = 1, link_mask_rows=None,
-                             interpret: bool | None = None):
+                             interpret: bool | None = None,
+                             vmem_budget_bytes: int | None =
+                             VMEM_BUDGET_BYTES):
     """One full fabric cycle for ``N`` stacked router rows (channels
     folded into rows by the caller; see ``repro.noc.backends``).
 
@@ -269,6 +279,13 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
     link is currently dead — they never drain; ``None`` (the default)
     builds the original mask-free kernel, keeping the healthy program
     untouched.
+
+    When compiling for a real TPU (``interpret=False``) the kernel is
+    no-grid — every operand and output is resident in VMEM at once — so
+    the total footprint is checked against ``vmem_budget_bytes`` up
+    front and an over-budget fabric raises a ``ValueError`` carrying
+    the byte estimate and resharding hints instead of an opaque Mosaic
+    allocator failure.  ``vmem_budget_bytes=None`` disables the check.
 
     Returns ``(fifo, count, rr_ptr, oreg, oreg_v (int32), lock_in,
     inj_ok (N,) bool, deliver_valid (N,) bool, deliver_flit (N, F),
@@ -310,6 +327,21 @@ def fused_fabric_step_pallas(fifo, count, rr_ptr, oreg, oreg_v, lock_in,
     operands += [
         nbr_rows.astype(jnp.int32), opp_rows.astype(jnp.int32),
         route_rows.astype(jnp.int32), src_rows.astype(jnp.int32)]
+    if not interpret and vmem_budget_bytes is not None:
+        est = 4 * (sum(math.prod(o.shape) for o in operands)
+                   + sum(math.prod(s.shape) for s in out_shapes))
+        if est > vmem_budget_bytes:
+            raise ValueError(
+                f"fused fabric kernel needs ~{est} bytes of VMEM for "
+                f"{N} router rows (P={P}, D={D}, budget "
+                f"{vmem_budget_bytes}); the no-grid kernel holds the "
+                f"whole fabric resident.  Shrink the resident slab — "
+                f"row-shard the mesh across devices "
+                f"(simulate(..., shard=RowShard(n))), lower the padded "
+                f"FIFO depth (depth sweeps pad every spec to the max "
+                f"depth), or split physical channels into separate "
+                f"sims — or raise vmem_budget_bytes if your core "
+                f"really has the headroom.")
     (nfifo, ncount, nptr, noreg, noregv, nlock, injok, dv, dflit,
      lm) = pl.pallas_call(kernel, out_shape=out_shapes,
                           interpret=interpret)(*operands)

@@ -42,6 +42,8 @@ from .backends import (get_backend, list_backends,  # noqa: F401
 from .engine import (FlowPlan, build_channel_plan,  # noqa: F401
                      build_flow_plan, compiled_sim, sim_cache_clear,
                      sim_cache_stats)
+from .farm import (RowShard, farm_batch, merge_spec,  # noqa: F401
+                   partition_spec)
 from .faults import (FaultModel, UnroutableCutError,  # noqa: F401
                      cut_tables, dynamic_events)
 from .result import (ChannelStats, ClassStats,  # noqa: F401

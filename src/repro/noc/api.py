@@ -243,7 +243,8 @@ def simulate_schedules(spec: NocSpec,
                        timeout_cycles=None, max_retries=None,
                        backoff_base=None,
                        backend: str = "jnp",
-                       verify: str = "fast") -> SimResult:
+                       verify: str = "fast",
+                       shard=None) -> SimResult:
     """Run one experiment from raw per-class ``(times, dests[, writes])``
     schedules (the layer custom schedule sources go through).
 
@@ -260,7 +261,13 @@ def simulate_schedules(spec: NocSpec,
     On a spec with a :class:`~repro.noc.faults.FaultModel`,
     ``timeout_cycles``/``max_retries``/``backoff_base`` shadow the
     model's declared NI robustness knobs (traced — no recompile) and
-    the result carries :class:`~repro.noc.result.FaultStats`."""
+    the result carries :class:`~repro.noc.result.FaultStats`.
+
+    ``shard=RowShard(n)`` (:mod:`repro.noc.farm`) spatially shards the
+    fabric's router rows across ``n`` local devices with a per-cycle
+    halo exchange of boundary-link state — flit-for-flit identical to
+    the single-device engine; requires a plain Mesh/Torus, the
+    ``jnp`` backend and a fault-free spec."""
     _verify(spec, verify)
     times, dests, writes = stack_schedules(spec, schedules)
     _check_dead_traffic(spec, times, dests)
@@ -269,8 +276,13 @@ def simulate_schedules(spec: NocSpec,
     jt = jitter_table(spec, service_jitter, seed=jitter_seed,
                       service_lat=service_lat)
     fops = _fault_ops(spec, timeout_cycles, max_retries, backoff_base)
-    raw = compiled_sim(spec, times.shape[-1], backend)(
-        times, dests, writes, sl, mo, bb, jt, _depths(spec), *fops)
+    if shard is not None:
+        from .farm import compiled_rowshard_sim
+        fn = compiled_rowshard_sim(spec, times.shape[-1], shard,
+                                   backend=backend)
+    else:
+        fn = compiled_sim(spec, times.shape[-1], backend)
+    raw = fn(times, dests, writes, sl, mo, bb, jt, _depths(spec), *fops)
     return SimResult.from_raw(spec, raw)
 
 
@@ -280,7 +292,8 @@ def simulate(spec: NocSpec, workload: Workload, *,
              burst_beats: Sequence[int] | None = None,
              service_jitter=None, jitter_seed: int = 0,
              timeout_cycles=None, max_retries=None, backoff_base=None,
-             backend: str = "jnp", verify: str = "fast") -> SimResult:
+             backend: str = "jnp", verify: str = "fast",
+             shard=None) -> SimResult:
     """Run one experiment; scalar keyword overrides shadow the spec's
     declared values without recompiling (they are traced operands).
     ``service_lat``/``service_jitter`` take one int or a per-class
@@ -292,7 +305,9 @@ def simulate(spec: NocSpec, workload: Workload, *,
     deadlock-prone specs before stepping (see
     :func:`simulate_schedules` / :mod:`repro.noc.analyze`).  The NI
     robustness knobs (``timeout_cycles``/``max_retries``/
-    ``backoff_base``) require a spec with a FaultModel."""
+    ``backoff_base``) require a spec with a FaultModel.
+    ``shard=RowShard(n)`` row-shards one big fabric across ``n`` local
+    devices (:mod:`repro.noc.farm` tier b), flit-for-flit identical."""
     return simulate_schedules(spec, workload.schedules(spec),
                               service_lat=service_lat,
                               max_outstanding=max_outstanding,
@@ -302,7 +317,7 @@ def simulate(spec: NocSpec, workload: Workload, *,
                               timeout_cycles=timeout_cycles,
                               max_retries=max_retries,
                               backoff_base=backoff_base, backend=backend,
-                              verify=verify)
+                              verify=verify, shard=shard)
 
 
 def simulate_batch(spec: NocSpec, workloads: Sequence[Workload], *,
@@ -437,7 +452,8 @@ def _batch_depth_sweep(specs: Sequence[NocSpec], wls: Sequence[Workload],
 
 def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
           backend: str = "jnp", pad_depths: bool = True,
-          verify: str = "fast") -> list[SimResult]:
+          verify: str = "fast",
+          devices: int | None = None) -> list[SimResult]:
     """Simulate arbitrary (spec, workload) points, vmapping every group
     of points that shares a static spec. Results come back in input
     order, one unbatched SimResult per point.
@@ -447,6 +463,13 @@ def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
     at the max depth with per-point depths a vmapped traced operand —
     a whole depth sweep costs a single ``compiled_sim`` compilation
     (count it with :func:`repro.noc.sim_cache_stats`).
+
+    ``devices=N`` (:mod:`repro.noc.farm` tier a) shards each vmapped
+    group across N local devices: the group batch splits on a
+    ``specs`` shard_map axis (uneven groups padded with the last point
+    and sliced back), per-point results bit-identical to the
+    single-device path.  ``devices=None`` keeps the classic one-device
+    vmap; size-1 groups always run unsharded.
 
     ``verify`` runs the :mod:`repro.noc.analyze` gate once per distinct
     spec before any simulation (the deadlock proof is lru-cached per
@@ -463,6 +486,13 @@ def sweep(points: Sequence[tuple[NocSpec, Workload]], *,
         wls = [points[i][1] for i in idxs]
         if len(idxs) == 1:
             out[idxs[0]] = simulate(specs[0], wls[0], backend=backend)
+        elif devices is not None:
+            from .farm import farm_batch
+            batched = farm_batch(specs, wls, devices, backend)
+            for j, i in enumerate(idxs):
+                # re-attach each point's own spec (the farm compiles
+                # under the group's depth-padded base spec)
+                out[i] = replace(batched.point(j), spec=specs[j])
         elif all(s == specs[0] for s in specs):
             batched = simulate_batch(specs[0], wls, backend=backend)
             for j, i in enumerate(idxs):

@@ -113,6 +113,22 @@ N_QFIELDS = 6
 JITTER_TABLE_LEN = 251
 
 
+class ShardInfo(NamedTuple):
+    """Row-sharding geometry for a spatially-partitioned fabric step
+    (:mod:`repro.noc.farm` tier b).  ``make_step(..., shard=)`` builds
+    the NI update for ``local_R`` contiguous router rows living on one
+    device of a ``shard_map`` mesh axis ``axis`` with ``n`` shards;
+    per-cycle scalar reductions (stall streak, VC occupancy) become
+    ``lax.psum`` over that axis so every shard observes the global
+    value, keeping sharded runs flit-for-flit identical to the
+    single-device engine.  ``None`` (the default everywhere) leaves the
+    healthy single-device program byte-identical."""
+    axis: str
+    n: int
+    local_R: int
+    global_R: int
+
+
 def req_kind(cls_idx: int) -> int:
     """Legacy two-flow kind tag (pinned baseline engine only)."""
     return 2 * cls_idx
@@ -423,12 +439,24 @@ def init_ni(R: int, plan: FlowPlan, cap: int) -> NIState:
         w_first_t=big, w_last_t=zc)
 
 
-def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
+def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step,
+              shard: ShardInfo | None = None):
     """Build the per-cycle transition. Dynamic operands arrive via the
     closure-free ``dyn`` dict (schedules + write mask + scalar knobs +
     jitter table + depths); ``net_step`` is the backend's stacked
-    one-cycle fabric update (:class:`repro.noc.backends.Network`)."""
-    R = spec.n_routers
+    one-cycle fabric update (:class:`repro.noc.backends.Network`).
+
+    ``shard`` (row-sharded farm mode, :mod:`repro.noc.farm`) narrows the
+    NI update to that shard's ``local_R`` contiguous router rows: local
+    row indices keep driving the scatters into the shard's own state,
+    while the *global* row id (``local + axis_index * local_R``) is what
+    enters every flit's src field and the multi-plane hash — those ids
+    travel the fabric and come back as response destinations, so they
+    must live in the global router id space.  Per-cycle liveness /
+    occupancy scalars are psummed over the shard axis.  ``shard=None``
+    builds the exact single-device program."""
+    R = spec.n_routers if shard is None else shard.local_R
+    R_virt = spec.n_routers        # global id space (plane folding, src)
     cap = spec.resp_q_cap
     w_cap = plan.w_cap
     pa = _plan_arrays(spec, plan)
@@ -442,6 +470,11 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
     # fault machinery is built ONLY when the spec declares a FaultModel:
     # the healthy program below is literally the pre-fault code path
     faulted = spec.faults is not None
+    if faulted and shard is not None:
+        raise NotImplementedError(
+            "row-sharded simulation does not support FaultModel specs "
+            "yet (the event link-masks and retry jitter are keyed to "
+            "global rows); run faulted specs unsharded")
     if faulted:
         from .faults import dynamic_events
         _, _, _masks = dynamic_events(spec.topology, spec.routing,
@@ -459,6 +492,10 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         max_out, burst_beats = dyn["max_out"], dyn["burst_beats"]
         ni = state.ni
         now = state.cycle
+        # global router id of each local row: what flits carry as src
+        # (responses route back to it) and what the plane hash keys on
+        rows_g = rows if shard is None \
+            else rows + jax.lax.axis_index(shard.axis) * R
 
         if faulted:
             # ---- link mask from the event schedule ----------------------
@@ -696,9 +733,9 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
                 # plane*R + dest.  Every beat of a burst (constant
                 # dest/txn at its ring head) hashes to the same plane,
                 # so wormhole trains never straddle paths.
-                plane = (rows * 7 + dest * 13 + txn * 31) % n_planes
-                dest = plane * R + dest
-            flit = jnp.stack([dest, rows, time, kind, txn, beat], axis=1)
+                plane = (rows_g * 7 + dest * 13 + txn * 31) % n_planes
+                dest = plane * R_virt + dest
+            flit = jnp.stack([dest, rows_g, time, kind, txn, beat], axis=1)
             flit_cols.append(jnp.where(valid[:, None], flit, 0))
 
         # ---- ONE stacked fabric step for every channel ------------------
@@ -715,6 +752,8 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         # q = link * n_vcs + vc under the routing policy's table fold)
         occ = jnp.sum(net.count[:, :, :-1].reshape(
             net.count.shape[0], R, -1, n_vcs), axis=(1, 2))   # (n_ch, V)
+        if shard is not None:      # fabric-wide occupancy, every shard
+            occ = jax.lax.psum(occ, shard.axis)
         vc_occ_sum = state.vc_occ_sum + occ
         vc_occ_max = jnp.maximum(state.vc_occ_max, occ)
 
@@ -910,6 +949,11 @@ def make_step(spec: NocSpec, plan: FlowPlan, T: int, net_step):
         activity = (jnp.any(iv & ok_ch) | jnp.any(dv_ch)
                     | (jnp.sum(lm) > 0))
         pending = jnp.any((ni.out_r + ni.out_w) > 0)
+        if shard is not None:      # global liveness: stall streaks must
+            flags = jax.lax.psum(   # agree bit-for-bit across shards
+                jnp.stack([activity, pending]).astype(jnp.int32),
+                shard.axis)
+            activity, pending = flags[0] > 0, flags[1] > 0
         cur = jnp.where(pending & ~activity, state.cur_stall + 1, 0)
         new_moves = state.moves + lm.astype(jnp.int32)
         if faulted:
@@ -942,15 +986,49 @@ _cache_lock = threading.Lock()
 
 
 def sim_cache_stats() -> dict:
-    """Cache behavior of :func:`compiled_sim`: ``misses`` counts actual
-    simulator builds (one jit compilation each), ``hits`` reuses, and
-    ``evictions`` should stay 0 for any sane sweep — the cache is
-    partitioned per backend with :data:`SIM_CACHE_MAXSIZE` entries each,
-    so a 70-spec grid compiles each spec exactly once (tested)."""
+    """Cache behavior of :func:`compiled_sim` (and the farm wrappers in
+    :mod:`repro.noc.farm`, which live in their own partitions —
+    ``"farm[n]:backend"`` / ``"rowshard[n]:backend"`` — so a sharded
+    sweep at a fixed device count compiles once and every later sweep
+    at that count is a hit, never a silent per-device-count recompile):
+    ``misses`` counts actual simulator builds (one jit compilation
+    each), ``hits`` reuses, and ``evictions`` should stay 0 for any
+    sane sweep — each partition holds :data:`SIM_CACHE_MAXSIZE`
+    entries, so a 70-spec grid compiles each spec exactly once
+    (tested)."""
     with _cache_lock:
         return {**_stats,
                 "size": sum(len(c) for c in _caches.values()),
                 "partitions": {b: len(c) for b, c in _caches.items()}}
+
+
+def _cache_get(partition: str, key):
+    """Look up a compiled function in one stats-instrumented LRU
+    partition (``None`` = miss, already counted).  The partition string
+    is free-form — ``compiled_sim`` uses the backend name, the farm
+    wrappers embed their device count — so differently-sharded builds
+    of one spec never collide *or* evict each other."""
+    with _cache_lock:
+        part = _caches.setdefault(partition, OrderedDict())
+        if key in part:
+            part.move_to_end(key)
+            _stats["hits"] += 1
+            return part[key]
+        _stats["misses"] += 1
+        return None
+
+
+def _cache_put(partition: str, key, fn):
+    """Insert a freshly-built compiled function; evicts LRU entries
+    beyond :data:`SIM_CACHE_MAXSIZE` per partition.  Returns ``fn``."""
+    with _cache_lock:
+        part = _caches.setdefault(partition, OrderedDict())
+        part[key] = fn
+        part.move_to_end(key)
+        while len(part) > SIM_CACHE_MAXSIZE:
+            part.popitem(last=False)
+            _stats["evictions"] += 1
+    return fn
 
 
 def sim_cache_clear() -> None:
@@ -1014,22 +1092,10 @@ def compiled_sim(spec: NocSpec, T: int, backend: str = "jnp", *,
     """
     key_spec, d_max = _depth_normalized(spec, max_depth)
     key = (key_spec, T)
-    with _cache_lock:
-        part = _caches.setdefault(backend, OrderedDict())
-        if key in part:
-            part.move_to_end(key)
-            _stats["hits"] += 1
-            return part[key]
-        _stats["misses"] += 1
-    fn = _build_sim(key_spec, T, backend, d_max)
-    with _cache_lock:
-        part = _caches.setdefault(backend, OrderedDict())
-        part[key] = fn
-        part.move_to_end(key)
-        while len(part) > SIM_CACHE_MAXSIZE:
-            part.popitem(last=False)
-            _stats["evictions"] += 1
-    return fn
+    fn = _cache_get(backend, key)
+    if fn is not None:
+        return fn
+    return _cache_put(backend, key, _build_sim(key_spec, T, backend, d_max))
 
 
 def _build_sim(spec: NocSpec, T: int, backend: str, d_max: int):

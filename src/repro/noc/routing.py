@@ -219,8 +219,12 @@ def _dor_route(topo: Topology, order: str) -> np.ndarray:
     x, y = _coords(R, nx)
     dx_, dy_ = _coords(R, nx)
     if isinstance(topo, Torus):
-        ddx = _wrap_delta(x[:, None], dx_[None, :], nx)
-        ddy = _wrap_delta(y[:, None], dy_[None, :], ny)
+        # gather from the small per-coordinate wrap tables instead of
+        # running int64 modulo over the full (R, R) matrices
+        wx = _wrap_delta(np.arange(nx)[:, None], np.arange(nx)[None, :], nx)
+        wy = _wrap_delta(np.arange(ny)[:, None], np.arange(ny)[None, :], ny)
+        ddx = wx[x[:, None], dx_[None, :]]
+        ddy = wy[y[:, None], dy_[None, :]]
     else:
         ddx = dx_[None, :] - x[:, None]
         ddy = dy_[None, :] - y[:, None]
@@ -316,28 +320,26 @@ def _compile(policy: RoutingPolicy, topo: Topology) -> RouteTables:
     # per-plane VC of each hop, clamped into the declared VC budget
     # (only reachable for xy, where fewer VCs is allowed — documented
     # as forfeiting the torus deadlock-freedom guarantee)
-    vc_of_hop = np.stack([np.minimum(k * v_pp + b, V - 1)
-                          for k, b in enumerate(bits)])  # (K, R, R)
+    vc_of_hop = np.minimum(np.arange(K)[:, None, None] * v_pp
+                           + np.stack(bits), V - 1)      # (K, R, R)
     dest_ids = np.arange(R)
-    for k in range(K):                                   # no VC on delivery
-        vc_of_hop[k, dest_ids, dest_ids] = 0
+    vc_of_hop[:, dest_ids, dest_ids] = 0                 # no VC on delivery
 
     # virtual ports: non-local port p -> slots p*V + v, local port last
     Pv = (P - 1) * V + 1
     nbr_v = np.full((R, Pv), -1, np.int64)
     opp_v = np.full((R, Pv), Pv - 1, np.int64)
-    for p in range(P - 1):
-        for v in range(V):
-            q = p * V + v
-            nbr_v[:, q] = nbr[:, p]
-            opp_v[:, q] = np.where(nbr[:, p] >= 0, opp[:, p] * V + v, Pv - 1)
+    nbr_v[:, :Pv - 1] = np.repeat(nbr[:, :P - 1], V, axis=1)
+    vcs = np.tile(np.arange(V), P - 1)                   # v of slot p*V + v
+    opp_v[:, :Pv - 1] = np.where(
+        nbr_v[:, :Pv - 1] >= 0,
+        np.repeat(opp[:, :P - 1], V, axis=1) * V + vcs, Pv - 1)
 
-    route_v = np.full((R, K * R), Pv - 1, np.int64)
     off_diag = dest_ids[:, None] != dest_ids[None, :]    # (R, R)
-    for k in range(K):
-        virt = planes[k] * V + vc_of_hop[k]              # (R, R)
-        block = route_v[:, k * R:(k + 1) * R]
-        block[off_diag] = virt[off_diag]
+    virt = np.stack(planes) * V + vc_of_hop              # (K, R, R)
+    route_v = np.where(off_diag[None, :, :], virt, Pv - 1)
+    route_v = np.ascontiguousarray(
+        route_v.transpose(1, 0, 2).reshape(R, K * R))
 
     validate_tables(nbr_v, opp_v, route_v)
     vc_of_hop.setflags(write=False)

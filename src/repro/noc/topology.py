@@ -171,8 +171,16 @@ def _torus_tables(topo: Torus):
         nbr[:, d] = ty * nx + tx
         opp[:, d] = _OPP_DIR[d]
 
-    dxm = _wrap_delta(x[:, None], x[None, :], nx)    # (src, dest)
-    dym = _wrap_delta(y[:, None], y[None, :], ny)
+    # wrap deltas have only nx*nx / ny*ny distinct values: compute the
+    # small per-coordinate tables once and gather, instead of running
+    # int64 modulo over the full (R, R) matrices
+    # the deltas only feed sign/zero tests, so int16 is exact
+    wx = _wrap_delta(np.arange(nx)[:, None], np.arange(nx)[None, :],
+                     nx).astype(np.int16)
+    wy = _wrap_delta(np.arange(ny)[:, None], np.arange(ny)[None, :],
+                     ny).astype(np.int16)
+    dxm = wx[x[:, None], x[None, :]]                 # (src, dest)
+    dym = wy[y[:, None], y[None, :]]
     px = np.where(dxm > 0, 1, 3)                     # E / W
     py = np.where(dym > 0, 2, 0)                     # S / N
     route = np.where(dxm != 0, px,
@@ -249,26 +257,32 @@ def run_table_checks(nbr: np.ndarray, opp: np.ndarray,
         return fail("duplex_links", f"link {r}:{p} is not duplex", (r, p))
     results.append(("duplex_links", None, ()))
 
-    rr = np.arange(R)[:, None].repeat(n_dest, axis=1)    # (R, n_dest) row idx
-    dd = np.arange(n_dest)[None, :].repeat(R, axis=0) % R     # dest router
+    # broadcast views, never materialized: (R, n_dest) row / dest-router
+    # indices (n_dest can be n_planes*R for VC-expanded tables)
+    rr = np.broadcast_to(np.arange(R, dtype=np.int32)[:, None], (R, n_dest))
+    dd = np.broadcast_to(np.arange(n_dest, dtype=np.int32)[None, :] % R,
+                         (R, n_dest))
     off_diag = rr != dd
-    if np.any((route < 0) | (route > P - 1)):
-        r, d = map(int, np.argwhere((route < 0) | (route > P - 1))[0])
+    oob = (route < 0) | (route > P - 1)
+    if np.any(oob):
+        r, d = map(int, np.argwhere(oob)[0])
         return fail("route_structure",
                     f"route entry {r}:{d} is not a port index "
                     f"(got {int(route[r, d])}, have {P} ports)", (r, d))
-    if np.any(route[~off_diag] != P - 1):
-        bad = (route != P - 1) & ~off_diag
+    is_local = route == P - 1
+    bad = ~is_local & ~off_diag
+    if np.any(bad):
         r, d = map(int, np.argwhere(bad)[0])
         return fail("route_structure",
                     "route to self must use the local port", (r, d))
-    if np.any(route[off_diag] == P - 1):
-        bad = (route == P - 1) & off_diag
+    bad = is_local & off_diag
+    if np.any(bad):
         r, d = map(int, np.argwhere(bad)[0])
         return fail("route_structure",
                     "route reaches the local port before the "
                     "destination router", (r, d))
-    missing = off_diag & (nbr[rr, np.where(off_diag, route, 0)] < 0)
+    step0 = nbr[rr, np.where(off_diag, route, 0)]   # first hop per pair
+    missing = off_diag & (step0 < 0)
     if np.any(missing):
         r, d = map(int, np.argwhere(missing)[0])
         return fail("route_structure", "route uses a missing link", (r, d))
@@ -280,17 +294,21 @@ def run_table_checks(nbr: np.ndarray, opp: np.ndarray,
     # walk never revisits a router, hence takes < R hops) in O(log R)
     # passes instead of one pass per hop.  ``hops`` accumulates exact
     # walk lengths because the absorbed destination contributes zero.
-    cur = np.where(off_diag, nbr[rr, np.where(off_diag, route, 0)],
-                   rr).astype(np.int32)
-    hops = off_diag.astype(np.int32)
+    # the walk runs dest-major (transposed): column j's successor map
+    # only indexes within column j, so after the transpose every
+    # pointer-doubling gather stays inside one contiguous row instead
+    # of striding the whole matrix
+    curT = np.where(off_diag, step0, rr).astype(np.int32).T
+    curT = np.ascontiguousarray(curT)                 # (n_dest, R)
+    ddT, hopsT = dd.T, off_diag.T.astype(np.int32, order="C")
     for _ in range(int(np.ceil(np.log2(max(2, R)))) + 1):
-        if np.array_equal(cur, dd):
+        if np.array_equal(curT, ddT):
             break
-        hops = hops + np.take_along_axis(hops, cur, axis=0)
-        cur = np.take_along_axis(cur, cur, axis=0)
-    hops = hops.astype(np.int64)
-    if np.any(cur != dd):
-        r, d = map(int, np.argwhere(cur != dd)[0])
+        hopsT = hopsT + np.take_along_axis(hopsT, curT, axis=1)
+        curT = np.take_along_axis(curT, curT, axis=1)
+    hops = hopsT.T.astype(np.int64, order="C")
+    if np.any(curT != ddT):
+        r, d = map(int, np.argwhere((curT != ddT).T)[0])
         return fail("route_termination", "routing does not terminate",
                     (r, d))
     results.append(("route_termination", None, ()))
